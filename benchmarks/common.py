@@ -1,0 +1,151 @@
+"""Shared benchmark helpers: CSV output + real ping-pong transports.
+
+Two kinds of numbers appear throughout:
+  measured:  real executions on THIS host (shared-memory pool between
+             processes vs. localhost TCP sockets) — CPython-level costs,
+             honest but not CXL-calibrated;
+  modeled:   the Table-1-calibrated analytical model (perfmodel/) — the
+             paper-accurate reproduction path (the paper itself models
+             anything beyond its 4-node platform).
+Every CSV row is tagged with which one it is.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import socket
+import time
+from multiprocessing import Process, get_context
+from pathlib import Path
+
+import numpy as np
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    p = ART / f"{name}.csv"
+    with open(p, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return p
+
+
+# --------------------------------------------------------------------------
+# real SHM ping-pong (cMPI transport between two processes)
+# --------------------------------------------------------------------------
+
+def shm_pingpong(sizes: list[int], iters: int = 200,
+                 cell_size: int = 65536) -> dict[int, float]:
+    """Half-round-trip latency (s) per message size over the cMPI SPSC
+    queue matrix in real shared memory, two processes."""
+    from repro.core.runtime import run_processes
+
+    def prog(env):
+        out = {}
+        payloads = {s: bytes(s) for s in sizes}
+        for s in sizes:
+            env.comm.barrier()
+            t0 = time.perf_counter()
+            for i in range(iters):
+                if env.rank == 0:
+                    env.comm.send(1, payloads[s], tag=1)
+                    env.comm.recv(1, tag=2)
+                else:
+                    env.comm.recv(0, tag=1)
+                    env.comm.send(0, payloads[s], tag=2)
+            dt = time.perf_counter() - t0
+            out[s] = dt / iters / 2.0
+        return out
+
+    res = run_processes(2, prog, pool_bytes=max(64 << 20,
+                                                8 * cell_size * 64),
+                        cell_size=cell_size, n_cells=16)
+    return res[0]
+
+
+def shm_bandwidth(sizes: list[int], iters: int = 50,
+                  cell_size: int = 65536, window: int = 16
+                  ) -> dict[int, float]:
+    """Streaming bandwidth (B/s): rank 0 isends `window` messages, rank 1
+    drains, then one ack — OMB bw pattern over real shared memory."""
+    from repro.core.runtime import run_processes
+
+    def prog(env):
+        out = {}
+        for s in sizes:
+            payload = bytes(s)
+            env.comm.barrier()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                if env.rank == 0:
+                    reqs = [env.comm.isend(1, payload, tag=3)
+                            for _ in range(window)]
+                    env.comm.waitall(reqs, timeout=120)
+                    env.comm.recv(1, tag=4)
+                else:
+                    for _ in range(window):
+                        env.comm.recv(0, tag=3, timeout=120)
+                    env.comm.send(0, b"", tag=4)
+            dt = time.perf_counter() - t0
+            out[s] = iters * window * s / dt
+        return out
+
+    res = run_processes(2, prog, pool_bytes=max(128 << 20,
+                                                8 * cell_size * 64),
+                        cell_size=cell_size, n_cells=32, timeout=600)
+    return res[0]
+
+
+# --------------------------------------------------------------------------
+# real TCP ping-pong (localhost sockets — the network-stack baseline)
+# --------------------------------------------------------------------------
+
+def _tcp_server(port: int, sizes, iters, q):
+    srv = socket.socket()
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", port))
+    srv.listen(1)
+    q.put("ready")
+    conn, _ = srv.accept()
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    for s in sizes:
+        buf = bytearray(s)
+        for _ in range(iters):
+            view = memoryview(buf)
+            got = 0
+            while got < s:
+                got += conn.recv_into(view[got:])
+            conn.sendall(buf)
+    conn.close()
+    srv.close()
+
+
+def tcp_pingpong(sizes: list[int], iters: int = 200,
+                 port: int = 51733) -> dict[int, float]:
+    ctx = get_context("fork")
+    q = ctx.Queue()
+    p = ctx.Process(target=_tcp_server, args=(port, sizes, iters, q),
+                    daemon=True)
+    p.start()
+    q.get(timeout=10)
+    cli = socket.socket()
+    cli.connect(("127.0.0.1", port))
+    cli.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    out = {}
+    for s in sizes:
+        buf = bytes(s)
+        rbuf = bytearray(s)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            cli.sendall(buf)
+            view = memoryview(rbuf)
+            got = 0
+            while got < s:
+                got += cli.recv_into(view[got:])
+        out[s] = (time.perf_counter() - t0) / iters / 2.0
+    cli.close()
+    p.join(timeout=10)
+    return out

@@ -1,0 +1,55 @@
+"""Fig 10: strong scaling of CG and miniAMR on the event simulator
+(the paper's SimGrid study), CXL SHM vs TCP-CX6 vs TCP-Ethernet,
+8 processes per node."""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.perfmodel.apps import cg_program, miniamr_program
+from repro.perfmodel.interconnects import (CXL_SHM, ETHERNET_TCP,
+                                           MELLANOX_TCP)
+from repro.perfmodel.simulator import Engine
+
+FABRICS = {"cxl_shm": CXL_SHM, "tcp_cx6dx": MELLANOX_TCP,
+           "tcp_ethernet": ETHERNET_TCP}
+
+
+def run(quick: bool = False) -> list[list]:
+    rows = []
+    nodes_list = [2, 4, 8] if quick else [2, 4, 8, 16, 32]
+    apps = {
+        "cg": (cg_program, {"iters": 10 if quick else 20}),
+        "miniamr": (miniamr_program, {"steps": 10 if quick else 20}),
+    }
+    for app, (maker, kw) in apps.items():
+        for nodes in nodes_list:
+            n = nodes * 8
+            for fname, ic in FABRICS.items():
+                res = Engine(n, ic, procs_per_node=8).run(
+                    lambda r: maker(r, n, **kw))
+                rows.append([app, nodes, fname,
+                             f"{res['total_s']:.4f}",
+                             f"{res['comm_s']:.4f}",
+                             f"{res['comm_fraction'] * 100:.1f}"])
+    write_csv("fig10_scaling",
+              ["app", "nodes", "fabric", "total_s", "comm_s",
+               "comm_pct"], rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = run(quick)
+    by = {(r[0], r[1], r[2]): float(r[3]) for r in rows}
+    nodes = sorted({r[1] for r in rows})
+    for app in ("cg", "miniamr"):
+        for n in nodes:
+            c = by[(app, n, "cxl_shm")]
+            m = by[(app, n, "tcp_cx6dx")]
+            e = by[(app, n, "tcp_ethernet")]
+            print(f"{app:8s} {n:3d} nodes: cxl {c:.3f}s cx6 {m:.3f}s "
+                  f"eth {e:.3f}s | cxl speedup vs cx6 "
+                  f"{(m / c - 1) * 100:5.1f}% | eth"
+                  f"{'<' if e < m else '>'}cx6")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig 11: memset latency under uncacheable vs cached+clflush vs
+cached+clflushopt coherence.
+
+modeled   : the calibrated Fig-11 curves (64 B .. 128 KB).
+executable: the SAME protocol run on the incoherent-pool cache model —
+            event counts (lines flushed, fences, uncached ops) converted
+            to time by perfmodel.protocol_time. This ties the executable
+            coherence layer to the analytical model.
+"""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.core.coherence import CoherentView
+from repro.core.pool import IncoherentPool, LocalPool, RankCache
+from repro.perfmodel.interconnects import coherence_latency, protocol_time
+
+SIZES = [64, 256, 1024, 2048, 8192, 32768, 131072]
+
+
+def run(quick: bool = False) -> list[list]:
+    rows = []
+    for s in SIZES:
+        for mode in ("uncacheable", "clflush", "clflushopt"):
+            rows.append(["modeled", mode, s,
+                         f"{coherence_latency(s, mode) * 1e6:.1f}"])
+    # executable protocol: write `s` bytes through each mode's view
+    for s in SIZES:
+        for mode, mname in (("incoherent", "exec_clflushopt"),
+                            ("uncacheable", "exec_uncacheable")):
+            backing = LocalPool(2 * 131072 + 4096)
+            pool = IncoherentPool(backing, RankCache(backing)) \
+                if mode == "incoherent" else backing
+            view = CoherentView(pool, mode)
+            view.write_release(0, bytes(s))
+            t = protocol_time(view.stats,
+                              mode="clflushopt" if mode == "incoherent"
+                              else "uncacheable")
+            rows.append(["executable", mname, s, f"{t * 1e6:.1f}"])
+    write_csv("fig11_coherence", ["kind", "mode", "bytes", "latency_us"],
+              rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = run(quick)
+    d = {(r[0], r[1], r[2]): float(r[3]) for r in rows}
+    r2k = d[("modeled", "uncacheable", 2048)] / d[("modeled", "clflush",
+                                                   2048)]
+    print(f"uncacheable/clflush at 2KB: {r2k:.0f}x (paper: ~256x)")
+    r128k = d[("modeled", "clflush", 131072)] / d[("modeled", "clflushopt",
+                                                   131072)]
+    print(f"clflush/clflushopt at 128KB: {r128k:.1f}x (paper: up to 4x)")
+
+
+if __name__ == "__main__":
+    main()

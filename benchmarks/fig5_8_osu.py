@@ -1,0 +1,107 @@
+"""Figs 5-8: OSU-style one-/two-sided latency and bandwidth vs message size
+and process count.
+
+modeled : calibrated model across CXL SHM / TCP-Ethernet / TCP-CX6 for the
+          full 1B..8MB x {2..32} procs sweep (the paper's axes), asserting
+          the headline ratios.
+measured: the real cMPI transports on this host (2 procs): one-sided =
+          RMA window put/get, two-sided = SPSC queue send/recv, vs real
+          localhost TCP.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (shm_bandwidth, shm_pingpong, tcp_pingpong,
+                               write_csv)
+from repro.perfmodel.interconnects import (CXL_SHM, ETHERNET_TCP,
+                                           MELLANOX_TCP)
+
+KB = 1024
+MiB = 1024 * 1024
+
+MODEL_SIZES = [1, 8, 64, 512, 4 * KB, 16 * KB, 64 * KB, 256 * KB,
+               1 * MiB, 8 * MiB]
+PROCS = [2, 8, 16, 32]
+FABRICS = {"cxl_shm": CXL_SHM, "tcp_ethernet": ETHERNET_TCP,
+           "tcp_cx6dx": MELLANOX_TCP}
+
+
+def run_modeled() -> list[list]:
+    rows = []
+    for sided in ("onesided", "twosided"):
+        for fname, ic in FABRICS.items():
+            for p in PROCS:
+                for s in MODEL_SIZES:
+                    lat = ic.mpi_latency(s, onesided=sided == "onesided",
+                                         procs=p)
+                    bw = ic.mpi_bandwidth(s, p, onesided=sided == "onesided")
+                    rows.append(["modeled", sided, fname, p, s,
+                                 f"{lat * 1e6:.2f}", f"{bw / MiB:.0f}"])
+    return rows
+
+
+def run_measured_rma(sizes, iters=100) -> dict[int, float]:
+    """One-sided put latency over a real shared-memory window."""
+    from repro.core.runtime import run_processes
+
+    def prog(env):
+        win = env.comm.win_allocate("bw", max(sizes) + 64)
+        out = {}
+        for s in sizes:
+            data = bytes(s)
+            win.fence()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                if env.rank == 0:
+                    win.put(1, 0, data)
+                    _ = win.get(1, 0, 1)
+            dt = time.perf_counter() - t0
+            win.fence()
+            out[s] = dt / iters / 2.0
+        return out
+
+    return run_processes(2, prog, pool_bytes=128 << 20, timeout=600)[0]
+
+
+def run(quick: bool = False) -> list[list]:
+    rows = run_modeled()
+    sizes = [8, 512, 4 * KB, 64 * KB] if quick else \
+        [8, 64, 512, 4 * KB, 16 * KB, 64 * KB, 256 * KB]
+    iters = 30 if quick else 150
+    shm_lat = shm_pingpong(sizes, iters=iters)
+    tcp_lat = tcp_pingpong(sizes, iters=iters)
+    rma_lat = run_measured_rma(sizes, iters=iters)
+    shm_bw = shm_bandwidth(sizes, iters=max(iters // 10, 5))
+    for s in sizes:
+        rows.append(["measured", "twosided", "host_shm_cmpi", 2, s,
+                     f"{shm_lat[s] * 1e6:.2f}",
+                     f"{shm_bw[s] / MiB:.0f}"])
+        rows.append(["measured", "onesided", "host_shm_rma", 2, s,
+                     f"{rma_lat[s] * 1e6:.2f}", ""])
+        rows.append(["measured", "twosided", "host_tcp_localhost", 2, s,
+                     f"{tcp_lat[s] * 1e6:.2f}", ""])
+    write_csv("fig5_8_osu",
+              ["kind", "sided", "fabric", "procs", "msg_bytes",
+               "latency_us", "bandwidth_MiB_s"], rows)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    rows = run(quick)
+    # headline summary
+    import collections
+    d = {(r[0], r[1], r[2], r[3], r[4]): r for r in rows}
+    cxl16k = float(d[("modeled", "onesided", "cxl_shm", 16, 16 * KB)][6])
+    eth16k = float(d[("modeled", "onesided", "tcp_ethernet", 16, 16 * KB)][6])
+    print(f"modeled one-sided 16KB/16p: CXL {cxl16k:.0f} MiB/s vs "
+          f"TCP-Eth {eth16k:.0f} -> {cxl16k / eth16k:.0f}x "
+          f"(paper: up to 71.6x)")
+    meas = [r for r in rows if r[0] == "measured"]
+    print(f"{len(meas)} measured rows (see artifacts/bench/fig5_8_osu.csv)")
+
+
+if __name__ == "__main__":
+    main()

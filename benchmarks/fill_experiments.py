@@ -1,0 +1,170 @@
+"""Fill EXPERIMENTS.md placeholders (TABLE:ROOFLINE, TABLE:PERF, CELL:*)
+from the dry-run artifacts. Idempotent: reads EXPERIMENTS.md.in if present,
+else the current EXPERIMENTS.md (first run renames it to .in).
+
+  PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+ART = ROOT / "artifacts" / "dryrun"
+
+
+def load(variant: str) -> dict:
+    out = {}
+    base = ART / variant
+    if base.exists():
+        for p in sorted(base.glob("*/*.json")):
+            r = json.loads(p.read_text())
+            out[(r["mesh"], r["arch"], r["shape"])] = r
+    return out
+
+
+def roofline_table() -> str:
+    rows = ["| mesh | arch | shape | step | compute_s | memory_s | "
+            "collective_s | dominant | useful | frac | mem/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for key, rec in sorted(load("baseline").items()):
+        mesh, arch, shape = key
+        if rec["status"] == "skip":
+            rows.append(f"| {mesh} | {arch} | {shape} | SKIP | | | | | | | "
+                        f"{rec['why'].split(':')[0]} |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {mesh} | {arch} | {shape} | FAIL | | | | | | | |")
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory", {}).get("live_bytes_per_device", 0)
+        rows.append(
+            f"| {mesh} | {arch} | {shape} | {rec.get('step', '')} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} | {mem / 2**30:.1f}GiB |")
+    return "\n".join(rows)
+
+
+def cell_line(variant: str, mesh: str, arch: str, shape: str) -> str:
+    rec = load(variant).get((mesh, arch, shape))
+    if rec is None or rec.get("status") != "ok":
+        return f"(variant {variant}: not available)"
+    r = rec["roofline"]
+    mem = rec.get("memory", {}).get("live_bytes_per_device", 0)
+    return (f"compute {r['compute_s']:.3e}s, memory {r['memory_s']:.3e}s, "
+            f"collective {r['collective_s']:.3e}s, dominant "
+            f"{r['bottleneck']}, frac {r['roofline_fraction']:.4f}, "
+            f"mem/dev {mem / 2**30:.1f} GiB")
+
+
+PERF_CELLS = [
+    ("A", "pod16x16", "smollm-135m", "train_4k",
+     ["baseline", "attnchunk512", "seqshard", "seqshard_chunk"]),
+    ("B", "pod16x16", "llama3-8b", "decode_32k",
+     ["baseline", "decodeopt", "servetp", "kvbatch", "flashdecode"]),
+    ("C", "pod2x16x16", "dbrx-132b", "train_4k",
+     ["baseline", "moeffntp", "zero3", "ep_a2a"]),
+]
+
+
+def perf_table() -> str:
+    rows = ["| cell | variant | compute_s | memory_s | collective_s | "
+            "dominant | frac | mem/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for tag, mesh, arch, shape, variants in [
+            (c[0], c[1], c[2], c[3], c[4]) for c in PERF_CELLS]:
+        for v in variants:
+            rec = load(v).get((mesh, arch, shape))
+            if rec is None or rec.get("status") != "ok":
+                continue
+            r = rec["roofline"]
+            mem = rec.get("memory", {}).get("live_bytes_per_device", 0)
+            rows.append(
+                f"| {tag}: {arch}/{shape}/{mesh} | {v} "
+                f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+                f"| {r['roofline_fraction']:.4f} | {mem / 2**30:.1f}GiB |")
+    return "\n".join(rows)
+
+
+def summary_table() -> str:
+    rows = ["| cell | baseline dominant term | best variant | dominant "
+            "term after | improvement | frac before -> after |",
+            "|---|---|---|---|---|---|"]
+    best = {"A": "seqshard", "B": "flashdecode", "C": "ep_a2a"}
+    for tag, mesh, arch, shape, _ in [
+            (c[0], c[1], c[2], c[3], c[4]) for c in PERF_CELLS]:
+        b = load("baseline").get((mesh, arch, shape))
+        o = load(best[tag]).get((mesh, arch, shape))
+        if not b or not o or b.get("status") != "ok" \
+                or o.get("status") != "ok":
+            continue
+        br, orr = b["roofline"], o["roofline"]
+        dom = br["bottleneck"]
+        odom = orr["bottleneck"]
+        bb, oo = br[f"{dom}_s"], orr[f"{dom}_s"]
+        rows.append(
+            f"| {tag}: {arch}/{shape} | {dom} {bb:.2e}s | {best[tag]} "
+            f"| {odom} {orr[odom + '_s']:.2e}s"
+            f" | {bb / oo:.2f}x on {dom} "
+            f"| {br['roofline_fraction']:.4f} -> "
+            f"{orr['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def optimized_table() -> str:
+    """Aggregate beyond-paper gains: optimized preset vs baseline for
+    every cell where both compiled."""
+    base, opt = load("baseline"), load("optimized")
+    rows = ["| mesh | arch | shape | dominant (base) | dom term base -> "
+            "opt | frac base -> opt |",
+            "|---|---|---|---|---|---|"]
+    gains = []
+    for key in sorted(opt):
+        b, o = base.get(key), opt[key]
+        if not b or b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        br, orr = b["roofline"], o["roofline"]
+        dom = br["bottleneck"]
+        bb, oo = br[f"{dom}_s"], orr[f"{dom}_s"]
+        gains.append(bb / max(oo, 1e-12))
+        rows.append(
+            f"| {key[0]} | {key[1]} | {key[2]} | {dom} "
+            f"| {bb:.2e} -> {oo:.2e} ({bb / max(oo, 1e-12):.2f}x) "
+            f"| {br['roofline_fraction']:.4f} -> "
+            f"{orr['roofline_fraction']:.4f} |")
+    if gains:
+        import math
+        gm = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        rows.append(f"| | | **geomean over {len(gains)} cells** | | "
+                    f"**{gm:.2f}x on the dominant term** | |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    src = ROOT / "EXPERIMENTS.md.in"
+    if not src.exists():
+        (ROOT / "EXPERIMENTS.md").rename(src)
+    text = src.read_text()
+    text = text.replace("TABLE:ROOFLINE", roofline_table())
+    text = text.replace("TABLE:PERF", perf_table())
+    text = text.replace("TABLE:SUMMARY", summary_table())
+    text = text.replace("CELL:A2", cell_line("seqshard", "pod16x16",
+                                             "smollm-135m", "train_4k"))
+    text = text.replace("CELL:A3", cell_line("seqshard_chunk", "pod16x16",
+                                             "smollm-135m", "train_4k"))
+    text = text.replace("CELL:B3", cell_line("flashdecode", "pod16x16",
+                                             "llama3-8b", "decode_32k"))
+    text = text.replace("CELL:C2", cell_line("zero3", "pod2x16x16",
+                                             "dbrx-132b", "train_4k"))
+    text = text.replace("CELL:C3", cell_line("ep_a2a", "pod2x16x16",
+                                             "dbrx-132b", "train_4k"))
+    text = text.replace("TABLE:OPTIMIZED", optimized_table())
+    (ROOT / "EXPERIMENTS.md").write_text(text)
+    print("EXPERIMENTS.md filled from artifacts")
+
+
+if __name__ == "__main__":
+    main()

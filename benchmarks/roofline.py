@@ -1,0 +1,98 @@
+"""Roofline report: reads artifacts/dryrun/<variant>/ and prints the
+per-(arch x shape x mesh) table of the three roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--variant baseline]
+  PYTHONPATH=src python -m benchmarks.roofline --compare baseline opt1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import write_csv
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load(variant: str) -> list[dict]:
+    out = []
+    base = ART / variant
+    if not base.exists():
+        return out
+    for p in sorted(base.glob("*/*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def table(variant: str = "baseline") -> list[list]:
+    rows = []
+    for rec in load(variant):
+        if rec.get("status") == "skip":
+            rows.append([rec["mesh"], rec["arch"], rec["shape"], "SKIP",
+                         "", "", "", "", "", "", rec.get("why", "")])
+            continue
+        if rec.get("status") != "ok":
+            rows.append([rec["mesh"], rec["arch"], rec["shape"], "FAIL",
+                         "", "", "", "", "", "",
+                         rec.get("error", "")[:60]])
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory", {}).get("live_bytes_per_device", 0)
+        rows.append([
+            rec["mesh"], rec["arch"], rec["shape"], rec.get("step", ""),
+            f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+            f"{r['collective_s']:.3e}", r["bottleneck"],
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{r['roofline_fraction']:.4f}",
+            f"{mem / 2**30:.2f}GiB",
+        ])
+    return rows
+
+
+HEADER = ["mesh", "arch", "shape", "step", "compute_s", "memory_s",
+          "collective_s", "bottleneck", "useful_ratio", "roofline_frac",
+          "mem/dev"]
+
+
+def run(quick: bool = False, variant: str = "baseline") -> list[list]:
+    rows = table(variant)
+    write_csv(f"roofline_{variant}", HEADER, rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--compare", nargs=2, metavar=("BASE", "OPT"))
+    args = ap.parse_args()
+    if args.compare:
+        base = {(r["mesh"], r["arch"], r["shape"]): r
+                for r in load(args.compare[0]) if r.get("status") == "ok"}
+        opt = {(r["mesh"], r["arch"], r["shape"]): r
+               for r in load(args.compare[1]) if r.get("status") == "ok"}
+        print(f"{'cell':58s} {'dom term':>10s} {'before':>10s} "
+              f"{'after':>10s} {'delta':>8s}")
+        for key in sorted(opt):
+            if key not in base:
+                continue
+            b, o = base[key]["roofline"], opt[key]["roofline"]
+            dom = b["bottleneck"]
+            bb, oo = b[f"{dom}_s"], o[f"{dom}_s"]
+            print(f"{'/'.join(key):58s} {dom:>10s} {bb:10.3e} {oo:10.3e} "
+                  f"{(oo / bb - 1) * 100:7.1f}%  frac "
+                  f"{b['roofline_fraction']:.4f}->{o['roofline_fraction']:.4f}")
+        return
+    rows = run(variant=args.variant)
+    print(f"{'mesh':12s} {'arch':24s} {'shape':12s} {'step':13s} "
+          f"{'compute':>10s} {'memory':>10s} {'collect':>10s} "
+          f"{'dominant':>10s} {'useful':>7s} {'frac':>7s} {'mem/dev':>9s}")
+    for r in rows:
+        print(f"{r[0]:12s} {r[1]:24s} {r[2]:12s} {str(r[3]):13s} "
+              f"{r[4]:>10s} {r[5]:>10s} {r[6]:>10s} {r[7]:>10s} "
+              f"{r[8]:>7s} {r[9]:>7s} {r[10]:>9s}")
+
+
+if __name__ == "__main__":
+    main()

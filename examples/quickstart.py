@@ -1,0 +1,46 @@
+"""Quickstart: end-to-end training of a reduced smollm-135m on synthetic
+Markov data — real optimizer, checkpointing, restart, straggler monitor.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 300]
+
+Loss drops well below the uniform-entropy floor (log V ~= 4.85) because the
+synthetic stream is an order-2 Markov chain with learnable structure.
+"""
+import argparse
+import dataclasses
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.train import run_training  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                global_batch=8)
+    with tempfile.TemporaryDirectory() as d:
+        out = run_training(cfg, shape, args.steps, ckpt_dir=d,
+                           ckpt_every=100, log_every=25)
+        print(f"\nfinal loss {out['final_loss']:.3f} "
+              f"(uniform floor {np.log(cfg.vocab_size):.2f}); "
+              f"{out['tokens_per_s']:.0f} tok/s; "
+              f"health={out['health']}")
+        # resume from the final checkpoint to show restartability
+        out2 = run_training(cfg, shape, args.steps, ckpt_dir=d, quiet=True)
+        print(f"restart check: resumed at trained step, loss "
+              f"{out2['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

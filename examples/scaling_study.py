@@ -1,0 +1,42 @@
+"""Fig-10-style strong-scaling study on the event simulator: CG and
+miniAMR over CXL SHM vs TCP fabrics, 8 procs/node.
+
+    PYTHONPATH=src python examples/scaling_study.py --nodes 2 4 8 16
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.perfmodel.apps import cg_program, miniamr_program  # noqa: E402
+from repro.perfmodel.interconnects import (CXL_SHM, ETHERNET_TCP,  # noqa: E402
+                                           MELLANOX_TCP)
+from repro.perfmodel.simulator import Engine  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, nargs="*", default=[2, 4, 8, 16])
+    args = ap.parse_args()
+
+    for app, maker, kw in (("CG", cg_program, {"iters": 20}),
+                           ("miniAMR", miniamr_program, {"steps": 20})):
+        print(f"\n== {app} (8 procs/node) ==")
+        print(f"{'nodes':>6s} {'cxl_shm':>10s} {'tcp_cx6':>10s} "
+              f"{'tcp_eth':>10s} {'cxl comm%':>10s}")
+        for nodes in args.nodes:
+            n = nodes * 8
+            res = {}
+            for ic in (CXL_SHM, MELLANOX_TCP, ETHERNET_TCP):
+                res[ic.name] = Engine(n, ic, procs_per_node=8).run(
+                    lambda r: maker(r, n, **kw))
+            c = res["cxl_shm"]
+            print(f"{nodes:6d} {c['total_s']:9.3f}s "
+                  f"{res['tcp_cx6dx']['total_s']:9.3f}s "
+                  f"{res['tcp_ethernet']['total_s']:9.3f}s "
+                  f"{c['comm_fraction'] * 100:9.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""cMPI core: the paper's contribution as a library.
+
+  pool        — CXL-pool stand-ins (local / real shared memory / incoherent)
+  coherence   — software cache-coherence protocol (§3.5)
+  arena       — CXL SHM Arena: multi-level-hash named objects (§3.1)
+  ringqueue   — SPSC queue matrix for two-sided pt2pt (§3.3)
+  rma         — one-sided windows, put/get, PSCW/lock/fence sync (§3.2, §3.4)
+  pt2pt       — Communicator: send/recv/isend/irecv over the queue matrix
+  collectives — recursive-doubling / ring / Bruck collectives over pt2pt
+  runtime     — thread and process runtimes for multi-rank execution
+"""
+from repro.core.arena import Arena, ArenaFullError, ObjHandle, PAPER_ARENA
+from repro.core.coherence import CoherentView
+from repro.core.collectives import (allgather_bruck, allgather_ring,
+                                    allreduce, alltoall,
+                                    barrier_dissemination, bcast, reduce,
+                                    reduce_scatter_ring)
+from repro.core.pool import (CACHELINE, IncoherentPool, LocalPool, Pool,
+                             RankCache, SharedMemoryPool)
+from repro.core.pt2pt import ANY_TAG, Communicator, Request
+from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
+                                  QueueMatrix, SPSCQueue)
+from repro.core.rma import Window
+from repro.core.runtime import RankEnv, run_processes, run_threads
+from repro.core.sync import PSCW, BakeryLock, RWLock, SeqBarrier

@@ -1,0 +1,162 @@
+"""Software cache coherence (paper §3.5) as an explicit, testable protocol.
+
+The CXL pooled platform is NOT hardware-coherent across hosts. The paper's
+protocol:
+
+  after every write :  cache flush (clwb/clflushopt)  then  sfence
+  before every read :  fence                          then  flush/invalidate
+
+plus non-temporal load/store for control words (queue head/tail pointers,
+sync flags) so they never linger in cache.
+
+``CoherentView`` wraps a pool and applies that protocol. Three modes:
+
+  * "coherent"    — backing pool is already coherent (LocalPool shared by
+                    threads, SharedMemoryPool across processes on one x86
+                    host). Protocol calls are COUNTED (for the timing model,
+                    calibrated to Fig 11) but are memory no-ops.
+  * "incoherent"  — backing pool is an IncoherentPool (per-rank write-back
+                    cache). The protocol is REQUIRED for correctness; tests
+                    prove omitting it produces stale reads.
+  * "uncacheable" — every access bypasses the cache (the paper's MTRR
+                    experiment). Correct, counted as uncached accesses, and
+                    shown by the perf model to be catastrophically slow
+                    beyond 2 KB (PCIe MPS packetization, Fig 11).
+
+The latency model attached to these counters lives in
+``repro.perfmodel.interconnects`` — this module only counts events.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.pool import CACHELINE, IncoherentPool, Pool
+
+MODES = ("coherent", "incoherent", "uncacheable")
+
+
+@dataclass
+class ProtocolStats:
+    writes: int = 0
+    reads: int = 0
+    written_bytes: int = 0
+    read_bytes: int = 0
+    flush_lines: int = 0
+    fences: int = 0
+    nt_ops: int = 0             # non-temporal control-word accesses
+    uncached_ops: int = 0
+
+    def lines(self, n: int) -> int:
+        return (n + CACHELINE - 1) // CACHELINE
+
+
+class CoherentView:
+    """Protocol-applying accessor for one rank over one pool."""
+
+    def __init__(self, pool: Pool, mode: str = "coherent"):
+        assert mode in MODES, mode
+        self.pool = pool
+        self.mode = mode
+        self.stats = ProtocolStats()
+        self._inc = isinstance(pool, IncoherentPool)
+        if mode == "incoherent" and not self._inc:
+            raise ValueError("incoherent mode requires an IncoherentPool")
+
+    # ------------------------------------------------------------------
+    # raw (protocol-free) access — used by tests to demonstrate staleness
+    # ------------------------------------------------------------------
+    def raw_read(self, off: int, n: int) -> bytes:
+        return self.pool.read(off, n)
+
+    def raw_write(self, off: int, data: bytes) -> None:
+        self.pool.write(off, data)
+
+    # ------------------------------------------------------------------
+    # protocol access
+    # ------------------------------------------------------------------
+    def write_release(self, off: int, data: bytes) -> None:
+        """store; flush; sfence — makes the write globally visible."""
+        n = len(data)
+        self.stats.writes += 1
+        self.stats.written_bytes += n
+        if self.mode == "uncacheable":
+            self.stats.uncached_ops += self.stats.lines(n)
+            self.pool.write(off, data)
+            return
+        self.pool.write(off, data)
+        if self._inc:
+            self.pool.flush(off, n)       # write back + invalidate
+            self.pool.fence()
+        self.stats.flush_lines += self.stats.lines(n)
+        self.stats.fences += 1
+
+    def read_acquire(self, off: int, n: int) -> bytes:
+        """lfence; invalidate; load — defeats stale cached/prefetched data."""
+        self.stats.reads += 1
+        self.stats.read_bytes += n
+        if self.mode == "uncacheable":
+            self.stats.uncached_ops += self.stats.lines(n)
+            return self.pool.read(off, n)
+        if self._inc:
+            self.pool.fence()
+            self.pool.invalidate(off, n)  # drop stale lines
+        self.stats.flush_lines += self.stats.lines(n)
+        self.stats.fences += 1
+        return self.pool.read(off, n)
+
+    # ------------------------------------------------------------------
+    # non-temporal control words (u64 head/tail pointers, flags)
+    # ------------------------------------------------------------------
+    def nt_store_u64(self, off: int, value: int) -> None:
+        self.stats.nt_ops += 1
+        data = int(value).to_bytes(8, "little")
+        if self._inc:
+            # non-temporal: write straight to the pool, bypassing the cache,
+            # and kill any stale private copy of that line.
+            self.pool.backing.write(off, data)
+            self.pool.invalidate(off, 8)
+        else:
+            self.pool.write(off, data)
+
+    def nt_load_u64(self, off: int) -> int:
+        self.stats.nt_ops += 1
+        if self._inc:
+            self.pool.invalidate(off, 8)
+            data = self.pool.backing.read(off, 8)
+        else:
+            data = self.pool.read(off, 8)
+        return int.from_bytes(data, "little")
+
+    def nt_store_u8(self, off: int, value: int) -> None:
+        self.stats.nt_ops += 1
+        data = bytes([value & 0xFF])
+        if self._inc:
+            self.pool.backing.write(off, data)
+            self.pool.invalidate(off, 1)
+        else:
+            self.pool.write(off, data)
+
+    def nt_load_u8(self, off: int) -> int:
+        self.stats.nt_ops += 1
+        if self._inc:
+            self.pool.invalidate(off, 1)
+            return self.pool.backing.read(off, 1)[0]
+        return self.pool.read(off, 1)[0]
+
+    def nt_store_u32(self, off: int, value: int) -> None:
+        self.stats.nt_ops += 1
+        data = int(value).to_bytes(4, "little")
+        if self._inc:
+            self.pool.backing.write(off, data)
+            self.pool.invalidate(off, 4)
+        else:
+            self.pool.write(off, data)
+
+    def nt_load_u32(self, off: int) -> int:
+        self.stats.nt_ops += 1
+        if self._inc:
+            self.pool.invalidate(off, 4)
+            data = self.pool.backing.read(off, 4)
+        else:
+            data = self.pool.read(off, 4)
+        return int.from_bytes(data, "little")

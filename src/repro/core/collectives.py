@@ -1,0 +1,230 @@
+"""Collective communication built on cMPI point-to-point (paper §3.6).
+
+The paper leaves collectives as future work but notes they decompose into
+pt2pt via standard algorithms (recursive doubling [5], Bruck [20]). We
+implement that decomposition — these run the framework's HOST-side
+coordination (checkpoint manifests, data-pipeline epochs, elastic control),
+and their communication patterns are mirrored device-side in
+``distributed/schedules.py``.
+
+Algorithms (n = comm size, numpy arrays):
+  barrier         dissemination (log n rounds of pairwise messages)
+  bcast           binomial tree
+  reduce          binomial tree (op applied bottom-up)
+  allreduce       recursive doubling (pow2) | ring RS+AG (any n)
+  allgather       Bruck | ring
+  reduce_scatter  ring
+  alltoall        pairwise exchange
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pt2pt import Communicator
+
+_T = 0x7F000000   # tag space reserved for collectives
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def barrier_dissemination(comm: Communicator) -> None:
+    n, r = comm.size, comm.rank
+    k = 1
+    rnd = 0
+    while k < n:
+        dst = (r + k) % n
+        src = (r - k) % n
+        sreq = comm.isend(dst, b"", tag=_T + rnd)
+        comm.recv(src, tag=_T + rnd)
+        sreq.wait()
+        k <<= 1
+        rnd += 1
+
+
+def bcast(comm: Communicator, arr: np.ndarray | None, root: int = 0
+          ) -> np.ndarray:
+    """Binomial tree broadcast. Non-root ranks pass arr=None or a buffer of
+    the right shape/dtype; shape/dtype metadata travels with the data."""
+    n, r = comm.size, comm.rank
+    vr = (r - root) % n          # virtual rank
+    if vr == 0:
+        payload = _pack(arr)
+    else:
+        # receive from parent: highest set bit of vr
+        k = 1
+        while k * 2 <= vr:
+            k *= 2
+        parent = (vr - k + root) % n
+        data, _ = comm.recv(parent, tag=_T + 16)
+        payload = data
+    # forward to children: vr + k for k > vr's msb, within range
+    k = 1
+    while k < n:
+        if vr < k and vr + k < n:
+            comm.send((vr + k + root) % n, payload, tag=_T + 16)
+        k *= 2
+        if k <= vr:
+            continue
+    return _unpack(payload)
+
+
+def reduce(comm: Communicator, arr: np.ndarray, op=np.add, root: int = 0
+           ) -> np.ndarray | None:
+    n, r = comm.size, comm.rank
+    vr = (r - root) % n
+    acc = arr.copy()
+    k = 1
+    while k < n:
+        if vr % (2 * k) == 0:
+            src_vr = vr + k
+            if src_vr < n:
+                other = comm.recv_array((src_vr + root) % n, arr.shape,
+                                        arr.dtype, tag=_T + 32)
+                acc = op(acc, other)
+        elif vr % (2 * k) == k:
+            comm.send_array((vr - k + root) % n, acc, tag=_T + 32)
+            return None if r != root else acc
+        k *= 2
+    return acc if r == root else None
+
+
+def allreduce_rd(comm: Communicator, arr: np.ndarray, op=np.add
+                 ) -> np.ndarray:
+    """Recursive doubling (pow2 sizes) — paper's cited algorithm [5]."""
+    n, r = comm.size, comm.rank
+    assert _is_pow2(n), "recursive doubling needs power-of-two size"
+    acc = arr.copy()
+    k = 1
+    rnd = 0
+    while k < n:
+        peer = r ^ k
+        sreq = comm.isend(peer, np.ascontiguousarray(acc).tobytes(),
+                          tag=_T + 64 + rnd)
+        data, _ = comm.recv(peer, tag=_T + 64 + rnd)
+        sreq.wait()
+        other = np.frombuffer(data, dtype=acc.dtype).reshape(acc.shape)
+        acc = op(acc, other)
+        k <<= 1
+        rnd += 1
+    return acc
+
+
+def reduce_scatter_ring(comm: Communicator, arr: np.ndarray, op=np.add
+                        ) -> np.ndarray:
+    """Ring reduce-scatter; returns this rank's reduced shard (flat)."""
+    n, r = comm.size, comm.rank
+    flat = np.ascontiguousarray(arr).reshape(-1)
+    pad = (-len(flat)) % n
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
+    shards = np.split(flat.copy(), n)
+    right, left = (r + 1) % n, (r - 1) % n
+    for step in range(n - 1):
+        send_idx = (r - step) % n
+        recv_idx = (r - step - 1) % n
+        sreq = comm.isend(right, shards[send_idx].tobytes(),
+                          tag=_T + 128 + step)
+        data, _ = comm.recv(left, tag=_T + 128 + step)
+        sreq.wait()
+        inc = np.frombuffer(data, dtype=flat.dtype)
+        shards[recv_idx] = op(shards[recv_idx], inc)
+    return shards[(r + 1) % n]
+
+
+def allgather_ring(comm: Communicator, shard: np.ndarray) -> np.ndarray:
+    n, r = comm.size, comm.rank
+    shards: list[np.ndarray | None] = [None] * n
+    shards[r] = np.ascontiguousarray(shard)
+    right, left = (r + 1) % n, (r - 1) % n
+    for step in range(n - 1):
+        send_idx = (r - step) % n
+        recv_idx = (r - step - 1) % n
+        sreq = comm.isend(right, shards[send_idx].tobytes(),
+                          tag=_T + 256 + step)
+        data, _ = comm.recv(left, tag=_T + 256 + step)
+        sreq.wait()
+        shards[recv_idx] = np.frombuffer(data, dtype=shard.dtype).reshape(
+            shard.shape).copy()
+    return np.concatenate([s.reshape(-1) for s in shards])
+
+
+def allgather_bruck(comm: Communicator, shard: np.ndarray) -> np.ndarray:
+    """Bruck all-gather — paper's cited algorithm [20]; ceil(log2 n) rounds."""
+    n, r = comm.size, comm.rank
+    blocks = [np.ascontiguousarray(shard)]
+    k = 1
+    rnd = 0
+    while k < n:
+        dst = (r - k) % n
+        src = (r + k) % n
+        count = min(k, n - k)
+        payload = np.concatenate(
+            [b.reshape(-1) for b in blocks[:count]])
+        sreq = comm.isend(dst, payload.tobytes(), tag=_T + 512 + rnd)
+        data, _ = comm.recv(src, tag=_T + 512 + rnd)
+        sreq.wait()
+        got = np.frombuffer(data, dtype=shard.dtype)
+        per = shard.size
+        for i in range(count):
+            blocks.append(got[i * per:(i + 1) * per].reshape(shard.shape))
+        k <<= 1
+        rnd += 1
+    blocks = blocks[:n]
+    # blocks[i] is rank (r+i) % n's shard — rotate into rank order
+    ordered = [blocks[(i - r) % n] for i in range(n)]
+    return np.concatenate([b.reshape(-1) for b in ordered])
+
+
+def allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
+              algo: str = "auto") -> np.ndarray:
+    n = comm.size
+    if n == 1:
+        return arr.copy()
+    if algo == "auto":
+        algo = "rd" if (_is_pow2(n) and arr.size < 4096) else "ring"
+    if algo == "rd":
+        return allreduce_rd(comm, arr, op)
+    shard = reduce_scatter_ring(comm, arr, op)
+    flat = allgather_ring(comm, shard)
+    # rank i's reduced shard is CHUNK (i+1) % n — reorder to chunk order
+    per = flat.size // n
+    parts = [flat[i * per:(i + 1) * per] for i in range(n)]
+    flat = np.concatenate([parts[(c - 1) % n] for c in range(n)])
+    return flat[:arr.size].reshape(arr.shape).astype(arr.dtype)
+
+
+def alltoall(comm: Communicator, blocks: list[np.ndarray]
+             ) -> list[np.ndarray]:
+    """blocks[i] goes to rank i; returns what each rank sent to us."""
+    n, r = comm.size, comm.rank
+    assert len(blocks) == n
+    out: list[np.ndarray | None] = [None] * n
+    out[r] = blocks[r].copy()
+    reqs = []
+    for off in range(1, n):
+        dst = (r + off) % n
+        reqs.append(comm.isend(dst, np.ascontiguousarray(
+            blocks[dst]).tobytes(), tag=_T + 1024 + off))
+    for off in range(1, n):
+        src = (r - off) % n
+        data, _ = comm.recv(src, tag=_T + 1024 + off)
+        out[src] = np.frombuffer(data, dtype=blocks[src].dtype).reshape(
+            blocks[src].shape).copy()
+    comm.waitall(reqs)
+    return out
+
+
+def _pack(arr: np.ndarray) -> bytes:
+    meta = (str(arr.dtype).encode() + b"|"
+            + ",".join(map(str, arr.shape)).encode() + b"|")
+    return len(meta).to_bytes(4, "little") + meta + arr.tobytes()
+
+
+def _unpack(data: bytes) -> np.ndarray:
+    mlen = int.from_bytes(data[:4], "little")
+    meta = data[4:4 + mlen].split(b"|")
+    dtype = np.dtype(meta[0].decode())
+    shape = tuple(int(x) for x in meta[1].decode().split(",") if x)
+    return np.frombuffer(data[4 + mlen:], dtype=dtype).reshape(shape).copy()

@@ -1,0 +1,232 @@
+"""Memory pools — the 'CXL pooled memory platform' stand-ins.
+
+The paper's platform is an FPGA CXL pooled-memory box (Niagara 2.0) that
+multiple hosts map via a dax device. Here a pool is a flat byte region with
+three backends:
+
+  * LocalPool        — in-process bytearray; unit tests, thread runtime.
+  * SharedMemoryPool — multiprocessing.shared_memory; REAL inter-process
+                       shared memory. On this host it plays the role CXL SHM
+                       plays across hosts: a load/store fabric that bypasses
+                       the network stack. The TCP transport benchmarked
+                       against it goes through real localhost sockets.
+  * IncoherentPool   — wraps another pool with per-rank write-back caches so
+                       that, exactly like the paper's hardware, a store by
+                       one rank is INVISIBLE to others until the writer
+                       flushes and the reader invalidates. Used to prove the
+                       software-coherence protocol necessary and sufficient.
+
+All offsets are absolute byte offsets into the pool.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from multiprocessing import shared_memory
+
+
+class Pool:
+    """Flat byte region with read/write access."""
+
+    size: int
+
+    def read(self, off: int, n: int) -> bytes:
+        raise NotImplementedError
+
+    def write(self, off: int, data: bytes) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def unlink(self) -> None:
+        pass
+
+
+class LocalPool(Pool):
+    def __init__(self, size: int):
+        self.size = size
+        self.buf = bytearray(size)
+
+    def read(self, off: int, n: int) -> bytes:
+        if off < 0 or off + n > self.size:
+            raise IndexError(f"pool read [{off}, {off + n}) out of bounds")
+        return bytes(self.buf[off:off + n])
+
+    def write(self, off: int, data: bytes) -> None:
+        if off < 0 or off + len(data) > self.size:
+            raise IndexError(f"pool write [{off}, {off + len(data)}) "
+                             f"out of bounds")
+        self.buf[off:off + len(data)] = data
+
+
+class SharedMemoryPool(Pool):
+    """Real shared memory between processes (CXL SHM host analogue)."""
+
+    def __init__(self, size: int, name: str | None = None,
+                 create: bool = True):
+        if create:
+            self.shm = shared_memory.SharedMemory(create=True, size=size,
+                                                  name=name)
+        else:
+            self.shm = shared_memory.SharedMemory(name=name)
+        self.size = self.shm.size
+        self.name = self.shm.name
+        self._created = create
+
+    def read(self, off: int, n: int) -> bytes:
+        return bytes(self.shm.buf[off:off + n])
+
+    def write(self, off: int, data: bytes) -> None:
+        self.shm.buf[off:off + len(data)] = data
+
+    def close(self) -> None:
+        self.shm.close()
+
+    def unlink(self) -> None:
+        try:
+            self.shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+# --------------------------------------------------------------------------
+# incoherent pool: per-rank write-back caches
+# --------------------------------------------------------------------------
+
+CACHELINE = 64
+
+
+@dataclass
+class CacheStats:
+    loads: int = 0
+    stores: int = 0
+    hits: int = 0
+    misses: int = 0
+    flushes: int = 0            # lines written back + invalidated
+    invalidates: int = 0        # lines dropped (clean or forced)
+    fences: int = 0
+    flushed_bytes: int = 0
+
+
+@dataclass
+class _Line:
+    data: bytearray
+    dirty: bool = False
+
+
+class RankCache:
+    """A private write-back cache overlay for one rank over a backing pool.
+
+    Fully-associative over line addresses (a dict) — associativity games are
+    not the point; VISIBILITY is: dirty lines are invisible to other ranks
+    until flushed, and stale clean lines hide remote updates until
+    invalidated. That is exactly the hazard the paper's §3.5 protocol
+    (flush+fence after write, fence+flush before read) exists to fix.
+    """
+
+    def __init__(self, backing: Pool):
+        self.backing = backing
+        self.lines: dict[int, _Line] = {}
+        self.stats = CacheStats()
+        self.lock = threading.Lock()   # protects this rank's own structures
+
+    # -- internals ---------------------------------------------------------
+    def _line(self, base: int) -> _Line:
+        ln = self.lines.get(base)
+        if ln is None:
+            self.stats.misses += 1
+            ln = _Line(bytearray(self.backing.read(base, CACHELINE)))
+            self.lines[base] = ln
+        else:
+            self.stats.hits += 1
+        return ln
+
+    @staticmethod
+    def _span(off: int, n: int):
+        first = off - off % CACHELINE
+        last = (off + n - 1) - (off + n - 1) % CACHELINE
+        return range(first, last + 1, CACHELINE)
+
+    # -- cached access -----------------------------------------------------
+    def load(self, off: int, n: int) -> bytes:
+        with self.lock:
+            self.stats.loads += 1
+            out = bytearray(n)
+            for base in self._span(off, n):
+                ln = self._line(base)
+                s = max(off, base)
+                e = min(off + n, base + CACHELINE)
+                out[s - off:e - off] = ln.data[s - base:e - base]
+            return bytes(out)
+
+    def store(self, off: int, data: bytes) -> None:
+        with self.lock:
+            self.stats.stores += 1
+            n = len(data)
+            for base in self._span(off, n):
+                ln = self._line(base)
+                s = max(off, base)
+                e = min(off + n, base + CACHELINE)
+                ln.data[s - base:e - base] = data[s - off:e - off]
+                ln.dirty = True
+
+    # -- coherence ops (the paper's clflush/clflushopt + fence model) ------
+    def flush(self, off: int, n: int) -> int:
+        """Write back + invalidate every line covering [off, off+n).
+        Returns number of lines flushed (timing model input)."""
+        with self.lock:
+            count = 0
+            for base in self._span(off, n):
+                ln = self.lines.pop(base, None)
+                if ln is not None:
+                    if ln.dirty:
+                        self.backing.write(base, bytes(ln.data))
+                    count += 1
+            self.stats.flushes += count
+            self.stats.flushed_bytes += count * CACHELINE
+            return count
+
+    def invalidate(self, off: int, n: int) -> int:
+        """Drop lines without write-back (reader-side 'flush' of clean
+        data). A dirty line here would LOSE data — in the paper's protocol
+        readers only invalidate regions they do not own for writing; we
+        write back defensively and count it."""
+        with self.lock:
+            count = 0
+            for base in self._span(off, n):
+                ln = self.lines.pop(base, None)
+                if ln is not None:
+                    if ln.dirty:
+                        self.backing.write(base, bytes(ln.data))
+                    count += 1
+            self.stats.invalidates += count
+            return count
+
+    def fence(self) -> None:
+        self.stats.fences += 1
+
+
+class IncoherentPool(Pool):
+    """Per-rank view of a backing pool through that rank's private cache."""
+
+    def __init__(self, backing: Pool, cache: RankCache):
+        self.backing = backing
+        self.cache = cache
+        self.size = backing.size
+
+    def read(self, off: int, n: int) -> bytes:
+        return self.cache.load(off, n)
+
+    def write(self, off: int, data: bytes) -> None:
+        self.cache.store(off, data)
+
+    # coherence surface
+    def flush(self, off: int, n: int) -> int:
+        return self.cache.flush(off, n)
+
+    def invalidate(self, off: int, n: int) -> int:
+        return self.cache.invalidate(off, n)
+
+    def fence(self) -> None:
+        self.cache.fence()

@@ -1,0 +1,265 @@
+"""Two-sided communication: the cMPI Communicator (paper §3.3).
+
+Send/recv over the SPSC queue matrix: the sender enqueues into queue
+(receiver_row, sender_col); the receiver polls its row. In-order delivery
+per (src, dst) pair; tag matching uses a local reorder buffer (messages of
+other tags are parked, never dropped).
+
+Non-blocking isend/irecv return Request objects driven by an explicit
+progress pump (MPI_Test/MPI_Wait semantics — paper §3.4 keeps these
+unchanged, as do we: the message path itself is what got optimized).
+
+Bootstrap: rank 0 creates the queue-matrix and barrier objects in the
+arena; other ranks poll ``open`` until they appear — this mirrors the
+paper's 'root rank creates, broadcasts the object name' flow (here the
+names are deterministic, which IS the broadcast).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.arena import Arena
+from repro.core.ringqueue import DEFAULT_CELL_SIZE, QueueMatrix
+from repro.core.rma import Window
+from repro.core.sync import SeqBarrier
+
+ANY_TAG = -1
+
+
+@dataclass
+class Request:
+    kind: str                        # send | recv
+    done: bool = False
+    data: Optional[bytes] = None     # recv result
+    tag: int = 0
+    src: int = -1
+    _gen: Any = field(default=None, repr=False)
+    _comm: Any = field(default=None, repr=False)
+
+    def test(self) -> bool:
+        if self.done:
+            return True
+        if self.kind == "send":
+            # sends are pumped ONLY through the per-destination FIFO —
+            # chunks of different messages must never interleave in one
+            # SPSC queue (framing is contiguous per message)
+            self._comm._progress()
+            return self.done
+        try:
+            next(self._gen)
+        except StopIteration:
+            self.done = True
+        return self.done
+
+    def wait(self, timeout: float | None = 30.0):
+        t0 = time.monotonic()
+        while not self.test():
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"{self.kind} request timed out")
+            time.sleep(0)
+        return self.data
+
+
+class Communicator:
+    """MPI_COMM_WORLD-alike over one arena."""
+
+    def __init__(self, arena: Arena, rank: int, size: int, *,
+                 cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
+                 name: str = "world", open_timeout: float = 30.0):
+        self.arena = arena
+        self.rank = rank
+        self.size = size
+        self.cell_size = cell_size
+        region = QueueMatrix.region_bytes(size, cell_size, n_cells)
+        bar_bytes = SeqBarrier.region_bytes(size)
+        if rank == 0:
+            self._mq_obj = arena.create(f"{name}:mq", region)
+            self._bar_obj = arena.create(f"{name}:bar", bar_bytes)
+            self.mq = QueueMatrix(arena.view, self._mq_obj.offset, size, rank,
+                                  cell_size, n_cells, initialize=True)
+            self._barrier = SeqBarrier(arena.view, self._bar_obj.offset, size,
+                                       rank, initialize=True)
+        else:
+            t0 = time.monotonic()
+            while True:
+                try:
+                    self._mq_obj = arena.open(f"{name}:mq")
+                    self._bar_obj = arena.open(f"{name}:bar")
+                    break
+                except FileNotFoundError:
+                    if time.monotonic() - t0 > open_timeout:
+                        raise
+                    time.sleep(0.0005)
+            self.mq = QueueMatrix(arena.view, self._mq_obj.offset, size, rank,
+                                  cell_size, n_cells)
+            self._barrier = SeqBarrier(arena.view, self._bar_obj.offset, size,
+                                       rank)
+        # tag reorder buffers per src
+        self._parked: dict[int, deque[tuple[bytes, int]]] = {
+            s: deque() for s in range(size)}
+        # progress engine: outstanding non-blocking sends advanced by every
+        # blocking call (MPI progress rule — without it, two ranks that
+        # isend to each other then recv would deadlock on full queues).
+        # One FIFO per destination: a message's chunks must occupy the
+        # pair queue CONTIGUOUSLY, so only the head request of each
+        # destination is ever pumped.
+        self._send_fifo: dict[int, deque[Request]] = {}
+        # init barrier (paper §3.4: creation of shared queues synchronized
+        # by the seq-number barrier)
+        self.barrier()
+
+    def _progress(self) -> None:
+        """Advance the head send of every destination FIFO."""
+        for fifo in self._send_fifo.values():
+            while fifo:
+                head = fifo[0]
+                try:
+                    next(head._gen)
+                    break                    # blocked on queue space
+                except StopIteration:
+                    head.done = True
+                    fifo.popleft()           # next message may start
+
+    # ------------------------------------------------------------------
+    # blocking pt2pt (implemented over the non-blocking path so every
+    # blocking call keeps the progress engine turning)
+    # ------------------------------------------------------------------
+    def send(self, dest: int, data: bytes, tag: int = 0,
+             timeout: float | None = 30.0) -> None:
+        req = self.isend(dest, data, tag)
+        t0 = time.monotonic()
+        while not req.test():
+            self._progress()
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"send(dest={dest}, tag={tag})")
+            time.sleep(0)
+
+    def recv(self, src: int, tag: int = ANY_TAG,
+             timeout: float | None = 30.0) -> tuple[bytes, int]:
+        req = self.irecv(src, tag)
+        t0 = time.monotonic()
+        while not req.test():
+            self._progress()
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"recv(src={src}, tag={tag})")
+            time.sleep(0)
+        return req.data, req.tag
+
+    # numpy convenience
+    def send_array(self, dest: int, arr: np.ndarray, tag: int = 0) -> None:
+        self.send(dest, np.ascontiguousarray(arr).tobytes(), tag)
+
+    def recv_array(self, src: int, shape, dtype,
+                   tag: int = ANY_TAG) -> np.ndarray:
+        data, _ = self.recv(src, tag)
+        return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+
+    # ------------------------------------------------------------------
+    # non-blocking pt2pt
+    # ------------------------------------------------------------------
+    def isend(self, dest: int, data: bytes, tag: int = 0) -> Request:
+        req = Request(kind="send", tag=tag)
+
+        def gen():
+            if dest == self.rank:
+                self._parked[self.rank].append((bytes(data), tag))
+                return
+            q = self.mq.send_queue(dest)
+            first_room = q.cell_size - q._MSG_HDR
+            head = (len(data).to_bytes(8, "little")
+                    + int(tag).to_bytes(8, "little")
+                    + bytes(data[:first_room]))
+            rest = bytes(data[first_room:])
+            chunks = [head] + [rest[i:i + q.cell_size]
+                               for i in range(0, len(rest), q.cell_size)]
+            from repro.core.ringqueue import FLAG_FIRST, FLAG_LAST
+            for i, ch in enumerate(chunks):
+                flags = (FLAG_FIRST if i == 0 else 0) | \
+                        (FLAG_LAST if i == len(chunks) - 1 else 0)
+                while not q.try_enqueue(ch, flags):
+                    yield
+        req._gen = gen()
+        req._comm = self
+        self._send_fifo.setdefault(dest, deque()).append(req)
+        self._progress()                         # start eagerly (in order)
+        return req
+
+    def irecv(self, src: int, tag: int = ANY_TAG) -> Request:
+        req = Request(kind="recv", tag=tag, src=src)
+
+        def gen():
+            park = self._parked[src]
+            while True:
+                for i, (d, t) in enumerate(park):
+                    if tag in (ANY_TAG, t):
+                        del park[i]
+                        req.data, req.tag = d, t
+                        return
+                if src == self.rank:
+                    yield
+                    continue
+                q = self.mq.recv_queue(src)
+                out = q.try_dequeue()
+                if out is None:
+                    yield
+                    continue
+                payload, flags = out
+                total = int.from_bytes(payload[:8], "little")
+                t = int.from_bytes(payload[8:16], "little")
+                parts = [payload[16:]]
+                got = len(payload) - 16
+                while got < total:
+                    nxt = q.try_dequeue()
+                    if nxt is None:
+                        yield
+                        continue
+                    parts.append(nxt[0])
+                    got += len(nxt[0])
+                d = b"".join(parts)[:total]
+                if tag in (ANY_TAG, t):
+                    req.data, req.tag = d, t
+                    return
+                park.append((d, t))
+        req._gen = gen()
+        return req
+
+    def waitall(self, reqs: list[Request],
+                timeout: float | None = 30.0) -> None:
+        t0 = time.monotonic()
+        pending = list(reqs)
+        while pending:
+            self._progress()
+            pending = [r for r in pending if not r.test()]
+            if pending and timeout is not None \
+                    and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"waitall: {len(pending)} pending")
+            if pending:
+                time.sleep(0)
+
+    # ------------------------------------------------------------------
+    def barrier(self) -> None:
+        self._barrier.wait()
+
+    def win_allocate(self, name: str, win_size: int) -> Window:
+        """Collective window creation: root creates, others open-poll."""
+        if self.rank == 0:
+            w = Window(self.arena, name, self.size, self.rank, win_size,
+                       create=True)
+        else:
+            t0 = time.monotonic()
+            while True:
+                try:
+                    w = Window(self.arena, name, self.size, self.rank,
+                               win_size, create=False)
+                    break
+                except FileNotFoundError:
+                    if time.monotonic() - t0 > 30.0:
+                        raise
+                    time.sleep(0.0005)
+        self.barrier()
+        return w

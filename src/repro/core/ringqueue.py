@@ -1,0 +1,206 @@
+"""SPSC message ring queues + the pairwise queue matrix (paper §3.3).
+
+CXL pooled memory cannot provide cross-host atomic RMW, so MPICH's MPSC /
+MPMC lock-free queues (CAS-based) do not work. The paper's fix: one
+Single-Producer Single-Consumer ring queue PER (sender, receiver) PAIR.
+Enqueue is executed only by the producer (owns ``tail``), dequeue only by
+the consumer (owns ``head``) — every control word has exactly one writer,
+so plain stores + the coherence protocol suffice.
+
+Queue region layout (cacheline-separated control words to avoid false
+sharing; control words use non-temporal access per §3.5):
+
+  0:8     tail   (producer-owned: next cell to fill)
+  64:72   head   (consumer-owned: next cell to drain)
+  128:    cells  n_cells x cell_stride
+            cell: [len u32 | flags u32 | payload cell_size]
+
+Messages larger than ``cell_size`` are split into cell-sized chunks sent
+sequentially (paper §4.3 studies the cell-size threshold; default 16 KB,
+optimal 64 KB — reproduced in benchmarks/fig9_cellsize.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.coherence import CoherentView
+from repro.core.pool import CACHELINE
+
+_T_TAIL = 0
+_T_HEAD = 64
+_CELLS = 128
+
+FLAG_FIRST = 1      # first chunk of a message (payload starts with header)
+FLAG_LAST = 2
+
+DEFAULT_CELL_SIZE = 16 * 1024      # MPICH default (paper §4.3)
+OPTIMAL_CELL_SIZE = 64 * 1024      # paper's tuned value
+
+
+def cell_stride(cell_size: int) -> int:
+    s = 8 + cell_size
+    return s + (-s) % CACHELINE
+
+
+def queue_bytes(cell_size: int, n_cells: int) -> int:
+    return _CELLS + n_cells * cell_stride(cell_size)
+
+
+class SPSCQueue:
+    """One direction of one (sender, receiver) pair.
+
+    The producer instantiates with ``producer=True`` and only enqueues; the
+    consumer with ``producer=False`` and only dequeues. Both sides may be
+    instantiated in different processes mapping the same pool region.
+    """
+
+    def __init__(self, view: CoherentView, base: int, cell_size: int,
+                 n_cells: int, *, producer: bool, initialize: bool = False):
+        self.view = view
+        self.base = base
+        self.cell_size = cell_size
+        self.n_cells = n_cells
+        self.stride = cell_stride(cell_size)
+        self.producer = producer
+        if initialize:
+            view.nt_store_u64(base + _T_TAIL, 0)
+            view.nt_store_u64(base + _T_HEAD, 0)
+        # the owned index is cached locally (single writer => local copy is
+        # authoritative); the foreign index is always nt-loaded.
+        self._local_idx = view.nt_load_u64(
+            base + (_T_TAIL if producer else _T_HEAD))
+
+    # ---------------- producer ----------------
+    def try_enqueue(self, payload: bytes, flags: int = 0) -> bool:
+        assert self.producer and len(payload) <= self.cell_size
+        tail = self._local_idx
+        head = self.view.nt_load_u64(self.base + _T_HEAD)
+        if tail - head >= self.n_cells:
+            return False                       # full
+        cell = self.base + _CELLS + (tail % self.n_cells) * self.stride
+        hdr = len(payload).to_bytes(4, "little") + flags.to_bytes(4, "little")
+        self.view.write_release(cell, hdr + payload)
+        # publish AFTER the cell is flushed (store-release ordering)
+        self._local_idx = tail + 1
+        self.view.nt_store_u64(self.base + _T_TAIL, tail + 1)
+        return True
+
+    def enqueue(self, payload: bytes, flags: int = 0,
+                timeout: float | None = None) -> None:
+        t0 = time.monotonic()
+        while not self.try_enqueue(payload, flags):
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError("SPSC enqueue timed out")
+            time.sleep(0)
+
+    # ---------------- consumer ----------------
+    def try_dequeue(self) -> tuple[bytes, int] | None:
+        assert not self.producer
+        head = self._local_idx
+        tail = self.view.nt_load_u64(self.base + _T_TAIL)
+        if head >= tail:
+            return None                        # empty
+        cell = self.base + _CELLS + (head % self.n_cells) * self.stride
+        hdr = self.view.read_acquire(cell, 8)
+        n = int.from_bytes(hdr[:4], "little")
+        flags = int.from_bytes(hdr[4:], "little")
+        payload = self.view.read_acquire(cell + 8, n) if n else b""
+        self._local_idx = head + 1
+        self.view.nt_store_u64(self.base + _T_HEAD, head + 1)
+        return payload, flags
+
+    def dequeue(self, timeout: float | None = None) -> tuple[bytes, int]:
+        t0 = time.monotonic()
+        while True:
+            out = self.try_dequeue()
+            if out is not None:
+                return out
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError("SPSC dequeue timed out")
+            time.sleep(0)
+
+    # ---------------- message framing (chunked, paper §4.3) ----------------
+    # first chunk payload: [total_len u64 | tag u64 | data...]
+    _MSG_HDR = 16
+
+    def send_message(self, data: bytes, tag: int = 0,
+                     timeout: float | None = None) -> int:
+        """Chunk ``data`` into cells; returns number of cells used."""
+        first_room = self.cell_size - self._MSG_HDR
+        head = (len(data).to_bytes(8, "little")
+                + int(tag).to_bytes(8, "little") + data[:first_room])
+        rest = data[first_room:]
+        chunks = [head]
+        for i in range(0, len(rest), self.cell_size):
+            chunks.append(rest[i:i + self.cell_size])
+        for i, ch in enumerate(chunks):
+            flags = (FLAG_FIRST if i == 0 else 0) | \
+                    (FLAG_LAST if i == len(chunks) - 1 else 0)
+            self.enqueue(ch, flags, timeout=timeout)
+        return len(chunks)
+
+    def recv_message(self, timeout: float | None = None) -> tuple[bytes, int]:
+        payload, flags = self.dequeue(timeout=timeout)
+        if not flags & FLAG_FIRST:
+            raise RuntimeError("SPSC framing error: expected FIRST chunk")
+        total = int.from_bytes(payload[:8], "little")
+        tag = int.from_bytes(payload[8:16], "little")
+        parts = [payload[16:]]
+        got = len(payload) - 16
+        while got < total:
+            p, fl = self.dequeue(timeout=timeout)
+            parts.append(p)
+            got += len(p)
+        return b"".join(parts)[:total], tag
+
+
+class QueueMatrix:
+    """n x n SPSC queues in one contiguous region (paper Fig: message queue
+    matrix indexed by [receiver][sender]).
+
+    Rank r's RECEIVE queues are row r (r consumes); its SEND queue toward
+    rank d is (d, r) (r produces). Any rank locates any queue by address
+    arithmetic — the Arena lesson: no data motion, just layout."""
+
+    def __init__(self, view: CoherentView, base: int, n_ranks: int, rank: int,
+                 cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
+                 *, initialize: bool = False):
+        self.view = view
+        self.base = base
+        self.n = n_ranks
+        self.rank = rank
+        self.cell_size = cell_size
+        self.n_cells = n_cells
+        self.qb = queue_bytes(cell_size, n_cells)
+        if initialize:
+            for recv in range(n_ranks):
+                for send in range(n_ranks):
+                    b = self._qbase(recv, send)
+                    view.nt_store_u64(b + _T_TAIL, 0)
+                    view.nt_store_u64(b + _T_HEAD, 0)
+        self._send: dict[int, SPSCQueue] = {}
+        self._recv: dict[int, SPSCQueue] = {}
+
+    @staticmethod
+    def region_bytes(n_ranks: int, cell_size: int, n_cells: int) -> int:
+        return n_ranks * n_ranks * queue_bytes(cell_size, n_cells)
+
+    def _qbase(self, recv: int, send: int) -> int:
+        return self.base + (recv * self.n + send) * self.qb
+
+    def send_queue(self, dest: int) -> SPSCQueue:
+        q = self._send.get(dest)
+        if q is None:
+            q = SPSCQueue(self.view, self._qbase(dest, self.rank),
+                          self.cell_size, self.n_cells, producer=True)
+            self._send[dest] = q
+        return q
+
+    def recv_queue(self, src: int) -> SPSCQueue:
+        q = self._recv.get(src)
+        if q is None:
+            q = SPSCQueue(self.view, self._qbase(self.rank, src),
+                          self.cell_size, self.n_cells, producer=False)
+            self._recv[src] = q
+        return q

@@ -1,0 +1,136 @@
+"""One-sided communication over shared memory (paper §3.2, §3.4).
+
+A window is ONE arena object sized ``n_ranks * win_size`` laid out
+contiguously across ranks (rank i's segment = [i*win_size, (i+1)*win_size)),
+exactly the MPI_Win_allocate_shared layout — so any rank computes any other
+rank's window address from local information only (base + rank * win_size).
+
+``MPI_Put`` is a plain write_release into the target segment; ``MPI_Get`` a
+read_acquire from it. No network, no protocol stack, no target-side
+involvement — the entire point of the paper.
+
+Synchronization (paper §3.4) lives in a companion object created with the
+window: PSCW flag matrices, a seq-number fence barrier, and an RW window
+lock — all atomics-free.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.arena import Arena, ObjHandle
+from repro.core.sync import PSCW, RWLock, SeqBarrier
+
+
+class Window:
+    """cMPI RMA window for a communicator of ``n_ranks``."""
+
+    def __init__(self, arena: Arena, name: str, n_ranks: int, rank: int,
+                 win_size: int, *, create: bool):
+        self.arena = arena
+        self.name = name
+        self.n = n_ranks
+        self.rank = rank
+        self.win_size = win_size
+        sync_bytes = (SeqBarrier.region_bytes(n_ranks)
+                      + PSCW.region_bytes(n_ranks)
+                      + RWLock.region_bytes(n_ranks) + 192)
+        if create:
+            self.data: ObjHandle = arena.create(f"{name}:w", n_ranks * win_size)
+            self.sync: ObjHandle = arena.create(f"{name}:s", sync_bytes)
+        else:
+            self.data = arena.open(f"{name}:w")
+            self.sync = arena.open(f"{name}:s")
+        v = arena.view
+        b = self.sync.offset
+        fence_off = b
+        b += SeqBarrier.region_bytes(n_ranks)
+        b += (-b) % 64
+        pscw_off = b
+        b += PSCW.region_bytes(n_ranks)
+        b += (-b) % 64
+        lock_off = b
+        self._fence = SeqBarrier(v, fence_off, n_ranks, rank,
+                                 initialize=create)
+        self._pscw = PSCW(v, pscw_off, n_ranks, rank, initialize=create)
+        self._lock = RWLock(v, lock_off, n_ranks, rank, initialize=create)
+
+    # ------------------------------------------------------------------
+    # address arithmetic (the MPI_Win_allocate_shared layout)
+    # ------------------------------------------------------------------
+    def _addr(self, target: int, disp: int, n: int) -> int:
+        if not 0 <= target < self.n:
+            raise IndexError(f"target {target}")
+        if disp < 0 or disp + n > self.win_size:
+            raise IndexError(f"displacement [{disp}, {disp + n}) beyond "
+                             f"window of {self.win_size}")
+        return self.data.offset + target * self.win_size + disp
+
+    # ------------------------------------------------------------------
+    # RMA operations
+    # ------------------------------------------------------------------
+    def put(self, target: int, disp: int, data: bytes) -> None:
+        self.arena.view.write_release(self._addr(target, disp, len(data)),
+                                      bytes(data))
+
+    def get(self, target: int, disp: int, n: int) -> bytes:
+        return self.arena.view.read_acquire(self._addr(target, disp, n), n)
+
+    def put_array(self, target: int, disp: int, arr: np.ndarray) -> None:
+        self.put(target, disp, np.ascontiguousarray(arr).tobytes())
+
+    def get_array(self, target: int, disp: int, shape, dtype) -> np.ndarray:
+        n = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        return np.frombuffer(self.get(target, disp, n),
+                             dtype=dtype).reshape(shape).copy()
+
+    def accumulate(self, target: int, disp: int, arr: np.ndarray,
+                   op=np.add) -> None:
+        """MPI_Accumulate. CXL pooled memory has no cross-host atomics, so
+        atomicity comes from the window lock (paper §3.5 motivation)."""
+        self._lock.acquire_excl()
+        try:
+            cur = self.get_array(target, disp, arr.shape, arr.dtype)
+            self.put_array(target, disp, op(cur, arr))
+        finally:
+            self._lock.release_excl()
+
+    # ------------------------------------------------------------------
+    # synchronization (paper §3.4)
+    # ------------------------------------------------------------------
+    def fence(self) -> None:
+        """Collective epoch separator (MPI_Win_fence)."""
+        self._fence.wait()
+
+    # PSCW
+    def post(self, origins: list[int]) -> None:
+        self._pscw.post(origins)
+
+    def start(self, targets: list[int]) -> None:
+        self._pscw.start(targets)
+
+    def complete(self, targets: list[int]) -> None:
+        self._pscw.complete(targets)
+
+    def wait(self, origins: list[int]) -> None:
+        self._pscw.wait(origins)
+
+    # lock-unlock
+    def lock(self, shared: bool = False) -> None:
+        if shared:
+            self._lock.acquire_shared()
+        else:
+            self._lock.acquire_excl()
+
+    def unlock(self, shared: bool = False) -> None:
+        if shared:
+            self._lock.release_shared()
+        else:
+            self._lock.release_excl()
+
+    def free(self) -> None:
+        if self.rank == 0:
+            try:
+                self.arena.destroy(self.data)
+                self.arena.destroy(self.sync)
+            except FileNotFoundError:
+                pass

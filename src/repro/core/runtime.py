@@ -1,0 +1,149 @@
+"""Multi-rank runtimes for the cMPI library.
+
+* ``run_threads``  — N ranks as threads over ONE pool. With
+  ``coherent=True`` the pool is a plain LocalPool (threads on one host are
+  coherent, like processes on one x86 node). With ``coherent=False`` every
+  rank gets a PRIVATE write-back cache over the shared backing pool — the
+  executable model of the paper's non-coherent CXL platform; the
+  software-coherence protocol in core/* is then load-bearing.
+
+* ``run_processes`` — N ranks as real processes over a
+  multiprocessing SharedMemoryPool. This is the measurement configuration
+  for the OSU-style benchmarks (real memory fabric vs. real TCP sockets).
+
+Both return per-rank results and re-raise the first rank failure.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+import traceback
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.core.arena import Arena
+from repro.core.pool import IncoherentPool, LocalPool, Pool, RankCache, \
+    SharedMemoryPool
+from repro.core.pt2pt import Communicator
+
+
+@dataclass
+class RankEnv:
+    rank: int
+    size: int
+    arena: Arena
+    comm: Communicator
+
+
+def _make_arena(pool: Pool, rank: int, coherent: bool,
+                arena_kw: dict) -> Arena:
+    if coherent:
+        return Arena(pool, rank, mode="coherent",
+                     initialize=(rank == 0), **arena_kw)
+    cache = RankCache(pool)
+    inc = IncoherentPool(pool, cache)
+    return Arena(inc, rank, mode="incoherent",
+                 initialize=(rank == 0), **arena_kw)
+
+
+def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
+                pool_bytes: int = 8 << 20, coherent: bool = True,
+                cell_size: int = 4096, n_cells: int = 8,
+                arena_kw: dict | None = None,
+                timeout: float = 60.0) -> list[Any]:
+    pool = LocalPool(pool_bytes)
+    arena_kw = arena_kw or {}
+    results: list[Any] = [None] * size
+    errors: list[tuple[int, BaseException, str]] = []
+    gate = threading.Barrier(size)
+
+    # rank 0 must initialize the arena before others map it
+    arenas: list[Arena | None] = [None] * size
+    arenas[0] = _make_arena(pool, 0, coherent, arena_kw)
+    for r in range(1, size):
+        arenas[r] = _make_arena(pool, r, coherent, arena_kw)
+
+    def worker(rank: int):
+        try:
+            comm = Communicator(arenas[rank], rank, size,
+                                cell_size=cell_size, n_cells=n_cells)
+            gate.wait(timeout)
+            results[rank] = fn(RankEnv(rank, size, arenas[rank], comm))
+        except BaseException as e:  # noqa: BLE001 — reported to the caller
+            errors.append((rank, e, traceback.format_exc()))
+
+    threads = [threading.Thread(target=worker, args=(r,), daemon=True)
+               for r in range(size)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    alive = [t for t in threads if t.is_alive()]
+    if alive:
+        raise TimeoutError(f"{len(alive)} ranks still running "
+                           f"(deadlock?); errors so far: {errors}")
+    if errors:
+        rank, e, tb = errors[0]
+        raise RuntimeError(f"rank {rank} failed:\n{tb}") from e
+    return results
+
+
+# --------------------------------------------------------------------------
+# real processes over real shared memory
+# --------------------------------------------------------------------------
+
+def _proc_entry(shm_name: str, rank: int, size: int, fn, cell_size: int,
+                n_cells: int, arena_kw: dict, q: mp.Queue):
+    try:
+        pool = SharedMemoryPool(0, name=shm_name, create=False)
+        arena = Arena(pool, rank, mode="coherent", initialize=False,
+                      **arena_kw)
+        comm = Communicator(arena, rank, size, cell_size=cell_size,
+                            n_cells=n_cells)
+        out = fn(RankEnv(rank, size, arena, comm))
+        q.put((rank, "ok", out))
+        pool.close()
+    except BaseException:  # noqa: BLE001
+        q.put((rank, "err", traceback.format_exc()))
+
+
+def run_processes(size: int, fn: Callable[[RankEnv], Any], *,
+                  pool_bytes: int = 64 << 20,
+                  cell_size: int = 16384, n_cells: int = 8,
+                  arena_kw: dict | None = None,
+                  timeout: float = 120.0) -> list[Any]:
+    arena_kw = arena_kw or {}
+    pool = SharedMemoryPool(pool_bytes, create=True)
+    try:
+        # rank 0's arena initialization happens in the parent so children
+        # never race on the header
+        Arena(pool, 0, mode="coherent", initialize=True, **arena_kw)
+        ctx = mp.get_context("fork")
+        q: mp.Queue = ctx.Queue()
+        procs = [ctx.Process(target=_proc_entry,
+                             args=(pool.name, r, size, fn, cell_size,
+                                   n_cells, arena_kw, q), daemon=True)
+                 for r in range(size)]
+        for p in procs:
+            p.start()
+        results: list[Any] = [None] * size
+        got = 0
+        errs = []
+        while got < size:
+            rank, status, payload = q.get(timeout=timeout)
+            got += 1
+            if status == "ok":
+                results[rank] = payload
+            else:
+                errs.append((rank, payload))
+        for p in procs:
+            p.join(timeout=10)
+            if p.is_alive():
+                p.terminate()
+        if errs:
+            raise RuntimeError(
+                f"rank {errs[0][0]} failed:\n{errs[0][1]}")
+        return results
+    finally:
+        pool.close()
+        pool.unlink()

@@ -1,0 +1,7 @@
+from repro.distributed.context import DistContext  # noqa: F401
+from repro.distributed.sharding import (  # noqa: F401
+    batch_pspecs,
+    decode_state_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+)

@@ -1,0 +1,149 @@
+"""DistContext — the model's view of the mesh.
+
+Carries the mesh + axis names and provides:
+  * ``constrain_act``      — canonical activation sharding constraint
+  * ``vp_embed``           — vocab-parallel embedding lookup (shard_map):
+                             address arithmetic over the local vocab shard +
+                             psum; the gathered table never materializes.
+  * ``vp_cross_entropy``   — vocab-parallel softmax CE (shard_map): local
+                             logits shard + pmax/psum reductions.
+
+This is the Arena lesson from the paper applied to TPU: replace data motion
+(all-gather of a 256k-row table) with address arithmetic on a shared layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import axis_size, dp_axes
+
+
+@dataclass(frozen=True)
+class DistContext:
+    mesh: Any
+    batch_shardable: bool = True   # False when global_batch % dp != 0
+
+    # ------------------------------------------------------------------
+    @property
+    def dp(self) -> tuple[str, ...]:
+        return dp_axes(self.mesh)
+
+    @property
+    def model_size(self) -> int:
+        return axis_size(self.mesh, "model")
+
+    @property
+    def bspec(self):
+        return self.dp if (self.dp and self.batch_shardable) else None
+
+    def constrain_act(self, x):
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(self.bspec, *([None] * (x.ndim - 1)))))
+
+    def constrain_seq(self, x):
+        """Context parallelism: dim 1 (sequence) sharded over 'model'.
+        Used to shard attention scores when heads cannot split the TP axis
+        (e.g. smollm's 9 heads over 16-way model)."""
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh,
+                             P(self.bspec, "model",
+                               *([None] * (x.ndim - 2)))))
+
+    def constrain_kv(self, x):
+        """Decode KV cache (B, KV, S, Dh): S sharded over 'model'."""
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(self.bspec, None, "model", None)))
+
+    def constrain_scores(self, x):
+        """Decode scores (B, H, 1, S): S sharded over 'model'."""
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(self.bspec, None, None, "model")))
+
+    def vocab_parallel(self, cfg: ModelConfig) -> bool:
+        return (cfg.vocab_parallel and self.model_size > 1
+                and cfg.padded_vocab % self.model_size == 0)
+
+    # ------------------------------------------------------------------
+    def vp_embed(self, table, tokens, cfg: ModelConfig):
+        V = cfg.padded_vocab
+        shard = V // self.model_size
+        cdt = jnp.dtype(cfg.compute_dtype)
+
+        def f(tab, tok):
+            idx = lax.axis_index("model")
+            local = tok - idx * shard
+            ok = (local >= 0) & (local < shard)
+            x = jnp.take(tab, jnp.clip(local, 0, shard - 1), axis=0)
+            x = jnp.where(ok[..., None], x.astype(cdt), 0)
+            return lax.psum(x, "model")
+
+        return jax.shard_map(
+            f, mesh=self.mesh,
+            in_specs=(P("model", None), P(self.bspec, None)),
+            out_specs=P(self.bspec, None, None))(table, tokens)
+
+    # ------------------------------------------------------------------
+    def vp_cross_entropy(self, head, x, labels, cfg: ModelConfig):
+        """Returns per-token CE (B, S) without materializing full logits."""
+        V = cfg.padded_vocab
+        shard = V // self.model_size
+        vocab = cfg.vocab_size
+
+        def f(hd, xx, lab):
+            idx = lax.axis_index("model")
+            logits = jnp.einsum("bsd,vd->bsv", xx, hd.astype(xx.dtype),
+                                preferred_element_type=jnp.float32)
+            gidx = idx * shard + jnp.arange(shard)
+            logits = jnp.where(gidx[None, None] < vocab, logits, -1e30)
+            # m is a constant shift (lse identity holds for any constant);
+            # stop_gradient BEFORE pmax: zero tangent in -> pmax's missing
+            # JVP rule is never invoked.
+            m = lax.pmax(lax.stop_gradient(logits.max(axis=-1)), "model")
+            s = lax.psum(jnp.exp(logits - m[..., None]).sum(axis=-1), "model")
+            local = lab - idx * shard
+            ok = (local >= 0) & (local < shard)
+            ll = jnp.take_along_axis(
+                logits, jnp.clip(local, 0, shard - 1)[..., None], axis=-1)[..., 0]
+            ll = lax.psum(jnp.where(ok, ll, 0.0), "model")
+            return jnp.log(s) + m - ll
+
+        return jax.shard_map(
+            f, mesh=self.mesh,
+            in_specs=(P("model", None), P(self.bspec, None, None),
+                      P(self.bspec, None)),
+            out_specs=P(self.bspec, None))(head, x, labels)
+
+    # ------------------------------------------------------------------
+    def vp_greedy_token(self, head, x, cfg: ModelConfig):
+        """Greedy next token WITHOUT materializing (B, V) logits on any
+        device: local argmax per vocab shard + tiny cross-shard reductions
+        (2 scalars/row of wire, vs V floats for a gathered-logits decode)."""
+        V = cfg.padded_vocab
+        shard = V // self.model_size
+        vocab = cfg.vocab_size
+
+        def f(hd, xx):
+            idx = lax.axis_index("model")
+            logits = jnp.einsum("bd,vd->bv", xx, hd.astype(xx.dtype),
+                                preferred_element_type=jnp.float32)
+            gidx = idx * shard + jnp.arange(shard)
+            logits = jnp.where(gidx[None] < vocab, logits, -jnp.inf)
+            lmax = logits.max(axis=-1)
+            larg = jnp.argmax(logits, axis=-1).astype(jnp.int32) \
+                + idx * shard
+            gmax = lax.pmax(lmax, "model")
+            cand = jnp.where(lmax >= gmax, larg, jnp.int32(V))
+            return lax.pmin(cand, "model")
+
+        return jax.shard_map(
+            f, mesh=self.mesh,
+            in_specs=(P("model", None), P(self.bspec, None)),
+            out_specs=P(self.bspec))(head, x)

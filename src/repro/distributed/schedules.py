@@ -1,0 +1,121 @@
+"""cMPI-adapted cross-pod collective schedules.
+
+The paper's core systems lesson — route traffic over the cheapest
+memory-like fabric and keep the expensive hop THIN — maps onto a multi-pod
+TPU mesh as hierarchical gradient synchronization:
+
+    in-pod reduce-scatter (fast ICI, full bytes)
+      -> cross-pod all-reduce on 1/|data| of the bytes (thin hop),
+         optionally int8-compressed (compression.py)
+      -> in-pod all-gather (fast ICI)
+
+vs. the flat all-reduce over all (pod x data) devices that a naive mesh
+spec produces. ``sync_grads`` is called INSIDE shard_map (axis names in
+scope). ``make_cmpi_train_step`` builds a demonstration train step that
+computes per-shard grads under shard_map over the dp axes and synchronizes
+them explicitly — the device-level mirror of core/collectives.py. Params
+are replicated across dp inside this step, so it targets the <=1.5B-class
+archs (smollm, granite); the >8B archs keep GSPMD sharding where XLA's
+hierarchical decomposition applies.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import compression as C
+from repro.models import lm
+from repro.train import optimizer as opt
+
+
+def sync_grads(grads, *, data_axis: str = "data",
+               pod_axis: str | None = "pod",
+               compression: str = "none"):
+    """Hierarchical gradient all-reduce; call inside shard_map.
+
+    Every leaf: reduce-scatter in-pod over ``data_axis`` (leaf flattened,
+    padded to the axis size), cross-pod (all-)reduce on the shard —
+    optionally int8 — then all-gather in-pod and reshape back.
+    """
+    dsize = lax.axis_size(data_axis)
+
+    def leaf(g):
+        gf = g.astype(jnp.float32).reshape(-1)
+        pad = (-gf.size) % dsize
+        if pad:
+            gf = jnp.concatenate([gf, jnp.zeros(pad, jnp.float32)])
+        shard = lax.psum_scatter(gf.reshape(dsize, -1), data_axis,
+                                 scatter_dimension=0, tiled=False)
+        if pod_axis is not None:
+            if compression == "int8":
+                shard = C.psum_int8(shard, pod_axis)
+            else:
+                shard = lax.psum(shard, pod_axis)
+        full = lax.all_gather(shard, data_axis, axis=0, tiled=False)
+        return full.reshape(-1)[:g.size].reshape(g.shape)
+
+    return jax.tree.map(leaf, grads)
+
+
+def make_cmpi_train_step(cfg, shape, mesh, *, oc=None,
+                         compression: str = "none"):
+    """shard_map train step with EXPLICIT cMPI-style gradient sync.
+
+    Batch is sharded over the dp axes; params/opt-state replicated (this
+    demonstration targets small archs). Loss is the LOCAL mean; grads are
+    synchronized by ``sync_grads`` (mean over shards folded into the psum)
+    — no GSPMD-inserted gradient collectives.
+    """
+    oc = oc or opt.for_model(cfg)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    pod_axis = "pod" if "pod" in mesh.shape else None
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    assert shape.global_batch % dp_total == 0
+
+    def local_step(params, opt_state, batch):
+        def loss_fn(p):
+            total, metrics = lm.loss_fn(p, cfg, batch, dist=None)
+            return total, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        # hierarchical sync: data-axis RS/AG + thin (compressed) pod hop.
+        # in-pod mean: psum_scatter sums over data; divide by dp_total.
+        grads = sync_grads(grads, data_axis=dp[-1], pod_axis=pod_axis,
+                           compression=compression)
+        grads = jax.tree.map(lambda g: g / dp_total, grads)
+        loss = lax.pmean(loss, dp)
+        metrics = jax.tree.map(lambda m: lax.pmean(m, dp), metrics)
+        new_params, new_opt, om = opt.apply_updates(oc, params, grads,
+                                                    opt_state)
+        return new_params, new_opt, dict(metrics, loss=loss, **om)
+
+    bspec = {k: P(dp, *([None] * extra))
+             for k, extra in (("tokens", 1), ("labels", 1))}
+    if cfg.frontend == "frames":
+        bspec = {"frames": P(dp, None, None), "labels": P(dp, None)}
+    if cfg.n_ctx_tokens:
+        bspec["ctx"] = P(dp, None, None)
+
+    rep = P()
+    pspec = jax.tree.map(lambda _: rep, lm.param_specs(cfg))
+    osspec = jax.tree.map(lambda _: rep,
+                          opt.state_specs(oc, lm.param_specs(cfg)))
+    mspec = {k: rep for k in ("loss", "aux", "tokens", "grad_norm", "lr")}
+
+    fn = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(pspec, osspec, bspec),
+        out_specs=(pspec, osspec, mspec),
+        check_vma=False)
+    shardings = tuple(
+        jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                     is_leaf=lambda x: isinstance(x, P))
+        for t in ((pspec, osspec, bspec), (pspec, osspec, mspec)))
+    return fn, shardings[0], shardings[1]

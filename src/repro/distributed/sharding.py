@@ -1,0 +1,226 @@
+"""Divisibility-aware sharding rules.
+
+The mesh is 2D ``("data","model")`` or 3D ``("pod","data","model")``.
+Weights are tensor-parallel over ``model`` on flattened projection dims (so
+TP never depends on head-count divisibility), optionally FSDP-sharded over
+``data`` (HSDP: parameters are replicated across pods and FSDP-sharded
+*within* a pod — the cMPI lesson that the expensive inter-pod fabric should
+carry thin traffic, not weight gathers). Any rule whose dim is not divisible
+by the axis size falls back to replication for that dim — GSPMD tolerates
+uneven shardings on constraints, but we keep *parameter* shardings exact so
+checkpointing shards stay rectangular.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import lm
+
+
+def axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _maybe(mesh, axis: Optional[str], dim: int) -> Optional[str]:
+    """axis if dim is divisible by its size (and axis exists) else None."""
+    if axis is None:
+        return None
+    sz = axis_size(mesh, axis)
+    if sz > 1 and dim % sz == 0:
+        return axis
+    return None
+
+
+def param_pspecs(cfg: ModelConfig, mesh, *, serve: bool = False) -> Any:
+    """PartitionSpec pytree matching lm.init(cfg).
+
+    ``serve=True`` drops FSDP unless cfg.serve_fsdp: a serving step reads
+    every weight every step, so data-axis sharding of params turns into a
+    per-step all-gather of the full model (measured: the dominant decode
+    collective, see EXPERIMENTS.md §Perf cell B). TP-only layouts keep
+    weights resident."""
+    specs = lm.param_specs(cfg)
+    use_fsdp = cfg.fsdp and (cfg.serve_fsdp or not serve)
+    fsdp = "data" if (use_fsdp and "data" in mesh.shape) else None
+    m = "model" if "model" in mesh.shape else None
+
+    def block_rule(path: str, shape) -> P:
+        d = dict  # noqa: E731 (readability only)
+        dims = shape.shape
+        # all block leaves have leading n_groups dim
+        if "norm" in path or path.endswith(("mix_k", "mix_r", "mix_x", "w0",
+                                            "dt_bias", "conv_b", "D", "u")):
+            if path.endswith(("w0", "dt_bias", "conv_b", "D")):
+                return P(None, _maybe(mesh, m, dims[1]))
+            return P(*([None] * len(dims)))
+        if path.endswith(("wq", "w_gate", "w_up", "in_proj", "cm_k")) \
+                and len(dims) == 3:
+            if cfg.fsdp_dim == "output" and fsdp:
+                # ZeRO-3: stack (model, data) on the OUTPUT dim — XLA
+                # gathers the (small) weight shards just-in-time instead of
+                # all-reducing activation-sized partial sums over data
+                both = _maybe(mesh, m, dims[2])
+                if both and dims[2] % (axis_size(mesh, m)
+                                       * axis_size(mesh, fsdp)) == 0:
+                    return P(None, None, (m, fsdp))
+                return P(None, None, both)
+            return P(None, _maybe(mesh, fsdp, dims[1]), _maybe(mesh, m, dims[2]))
+        if path.endswith(("wk", "wv")):
+            if cfg.fsdp_dim == "output" and fsdp:
+                both = _maybe(mesh, m, dims[2])
+                if both and dims[2] % (axis_size(mesh, m)
+                                       * axis_size(mesh, fsdp)) == 0:
+                    return P(None, None, (m, fsdp))
+                return P(None, _maybe(mesh, fsdp, dims[1]) if not both
+                         else None, both)
+            return P(None, _maybe(mesh, fsdp, dims[1]), _maybe(mesh, m, dims[2]))
+        if path.endswith(("wo", "w_down", "out_proj", "cm_v")) and len(dims) == 3:
+            return P(None, _maybe(mesh, m, dims[1]), _maybe(mesh, fsdp, dims[2]))
+        if path.endswith(("wr", "wg", "cm_r")):
+            return P(None, _maybe(mesh, fsdp, dims[1]), _maybe(mesh, m, dims[2]))
+        if path.endswith("router"):
+            return P(None, _maybe(mesh, fsdp, dims[1]), None)
+        if path.endswith(("w_gate", "w_up")) and len(dims) == 4:  # moe (G,E,D,F)
+            if cfg.moe_shard == "ffn":
+                # per-expert TP over d_ff: dispatch stays device-local;
+                # comm collapses to the dense-FFN all-reduce pattern
+                return P(None, None, _maybe(mesh, fsdp, dims[2]),
+                         _maybe(mesh, m, dims[3]))
+            if cfg.fsdp_dim == "output":
+                # fsdp on the OUTPUT dim F (not the contraction dim D)
+                return P(None, _maybe(mesh, m, dims[1]), None,
+                         _maybe(mesh, fsdp, dims[3]))
+            return P(None, _maybe(mesh, m, dims[1]), _maybe(mesh, fsdp, dims[2]),
+                     None)
+        if path.endswith("w_down") and len(dims) == 4:            # moe (G,E,F,D)
+            if cfg.moe_shard == "ffn":
+                return P(None, None, _maybe(mesh, m, dims[2]),
+                         _maybe(mesh, fsdp, dims[3]))
+            if cfg.fsdp_dim == "output":
+                return P(None, _maybe(mesh, m, dims[1]), None,
+                         _maybe(mesh, fsdp, dims[3]))
+            return P(None, _maybe(mesh, m, dims[1]), _maybe(mesh, fsdp, dims[2]),
+                     None)
+        if path.endswith("conv_w"):
+            return P(None, None, _maybe(mesh, m, dims[2]))
+        if path.endswith("x_proj"):
+            return P(None, _maybe(mesh, m, dims[1]), None)
+        if path.endswith("dt_proj"):
+            return P(None, None, _maybe(mesh, m, dims[2]))
+        if path.endswith("A_log"):
+            return P(None, _maybe(mesh, m, dims[1]), None)
+        if path.endswith(("w_a",)):
+            return P(None, _maybe(mesh, fsdp, dims[1]), None)
+        if path.endswith(("w_b",)):
+            return P(None, None, _maybe(mesh, m, dims[2]))
+        # default: replicate
+        return P(*([None] * len(dims)))
+
+    def rule(path_tuple, leaf) -> P:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_tuple)
+        if path.startswith(("embed", "head")):
+            return P(_maybe(mesh, m, leaf.shape[0]), None)
+        if path.startswith("final_norm"):
+            return P(None)
+        return block_rule(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, mesh) -> dict[str, P]:
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= axis_size(mesh, a)
+    bdim: Any = dp if (dp and shape.global_batch % dp_total == 0) else None
+    out: dict[str, P] = {}
+    if cfg.frontend == "frames":
+        out["frames"] = P(bdim, None, None)
+    else:
+        out["tokens"] = P(bdim, None)
+    if shape.kind == "train":
+        out["labels"] = P(bdim, None)
+    if cfg.n_ctx_tokens:
+        out["ctx"] = P(bdim, None, None)
+    return out
+
+
+def decode_state_pspecs(cfg: ModelConfig, shape: InputShape, mesh) -> Any:
+    """Specs for lm.decode_state_init output. KV caches are sharded over the
+    batch (data axes) and over sequence (model axis) — the flash-decoding
+    layout; when batch is unshardable (long_500k, B=1) the sequence dim takes
+    every axis."""
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= axis_size(mesh, a)
+    batch_ok = dp and shape.global_batch % dp_total == 0
+    bdim: Any = dp if batch_ok else None
+    seq_axes: Any = "model" if batch_ok else (dp + ("model",) if dp else "model")
+
+    state_specs = lm.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+
+    def rule(path_tuple, leaf) -> P:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_tuple)
+        dims = leaf.shape
+        if "/kv/" in path or path.endswith(("/k", "/v")):
+            # (G, B, KV, S, Dh) — shard seq; cross-attn ctx cache too
+            if cfg.kv_shard == "batch" and batch_ok:
+                # per-example local attention: every device holds the FULL
+                # sequence for its batch shard — no model-axis traffic in
+                # the decode inner loop (EXPERIMENTS.md §Perf cell B)
+                return P(None, bdim, None, None, None)
+            seq = dims[3]
+            ax = seq_axes
+            if isinstance(ax, tuple):
+                tot = 1
+                for a in ax:
+                    tot *= axis_size(mesh, a)
+                ax = ax if seq % tot == 0 else "model"
+            return P(None, bdim, None, _maybe(mesh, ax, seq)
+                     if isinstance(ax, str) else ax, None)
+        if path.endswith("k_scale") or path.endswith("v_scale"):
+            return P(None, bdim, None, None)
+        if path.endswith("/conv"):
+            return P(None, bdim, None, _maybe(mesh, "model", dims[3]))
+        if path.endswith("/h"):
+            return P(None, bdim, _maybe(mesh, "model", dims[2]), None)
+        if path.endswith("/S"):
+            return P(None, bdim, None, None, None)
+        if path.endswith(("x_prev", "cm_x_prev")):
+            return P(None, bdim, _maybe(mesh, "model", dims[2]))
+        return P(*([None] * len(dims)))
+
+    return jax.tree_util.tree_map_with_path(rule, state_specs)
+
+
+def opt_state_pspecs(cfg: ModelConfig, mesh, param_specs_tree, params_shape) -> Any:
+    """ZeRO-1: moment tensors take the param spec plus a ``data`` shard on the
+    first free divisible dim (optimizer state is never replicated over data)."""
+    del cfg
+
+    def zero1(spec: P, leaf) -> P:
+        if "data" not in mesh.shape:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        if any(p == "data" or (isinstance(p, tuple) and "data" in p)
+               for p in parts):
+            return spec
+        dsz = axis_size(mesh, "data")
+        for i, (p, dim) in enumerate(zip(parts, leaf.shape)):
+            if p is None and dim % dsz == 0 and dim >= dsz:
+                parts[i] = "data"
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(zero1, param_specs_tree, params_shape)

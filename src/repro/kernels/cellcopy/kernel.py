@@ -1,0 +1,70 @@
+"""Pallas cell-copy kernel — the TPU reading of cMPI's data plane.
+
+cMPI's hot loop is the CPU ``mov``-driven copy of message cells between a
+local buffer and the CXL pool, with a coherence epilogue per cell
+(paper §3.3, §4.3). On TPU the analogue of the 'message cell' is the VMEM
+block: HBM -> VMEM -> HBM chunked copy, double-buffered by the Pallas
+pipeline across grid steps, with a fused per-cell checksum standing in for
+the header/validity epilogue (so the consumer can verify a cell without a
+second pass over HBM).
+
+The BlockSpec cell shape is the tunable that reproduces the paper's Fig-9
+cell-size study as a TPU block-shape sweep (benchmarks/fig9_cellsize.py):
+too-small cells waste pipeline latency per cell, too-large cells overflow
+VMEM — same tradeoff, different memory hierarchy.
+
+Layout: messages are (n_cells, cell_bytes/4) int32 words, cell rows 128-
+word aligned (the MXU/VPU lane width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _cellcopy_body(src_ref, dst_ref, sum_ref):
+    """One grid step: copy `block_cells` cells and emit their checksums."""
+    data = src_ref[...]                       # (block_cells, words) int32
+    dst_ref[...] = data
+    # wrapping u32 sum per cell — the validity word the consumer checks
+    s = jnp.sum(data.astype(jnp.uint32), axis=1, dtype=jnp.uint32)
+    sum_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_cells", "interpret"))
+def cellcopy(src: jax.Array, *, block_cells: int = 8,
+             interpret: bool = True):
+    """Copy (n_cells, words) int32 cells; returns (dst, checksums u32).
+
+    ``block_cells`` cells ride one VMEM block per grid step; the Pallas
+    pipeline double-buffers the HBM->VMEM->HBM stream across steps.
+    """
+    n_cells, words = src.shape
+    assert n_cells % block_cells == 0, (n_cells, block_cells)
+    assert words % LANE == 0, f"cell words {words} not {LANE}-aligned"
+    grid = (n_cells // block_cells,)
+    return pl.pallas_call(
+        _cellcopy_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_cells, words), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_cells, words), lambda i: (i, 0)),
+            pl.BlockSpec((block_cells,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_cells, words), src.dtype),
+            jax.ShapeDtypeStruct((n_cells,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(src)
+
+
+def vmem_bytes(block_cells: int, words: int) -> int:
+    """VMEM working set claimed by one grid step (src + dst blocks,
+    double-buffered by the pipeline => x2)."""
+    return 2 * 2 * block_cells * words * 4

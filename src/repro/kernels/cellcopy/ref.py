@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the cellcopy kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cellcopy_ref(src: jax.Array):
+    dst = src
+    sums = jnp.sum(src.astype(jnp.uint32), axis=1, dtype=jnp.uint32)
+    return dst, sums

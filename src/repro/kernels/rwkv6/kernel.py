@@ -1,0 +1,101 @@
+"""Pallas chunked WKV6 (RWKV-6 'Finch') kernel.
+
+Recurrence (per head, n = head size):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state n x n)
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+The sequential oracle (models/blocks._wkv6_scan) is O(S) steps of rank-1
+updates — latency-bound on any hardware. The chunked-parallel form turns a
+chunk of L tokens into dense L x n / n x n matmuls (MXU food):
+
+  with P_t = prod_{j<=t} w_j (per-channel cumulative decay inside a chunk),
+    o_t   = (r_t * P_{t-1}) S_0                       <- inter-chunk
+          + sum_{i<t} [(r_t * P_{t-1}/P_i) . k_i] v_i <- intra-chunk
+          + (r_t * u . k_t) v_t                       <- current token
+    S_L   = diag(P_L) S_0 + sum_i (P_L / P_i * k_i) v_i^T
+
+Grid (B, H, n_chunks): the chunk axis is innermost/sequential, so the f32
+state S rides in VMEM scratch across chunk steps — the standard Pallas
+carry pattern. L is kept small (32) so the decay ratios P/P_i stay in f32
+range (w in (0,1); worst case w^-L).
+
+All math f32; inputs (r, k, v, w) are pre-projected (B, H, S, n) tensors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_body(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, L: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)       # (L, n)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)       # decay in (0, 1)
+    u = u_ref[0].astype(jnp.float32)          # (n,)
+    S0 = s_ref[...]                           # (n, n)
+
+    P = jnp.cumprod(w, axis=0)                # (L, n): prod_{j<=t} w_j
+    Pprev = jnp.concatenate([jnp.ones((1, P.shape[1]), jnp.float32),
+                             P[:-1]], axis=0)            # prod_{j<t}
+
+    rP = r * Pprev                            # (L, n)
+    # inter-chunk: (r_t * P_{t-1}) @ S0
+    o = jax.lax.dot_general(rP, S0, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk: att[t, i] = sum_c rP[t,c] * (k[i,c] / P[i,c]),  i < t
+    kP = k / P
+    att = jax.lax.dot_general(rP, kP, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (L, L)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    ij = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    att = jnp.where(ij < ti, att, 0.0)        # strictly lower triangular
+    o = o + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # current token bonus: (r_t * u . k_t) v_t
+    o = o + jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    # state update: S_L = diag(P_L) S0 + sum_i ((P_L / P_i) * k_i) v_i^T
+    kS = (P[-1][None, :] / P) * k             # (L, n)
+    s_new = P[-1][:, None] * S0 + jax.lax.dot_general(
+        kS, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (n, n)
+    s_ref[...] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 32,
+         interpret: bool = True) -> jax.Array:
+    """r,k,v,w: (B, H, S, n); u: (H, n). Returns (B, H, S, n) f32."""
+    b, h, s, n = r.shape
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    body = functools.partial(_wkv6_body, L=L)
+    return pl.pallas_call(
+        body,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, n), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, L, n), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, L, n), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, L, n), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, n), lambda b_, h_, c: (h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, n), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,26 @@
+"""Sequential oracle for WKV6 — numerically exact rank-1 recurrence.
+(Same math as models/blocks._wkv6_scan, re-exported in kernel layout.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B, H, S, n); u: (H, n) -> (B, H, S, n) f32."""
+    b, h, s, n = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                  # (b, h, n)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        o = jnp.einsum("bhn,bhnm->bhm", rt,
+                       state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, o
+
+    xs = tuple(a.transpose(2, 0, 1, 3).astype(jnp.float32)
+               for a in (r, k, v, w))
+    state0 = jnp.zeros((b, h, n, n), jnp.float32)
+    _, os_ = lax.scan(step, state0, xs)
+    return os_.transpose(1, 2, 0, 3)

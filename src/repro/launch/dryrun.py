@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), record memory analysis, cost
+analysis and collective traffic — the §Roofline source of truth.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init. Do not set that flag anywhere global (tests and benches
+must see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both            # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --variant ga1 --grad-accum 1
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis import hlo as H
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch import specs as SP
+from repro.launch.mesh import MESHES, make_production_mesh
+from repro.train import optimizer as opt
+from repro.train import steps as ST
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def lower_cell(cfg, shape, mesh, *, grad_accum=None, unroll=False):
+    """Returns (lowered, meta) for the cell's step function."""
+    if shape.kind == "train":
+        ts = ST.make_train_step(cfg, shape, mesh, grad_accum=grad_accum,
+                                unroll=unroll)
+        args = (SP.param_specs(cfg), SP.opt_state_specs(cfg),
+                SP.batch_specs(cfg, shape))
+        lowered = jax.jit(ts.fn, in_shardings=ts.in_shardings,
+                          out_shardings=ts.out_shardings).lower(*args)
+        return lowered, {"step": "train_step", "grad_accum": ts.grad_accum}
+    if shape.kind == "prefill":
+        ss = ST.make_serve_prefill(cfg, shape, mesh)
+        args = (SP.param_specs(cfg), SP.batch_specs(cfg, shape))
+        lowered = jax.jit(ss.fn, in_shardings=ss.in_shardings,
+                          out_shardings=ss.out_shardings).lower(*args)
+        return lowered, {"step": "serve_prefill"}
+    # decode
+    ss = ST.make_serve_decode(cfg, shape, mesh)
+    state, pos = SP.decode_specs(cfg, shape)
+    args = (SP.param_specs(cfg), state, SP.batch_specs(cfg, shape), pos)
+    lowered = jax.jit(ss.fn, in_shardings=ss.in_shardings,
+                      out_shardings=ss.out_shardings).lower(*args)
+    return lowered, {"step": "serve_decode"}
+
+
+def run_cell(arch: str, shape_name: str, mesh_key: str, *,
+             variant: str = "baseline", grad_accum=None, save_hlo=False,
+             overrides=None, preset: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    if preset == "optimized":
+        from repro.configs import optimized
+        cfg = optimized(cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    minfo = MESHES[mesh_key]
+    chips = minfo["chips"]
+
+    ok, why = shape_applicable(cfg, shape)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": minfo["tag"],
+        "chips": chips, "variant": variant,
+    }
+    if not ok:
+        rec["status"] = "skip"
+        rec["why"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=minfo["multi_pod"])
+    t0 = time.perf_counter()
+    lowered, meta = lower_cell(cfg, shape, mesh, grad_accum=grad_accum)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    rec.update(meta)
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        live = (rec["memory"].get("argument_size_in_bytes", 0)
+                + rec["memory"].get("temp_size_in_bytes", 0)
+                + rec["memory"].get("output_size_in_bytes", 0)
+                - rec["memory"].get("alias_size_in_bytes", 0))
+        rec["memory"]["live_bytes_per_device"] = int(live)
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    # NOTE: cost_analysis counts while bodies once — recorded for reference
+    # only; the roofline uses the trip-count-scaled HLO walk below.
+    rec["cost_analysis_unscaled"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    hlo_text = compiled.as_text()
+    st = H.analyze_module(hlo_text)
+    rec["collectives"] = {
+        "counts": st.coll_counts,
+        "wire_bytes": st.wire_bytes,
+        "top_ops": st.top_ops,
+        "total_wire_bytes_per_device": st.total_wire_bytes,
+        "unparsed_while": st.unparsed_while,
+    }
+    rec["top_bytes_ops"] = st.top_bytes_ops
+
+    roof = H.Roofline(
+        flops_per_device=st.flops,
+        bytes_per_device=st.bytes_,
+        wire_bytes_per_device=st.total_wire_bytes,
+        model_flops_per_device=H.model_flops(cfg, shape, chips),
+    )
+    rec["roofline"] = roof.as_dict()
+    rec["status"] = "ok"
+
+    if save_hlo:
+        p = ART / variant / minfo["tag"]
+        p.mkdir(parents=True, exist_ok=True)
+        with gzip.open(p / f"{arch}__{shape_name}.hlo.txt.gz", "wt") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def cell_path(variant: str, mesh_tag: str, arch: str, shape: str) -> Path:
+    return ART / variant / mesh_tag / f"{arch}__{shape}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=list(ARCHS))
+    ap.add_argument("--shape", nargs="*", default=list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--preset", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="cfg overrides key=value (e.g. remat=none)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "true"):
+            v = True
+        if v in ("False", "false"):
+            v = False
+        overrides[k] = v
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    total = ok = skip = fail = 0
+    for mesh_key in meshes:
+        for arch in args.arch:
+            for shape in args.shape:
+                total += 1
+                out = cell_path(args.variant, MESHES[mesh_key]["tag"], arch,
+                                shape)
+                if args.skip_existing and out.exists():
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[cached] {mesh_key:6s} {arch:24s} {shape}")
+                        ok += prev["status"] == "ok"
+                        skip += prev["status"] == "skip"
+                        continue
+                t0 = time.perf_counter()
+                try:
+                    rec = run_cell(arch, shape, mesh_key,
+                                   variant=args.variant,
+                                   grad_accum=args.grad_accum,
+                                   save_hlo=args.save_hlo,
+                                   overrides=overrides or None,
+                                   preset=args.preset)
+                except Exception as e:  # a failing cell is a bug — record it
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": MESHES[mesh_key]["tag"],
+                           "variant": args.variant, "status": "fail",
+                           "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                out.parent.mkdir(parents=True, exist_ok=True)
+                out.write_text(json.dumps(rec, indent=1))
+                dt = time.perf_counter() - t0
+                if rec["status"] == "ok":
+                    ok += 1
+                    r = rec["roofline"]
+                    mem = rec.get("memory", {}).get("live_bytes_per_device", 0)
+                    print(f"[ok {dt:6.1f}s] {mesh_key:6s} {arch:24s} "
+                          f"{shape:12s} mem/dev={mem/2**30:6.2f}GiB "
+                          f"c={r['compute_s']:.2e}s m={r['memory_s']:.2e}s "
+                          f"coll={r['collective_s']:.2e}s "
+                          f"dom={r['bottleneck']:10s} "
+                          f"frac={r['roofline_fraction']:.3f}", flush=True)
+                elif rec["status"] == "skip":
+                    skip += 1
+                    print(f"[skip] {mesh_key:6s} {arch:24s} {shape:12s} "
+                          f"{rec['why']}", flush=True)
+                else:
+                    fail += 1
+                    print(f"[FAIL {dt:6.1f}s] {mesh_key:6s} {arch:24s} "
+                          f"{shape:12s} {rec['error'][:200]}", flush=True)
+    print(f"\ndryrun: {ok} ok, {skip} skip, {fail} fail / {total} cells")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

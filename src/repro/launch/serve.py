@@ -1,0 +1,90 @@
+"""Serving driver: batched prefill + decode with a KV/state cache.
+
+CPU preset serves a REDUCED config; the same driver lowers the full config
+on a TPU mesh (the decode shapes of the dry-run are exactly this step).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
+                seed: int = 0, greedy: bool = True, quiet: bool = False
+                ) -> dict:
+    """Prefill a batch of prompts, then decode `gen` tokens each."""
+    params = lm.init(cfg, jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    cache_len = prompt_len + gen
+
+    prompts = rng.integers(0, cfg.vocab_size, size=(batch, prompt_len),
+                           dtype=np.int32)
+
+    state = lm.decode_state_init(cfg, batch, cache_len)
+
+    @jax.jit
+    def decode_fn(params, state, tok, pos):
+        b = {"tokens": tok}
+        if cfg.frontend == "frames":
+            emb = params["embed"].astype(jnp.dtype(cfg.compute_dtype))
+            b = {"frames": emb[tok[:, 0]][:, None, :]}
+        return lm.decode_step(params, cfg, state, b, pos)
+
+    # prefill via decode steps (teacher-forcing the prompt) — exercises the
+    # cache write path end to end; a fused prefill kernel is the TPU path.
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(prompt_len):
+        tok = jnp.asarray(prompts[:, i:i + 1])
+        pos = jnp.full((batch,), i, jnp.int32)
+        logits, state = decode_fn(params, state, tok, pos)
+    t_prefill = time.perf_counter() - t0
+
+    out_tokens = np.zeros((batch, gen), np.int32)
+    t0 = time.perf_counter()
+    for j in range(gen):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32) if greedy else \
+            jax.random.categorical(jax.random.key(j), logits).astype(jnp.int32)
+        out_tokens[:, j] = np.asarray(nxt)
+        pos = jnp.full((batch,), prompt_len + j, jnp.int32)
+        logits, state = decode_fn(params, state, nxt[:, None], pos)
+    t_decode = time.perf_counter() - t0
+
+    tput = batch * gen / max(t_decode, 1e-9)
+    if not quiet:
+        print(f"[serve] batch={batch} prefill {prompt_len} tok in "
+              f"{t_prefill:.2f}s | decode {gen} tok in {t_decode:.2f}s "
+              f"({tput:.1f} tok/s)")
+    return {"tokens": out_tokens, "decode_tok_per_s": tput,
+            "prefill_s": t_prefill, "decode_s": t_decode}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--preset", default="cpu-smoke",
+                    choices=["cpu-smoke", "full"])
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.preset == "cpu-smoke":
+        cfg = cfg.reduced()
+    serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                gen=args.gen)
+
+
+if __name__ == "__main__":
+    main()

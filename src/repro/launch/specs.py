@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates. ``input_specs`` covers the batch; params / optimizer / decode-state
+specs come from the respective eval_shape helpers.
+
+Modality frontends are STUBS per the assignment: ``[audio]`` archs receive
+precomputed frame embeddings (B, S, d_model); ``[vlm]`` archs receive
+precomputed patch embeddings (B, n_ctx_tokens, d_model) as cross-attention
+context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import lm
+from repro.train import optimizer as opt
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    L = 1 if shape.kind == "decode" else shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    d: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "frames":
+        d["frames"] = jax.ShapeDtypeStruct((B, L, cfg.d_model), cdt)
+    else:
+        d["tokens"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+    if shape.kind == "train":
+        d["labels"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+    if cfg.n_ctx_tokens and shape.kind != "decode":
+        d["ctx"] = jax.ShapeDtypeStruct((B, cfg.n_ctx_tokens, cfg.d_model), cdt)
+    return d
+
+
+def param_specs(cfg: ModelConfig):
+    return lm.param_specs(cfg)
+
+
+def opt_state_specs(cfg: ModelConfig, oc: opt.OptConfig | None = None):
+    oc = oc or opt.for_model(cfg)
+    return opt.state_specs(oc, lm.param_specs(cfg))
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    state = lm.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return state, pos

@@ -1,0 +1,6 @@
+from repro.perfmodel.interconnects import (CXL_SHM, CXL_SHM_NOFLUSH,
+                                           ETHERNET_TCP, INFINIBAND_CX6,
+                                           INTERCONNECTS, MAIN_MEMORY,
+                                           MELLANOX_TCP, ROCE_CX3, ROCE_CX6,
+                                           Interconnect, coherence_latency)
+from repro.perfmodel.simulator import Engine, Proc

@@ -1,0 +1,182 @@
+"""Optimizers: AdamW and Adafactor, with ZeRO-1-friendly state layout.
+
+State tensors mirror the parameter pytree so ``opt_state_pspecs`` can assign
+each moment the parameter's sharding plus an extra ``data`` shard (ZeRO-1).
+Adafactor keeps the factored second moment for >=2D tensors — the
+memory-lean choice for the >300B archs (Jamba) whose full Adam state would
+not fit v5e HBM at 256 chips.
+
+All update math is fp32; parameters stay in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    factored_dims_min: int = 128   # factor 2nd moment only if both dims >= this
+
+
+def lr_at(oc: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(oc.warmup_steps, 1))
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.decay_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+# --------------------------------------------------------------------------
+# state init
+# --------------------------------------------------------------------------
+
+def _factored(shape, oc: OptConfig) -> bool:
+    return (len(shape) >= 2
+            and shape[-1] >= oc.factored_dims_min
+            and shape[-2] >= oc.factored_dims_min)
+
+
+def init(oc: OptConfig, params: Params) -> Params:
+    if oc.name == "adamw":
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    if oc.name == "adafactor":
+        def vr(p):
+            if _factored(p.shape, oc):
+                return jnp.zeros(p.shape[:-1], jnp.float32)       # row stats
+            return jnp.zeros((), jnp.float32)
+
+        def vc(p):
+            if _factored(p.shape, oc):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)                # full 2nd mom
+
+        return {
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    if oc.name == "sgd":
+        return {"count": jnp.zeros((), jnp.int32)}
+    raise ValueError(oc.name)
+
+
+def state_specs(oc: OptConfig, param_shapes: Params) -> Params:
+    return jax.eval_shape(lambda: init(oc, param_shapes))
+
+
+# --------------------------------------------------------------------------
+# update
+# --------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_updates(oc: OptConfig, params: Params, grads: Params,
+                  state: Params) -> tuple[Params, Params, dict[str, jax.Array]]:
+    """One optimizer step. Returns (params, state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, oc.grad_clip)
+    count = state["count"] + 1
+    lr = lr_at(oc, state["count"])
+
+    if oc.name == "adamw":
+        b1, b2 = oc.b1, oc.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state["nu"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + oc.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = {"mu": mu, "nu": nu, "count": count}
+
+    elif oc.name == "adafactor":
+        c = count.astype(jnp.float32)
+        beta2 = 1.0 - c ** -0.8           # Adafactor's schedule
+        eps = 1e-30
+
+        def upd(p, g, vr, vc):
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape, oc):
+                nvr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                nvc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                denom = (nvr / jnp.maximum(nvr.mean(axis=-1, keepdims=True), eps)
+                         )[..., None] * nvc[..., None, :]
+                step = g / jnp.sqrt(jnp.maximum(denom, eps))
+            else:
+                nvr = beta2 * vr + (1 - beta2) * g2.mean()
+                nvc = beta2 * vc + (1 - beta2) * g2
+                step = g / jnp.sqrt(jnp.maximum(nvc, eps))
+            # RMS update clipping (Adafactor d=1.0)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                step = step + oc.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                    nvr, nvc)
+
+        # flatten/unflatten (params trees contain real tuples — an
+        # is_leaf=tuple tree.map would swallow them)
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        vr_leaves = jax.tree.leaves(state["vr"])
+        vc_leaves = jax.tree.leaves(state["vc"])
+        outs = [upd(p, g, vr, vc) for p, g, vr, vc in
+                zip(p_leaves, g_leaves, vr_leaves, vc_leaves)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_state = {"vr": treedef.unflatten([o[1] for o in outs]),
+                     "vc": treedef.unflatten([o[2] for o in outs]),
+                     "count": count}
+
+    elif oc.name == "sgd":
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+            params, grads)
+        new_state = {"count": count}
+    else:
+        raise ValueError(oc.name)
+
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}
+
+
+def for_model(cfg) -> OptConfig:
+    return OptConfig(name=cfg.optimizer)

@@ -1,0 +1,213 @@
+"""jit-able step functions: train_step, serve_prefill, serve_decode.
+
+Each ``make_*`` builder closes over (cfg, mesh) and returns the function plus
+its in/out sharding trees, so launch/dryrun.py and launch/train.py share one
+code path. Gradient accumulation bounds activation memory: microbatch count
+is chosen so one microbatch holds ~TOKENS_PER_MICRO tokens per data shard
+(scan-carry activations for the backward scale with the microbatch, not the
+global batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.context import DistContext
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.train import optimizer as opt
+
+TOKENS_PER_MICRO = 8_192   # per data shard, per microbatch
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def dp_total(mesh) -> int:
+    t = 1
+    for a in shd.dp_axes(mesh):
+        t *= shd.axis_size(mesh, a)
+    return t
+
+
+def pick_grad_accum(shape: InputShape, mesh) -> int:
+    """Microbatch count: divide the local batch until one microbatch is
+    ~TOKENS_PER_MICRO tokens (>=1 sequence)."""
+    local_seqs = max(1, shape.global_batch // dp_total(mesh))
+    target = max(1, TOKENS_PER_MICRO // shape.seq_len)
+    ga = max(1, local_seqs // max(target, 1))
+    while local_seqs % ga:
+        ga -= 1
+    return ga
+
+
+def named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_dist(cfg: ModelConfig, shape: InputShape, mesh) -> DistContext:
+    shardable = shape.global_batch % dp_total(mesh) == 0 and dp_total(mesh) > 1
+    return DistContext(mesh, batch_shardable=shardable)
+
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainStep:
+    fn: Any                      # (params, opt_state, batch) -> (p, o, metrics)
+    in_shardings: tuple          # (params, opt_state, batch)
+    out_shardings: tuple
+    grad_accum: int
+
+
+def make_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+                    oc: Optional[opt.OptConfig] = None,
+                    grad_accum: Optional[int] = None,
+                    unroll: bool = False) -> TrainStep:
+    oc = oc or opt.for_model(cfg)
+    ga = pick_grad_accum(shape, mesh) if grad_accum is None else grad_accum
+    dist = make_dist(cfg, shape, mesh)
+
+    def loss_for(params, mb):
+        total, metrics = lm.loss_fn(params, cfg, mb, dist=dist, unroll=unroll)
+        return total, metrics
+
+    def train_step(params, opt_state, batch):
+        if ga == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((ga, x.shape[0] // ga) + x.shape[1:]),
+                batch)
+
+            def micro(gacc, mslice):
+                (l, m), g = jax.value_and_grad(
+                    loss_for, has_aux=True)(params, mslice)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return gacc, (l, m)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            gsum, (ls, ms) = lax.scan(micro, g0, mb)
+            grads = jax.tree.map(lambda g: g / ga, gsum)
+            loss = ls.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt, om = opt.apply_updates(oc, params, grads,
+                                                    opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    pspec = shd.param_pspecs(cfg, mesh)
+    ospec = opt_specs(cfg, mesh, oc, pspec)
+    bspec = shd.batch_pspecs(cfg, shape, mesh)
+    mspec = {k: P() for k in
+             ("loss", "aux", "tokens", "grad_norm", "lr")}
+    return TrainStep(
+        fn=train_step,
+        in_shardings=(named(mesh, pspec), named(mesh, ospec),
+                      named(mesh, bspec)),
+        out_shardings=(named(mesh, pspec), named(mesh, ospec),
+                       named(mesh, mspec)),
+        grad_accum=ga,
+    )
+
+
+def opt_specs(cfg: ModelConfig, mesh, oc: opt.OptConfig, pspec):
+    """PartitionSpecs for the optimizer state (ZeRO-1 over ``data``)."""
+    pshapes = lm.param_specs(cfg)
+    sshapes = opt.state_specs(oc, pshapes)
+
+    if oc.name == "adamw":
+        mom = shd.opt_state_pspecs(cfg, mesh, pspec, pshapes)
+        return {"mu": mom, "nu": mom, "count": P()}
+    if oc.name == "adafactor":
+        def drop_last(spec: P, leaf, full) -> P:
+            parts = (list(spec) + [None] * len(full.shape))[: len(full.shape)]
+            return P(*parts[: len(leaf.shape)])
+
+        vr = jax.tree.map(lambda l, f, s: drop_last(s, l, f),
+                          sshapes["vr"], pshapes, pspec)
+        # vc drops the second-to-last dim: take spec minus that axis
+        def vc_spec(spec: P, leaf, full) -> P:
+            parts = list(spec) + [None] * (len(full.shape) - len(spec))
+            if len(leaf.shape) == len(full.shape):       # unfactored
+                return P(*parts)
+            parts = parts[:-2] + [parts[-1]]
+            return P(*parts[: len(leaf.shape)])
+
+        vc = jax.tree.map(lambda l, f, s: vc_spec(s, l, f),
+                          sshapes["vc"], pshapes, pspec)
+        return {"vr": vr, "vc": vc, "count": P()}
+    return {"count": P()}
+
+
+# --------------------------------------------------------------------------
+# serve
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServeStep:
+    fn: Any
+    in_shardings: tuple
+    out_shardings: tuple
+
+
+def make_serve_prefill(cfg: ModelConfig, shape: InputShape, mesh) -> ServeStep:
+    dist = make_dist(cfg, shape, mesh)
+
+    def serve_prefill(params, batch):
+        return lm.prefill(params, cfg, batch, dist=dist)
+
+    pspec = shd.param_pspecs(cfg, mesh, serve=True)
+    bspec = dict(shd.batch_pspecs(cfg, dataclasses.replace(shape, kind="prefill"),
+                                  mesh))
+    bspec.pop("labels", None)
+    bdim = bspec[next(iter(bspec))][0]
+    return ServeStep(
+        fn=serve_prefill,
+        in_shardings=(named(mesh, pspec), named(mesh, bspec)),
+        out_shardings=NamedSharding(mesh, P(bdim, None)),
+    )
+
+
+def make_serve_decode(cfg: ModelConfig, shape: InputShape, mesh) -> ServeStep:
+    dist = make_dist(cfg, shape, mesh)
+
+    def serve_decode(params, state, batch, pos):
+        logits, new_state = lm.decode_step(params, cfg, state, batch, pos,
+                                           dist=dist)
+        return logits, new_state
+
+    pspec = shd.param_pspecs(cfg, mesh, serve=True)
+    sspec = shd.decode_state_pspecs(cfg, shape, mesh)
+    one = dataclasses.replace(shape, seq_len=1)
+    bspec = dict(shd.batch_pspecs(cfg, dataclasses.replace(one, kind="decode"),
+                                  mesh))
+    bspec.pop("labels", None)
+    bspec.pop("ctx", None)     # cross-attn context lives in the static cache
+    bdim = bspec[next(iter(bspec))][0]
+    token_mode = (cfg.decode_return == "token"
+                  and dist.vocab_parallel(cfg))
+    out0 = NamedSharding(mesh, P(bdim)) if token_mode \
+        else NamedSharding(mesh, P(bdim, None))
+    return ServeStep(
+        fn=serve_decode,
+        in_shardings=(named(mesh, pspec), named(mesh, sspec),
+                      named(mesh, bspec), NamedSharding(mesh, P(bdim))),
+        out_shardings=(out0, named(mesh, sspec)),
+    )

@@ -1,0 +1,120 @@
+"""HLO analyzer unit tests on synthetic HLO text: trip-count scaling,
+collective wire math, dot FLOPs via the symbol table, DUS accounting."""
+from repro.analysis import hlo as H
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[2,3]{1,0}") == 24
+    assert H.shape_bytes("bf16[4,4]") == 32
+    assert H.shape_bytes("(f32[4], s32[2])") == 24
+    assert H.shape_bytes("pred[]") == 1
+    assert H.shape_bytes("token[]") == 0
+
+
+def test_wire_math():
+    # ring factors per kind
+    assert H._wire_bytes("all-reduce", 100, 4) == 2 * 3 / 4 * 100
+    assert H._wire_bytes("all-gather", 100, 4) == 3 / 4 * 100
+    assert H._wire_bytes("reduce-scatter", 25, 4) == 3 * 25
+    assert H._wire_bytes("all-to-all", 100, 4) == 3 / 4 * 100
+    assert H._wire_bytes("collective-permute", 100, 2) == 100
+    assert H._wire_bytes("all-reduce", 100, 1) == 0.0
+
+
+SYNTH = """
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[4,4]<=[16], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(10)
+  ROOT %c = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (x0: f32[8,16]) -> f32[8,16] {
+  %x0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %x0)
+  %w = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_scaling():
+    st = H.analyze_module(SYNTH)
+    # dot: 2 * (8*16) * 16 = 4096 flops, x10 trips
+    assert st.flops == 4096 * 10
+    # all-reduce: f32[8,16] = 512 B, group 4 -> 2*(3/4)*512 = 768 B, x10
+    assert abs(st.total_wire_bytes - 768 * 10) < 1e-6
+    assert st.coll_counts["all-reduce"] == 10
+    assert st.unparsed_while == 0
+
+
+DUS_SYNTH = """
+HloModule dus
+
+%fused_dus (p0: f32[10,64], p1: f32[1,64], p2: s32[]) -> f32[10,64] {
+  %p0 = f32[10,64]{1,0} parameter(0)
+  %p1 = f32[1,64]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  %z = s32[] constant(0)
+  ROOT %d = f32[10,64]{1,0} dynamic-update-slice(%p0, %p1, %p2, %z)
+}
+
+ENTRY %main (buf: f32[10,64], upd: f32[1,64], i: s32[]) -> f32[10,64] {
+  %buf = f32[10,64]{1,0} parameter(0)
+  %upd = f32[1,64]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[10,64]{1,0} fusion(%buf, %upd, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+
+
+def test_dus_fusion_charged_at_slice_size():
+    st = H.analyze_module(DUS_SYNTH)
+    # a naive count would be operands+output = 2820 + 2560 = 5380 B; the
+    # aliased DUS charges 2x the update slice (512) + the non-aliased
+    # operands (upd 256 + idx 4) = 772 B
+    assert st.bytes_ == 772.0, st.bytes_
+
+
+def test_roofline_terms():
+    r = H.Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                   wire_bytes_per_device=0.0,
+                   model_flops_per_device=98.5e12)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert r.bottleneck in ("compute", "memory")
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+    assert abs(r.roofline_fraction - 0.5) < 1e-9
+
+
+def test_model_flops_kinds():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("llama3-8b")
+    tr = H.model_flops(cfg, SHAPES["train_4k"], 256)
+    pf = H.model_flops(cfg, SHAPES["prefill_32k"], 256)
+    dc = H.model_flops(cfg, SHAPES["decode_32k"], 256)
+    n = cfg.param_counts()["active"]
+    assert abs(tr - 6 * n * 256 * 4096 / 256) / tr < 1e-9
+    assert abs(pf - 2 * n * 32 * 32768 / 256) / pf < 1e-9
+    assert abs(dc - 2 * n * 128 / 256) / dc < 1e-9

@@ -1,0 +1,153 @@
+"""CXL SHM Arena: lifecycle, multi-level hashing, allocation invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import Arena, ArenaFullError, LocalPool
+from repro.core.arena import NAME_MAX, level_capacities, _hash_name
+
+
+def fresh_arena(pool_bytes=4 << 20, **kw):
+    return Arena(LocalPool(pool_bytes), 0, initialize=True, **kw)
+
+
+class TestLevels:
+    def test_paper_configuration(self):
+        """§3.7: 10 levels under 200,000 -> 199,999..199,873; 1,999,260
+        slots total."""
+        caps = level_capacities(200_000, 10)
+        assert caps[0] == 199_999
+        assert caps[-1] == 199_873
+        assert sum(caps) == 1_999_260
+        assert len(set(caps)) == 10          # distinct primes
+
+    def test_descending_primes(self):
+        caps = level_capacities(251, 10)
+        assert caps == sorted(caps, reverse=True)
+
+    def test_hash_level_salted(self):
+        h = [_hash_name(b"object", lvl) for lvl in range(10)]
+        assert len(set(h)) == 10
+
+
+class TestLifecycle:
+    def test_create_open_destroy_close(self):
+        a = fresh_arena()
+        h = a.create("x", 100)
+        assert a.open("x").offset == h.offset
+        a.close(h)
+        assert h.closed
+        h2 = a.open("x")
+        a.destroy(h2)
+        with pytest.raises(FileNotFoundError):
+            a.open("x")
+
+    def test_create_duplicate_raises(self):
+        a = fresh_arena()
+        a.create("x", 10)
+        with pytest.raises(FileExistsError):
+            a.create("x", 10)
+
+    def test_data_roundtrip(self):
+        a = fresh_arena()
+        h = a.create("d", 1000)
+        payload = bytes(range(256)) * 3
+        a.write(h, 10, payload)
+        assert a.read(h, 10, len(payload)) == payload
+
+    def test_bounds_checked(self):
+        a = fresh_arena()
+        h = a.create("d", 64)
+        with pytest.raises(IndexError):
+            a.write(h, 60, b"123456")
+        with pytest.raises(IndexError):
+            a.read(h, -1, 4)
+
+    def test_name_limits(self):
+        a = fresh_arena()
+        a.create("n" * NAME_MAX, 64)
+        with pytest.raises(ValueError):
+            a.create("n" * (NAME_MAX + 1), 64)
+        with pytest.raises(ValueError):
+            a.create("", 64)
+
+    def test_second_mapping_sees_objects(self):
+        pool = LocalPool(4 << 20)
+        a0 = Arena(pool, 0, initialize=True)
+        a0.create("shared", 128)
+        a1 = Arena(pool, 1, initialize=False)
+        assert a1.open("shared").size == 128
+
+    def test_heap_exhaustion(self):
+        a = fresh_arena(1 << 20, base_slots=53, n_levels=3)
+        with pytest.raises(ArenaFullError):
+            a.create("big", 4 << 20)
+
+    def test_free_reuse(self):
+        a = fresh_arena()
+        h1 = a.create("a", 1024)
+        off1 = h1.offset
+        a.destroy(h1)
+        h2 = a.create("b", 512)   # first-fit reuse of the freed block
+        assert h2.offset == off1
+
+    def test_stats(self):
+        a = fresh_arena()
+        a.create("s1", 64)
+        a.create("s2", 64)
+        st = a.stats()
+        assert st["slots_used"] == 2
+        assert st["heap_used"] >= 128
+
+
+class TestCollisions:
+    def test_multilevel_absorbs_collisions(self):
+        """With tiny level capacities, many keys still fit (one slot per
+        level per key => up to n_levels colliding keys per bucket chain)."""
+        a = fresh_arena(8 << 20, base_slots=13, n_levels=6)
+        created = []
+        try:
+            for i in range(40):
+                created.append(a.create(f"k{i}", 64))
+        except ArenaFullError:
+            pass
+        assert len(created) >= 14     # beyond a single level's 13 slots
+        for i, h in enumerate(created):
+            assert a.open(f"k{i}").offset == h.offset
+
+    def test_full_table_raises(self):
+        a = fresh_arena(8 << 20, base_slots=3, n_levels=2)
+        with pytest.raises(ArenaFullError):
+            for i in range(100):
+                a.create(f"k{i}", 64)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(
+    st.tuples(st.text(alphabet="abcdefgh", min_size=1, max_size=8),
+              st.integers(min_value=1, max_value=2048)),
+    min_size=1, max_size=40))
+def test_property_no_overlap_and_findable(ops):
+    """Invariant: live objects never overlap and open() finds exactly the
+    offset create() returned; destroy removes only its own object."""
+    a = fresh_arena(8 << 20)
+    live: dict[str, tuple[int, int]] = {}
+    for name, size in ops:
+        if name in live:
+            h = a.open(name)
+            a.destroy(h)
+            del live[name]
+        else:
+            try:
+                h = a.create(name, size)
+            except ArenaFullError:
+                continue
+            live[name] = (h.offset, size)
+    # verify
+    spans = sorted(live.values())
+    for (o1, s1), (o2, _s2) in zip(spans, spans[1:]):
+        assert o1 + s1 <= o2, "live objects overlap"
+    for name, (off, _) in live.items():
+        assert a.open(name).offset == off

@@ -1,0 +1,96 @@
+"""Software cache coherence (§3.5): the protocol is NECESSARY (omitting it
+yields stale reads on the incoherent pool) and SUFFICIENT (applying it
+yields the backing pool's truth)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coherence import CoherentView
+from repro.core.pool import CACHELINE, IncoherentPool, LocalPool, RankCache
+
+
+def two_ranks(size=1 << 16):
+    backing = LocalPool(size)
+    mk = lambda: IncoherentPool(backing, RankCache(backing))  # noqa: E731
+    return backing, CoherentView(mk(), "incoherent"), \
+        CoherentView(mk(), "incoherent")
+
+
+class TestStaleness:
+    def test_write_invisible_without_flush(self):
+        """Writer dirties its cache; reader (who cached the line first)
+        sees the OLD value — the exact hazard of non-coherent CXL SHM."""
+        _, w, r = two_ranks()
+        assert r.raw_read(0, 4) == b"\x00" * 4     # reader caches the line
+        w.raw_write(0, b"NEW!")                    # writer: cache only
+        assert r.raw_read(0, 4) == b"\x00" * 4     # stale for the reader
+
+    def test_reader_stale_even_after_writer_flush(self):
+        """Writer flushing is not enough: the reader's clean cached copy
+        must be invalidated too (the fence+flush BEFORE read)."""
+        _, w, r = two_ranks()
+        assert r.raw_read(0, 4) == b"\x00" * 4
+        w.write_release(0, b"NEW!")                # flushed to backing
+        assert r.raw_read(0, 4) == b"\x00" * 4     # still stale (cached)
+        assert r.read_acquire(0, 4) == b"NEW!"     # protocol fixes it
+
+    def test_protocol_sufficient(self):
+        _, w, r = two_ranks()
+        for i, payload in enumerate([b"aaaa", b"bbbb", b"cccc"]):
+            off = i * CACHELINE
+            w.write_release(off, payload)
+            assert r.read_acquire(off, 4) == payload
+
+    def test_nt_control_words(self):
+        """Non-temporal u64s (queue head/tail) bypass both caches."""
+        _, w, r = two_ranks()
+        w.nt_store_u64(128, 0xDEADBEEF)
+        assert r.nt_load_u64(128) == 0xDEADBEEF
+        w.nt_store_u8(256, 7)
+        assert r.nt_load_u8(256) == 7
+
+    def test_unaligned_spans(self):
+        _, w, r = two_ranks()
+        payload = bytes(range(200))
+        w.write_release(CACHELINE - 13, payload)   # spans 4+ lines
+        assert r.read_acquire(CACHELINE - 13, 200) == payload
+
+
+class TestModes:
+    def test_uncacheable_correct(self):
+        backing = LocalPool(4096)
+        v = CoherentView(backing, "uncacheable")
+        v.write_release(0, b"data")
+        assert v.read_acquire(0, 4) == b"data"
+        assert v.stats.uncached_ops > 0
+
+    def test_incoherent_requires_incoherent_pool(self):
+        with pytest.raises(ValueError):
+            CoherentView(LocalPool(64), "incoherent")
+
+    def test_stats_counted(self):
+        _, w, r = two_ranks()
+        w.write_release(0, bytes(3 * CACHELINE))
+        assert w.stats.flush_lines >= 3
+        assert w.stats.fences >= 1
+        r.read_acquire(0, 10)
+        assert r.stats.reads == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 960),
+                          st.binary(min_size=1, max_size=96)),
+                min_size=1, max_size=30))
+def test_property_protocol_linearizes(ops):
+    """For any interleaving of protocol writes by 4 ranks to disjoint or
+    overlapping regions, a protocol read returns exactly the backing
+    truth (last write wins in program order)."""
+    backing = LocalPool(2048)
+    views = [CoherentView(IncoherentPool(backing, RankCache(backing)),
+                          "incoherent") for _ in range(4)]
+    shadow = bytearray(2048)
+    for rank, off, data in ops:
+        views[rank].write_release(off, data)
+        shadow[off:off + len(data)] = data
+    reader = views[0]
+    assert reader.read_acquire(0, 1024) == bytes(shadow[:1024])

@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the kernel body executes on CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cellcopy.kernel import cellcopy
+from repro.kernels.cellcopy.ops import copy_message, verify
+from repro.kernels.cellcopy.ref import cellcopy_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6.kernel import wkv6
+from repro.kernels.rwkv6.ops import wkv6_bshn
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+class TestCellcopy:
+    @pytest.mark.parametrize("cells,words,block", [
+        (8, 128, 2), (16, 256, 4), (32, 512, 8), (4, 1024, 4)])
+    def test_sweep(self, cells, words, block, rng):
+        src = jnp.asarray(rng.integers(-2**31, 2**31 - 1,
+                                       size=(cells, words), dtype=np.int32))
+        dst, sums = cellcopy(src, block_cells=block)
+        rd, rs = cellcopy_ref(src)
+        assert jnp.array_equal(dst, rd)
+        assert jnp.array_equal(sums, rs)
+        assert bool(verify(dst, sums))
+
+    def test_message_roundtrip_odd_length(self, rng):
+        msg = rng.integers(0, 256, size=123_457, dtype=np.uint8)
+        out, _ = copy_message(msg, cell_bytes=16384, block_cells=2)
+        assert np.array_equal(np.asarray(out), msg)
+
+    def test_corruption_detected(self, rng):
+        src = jnp.asarray(rng.integers(0, 100, size=(8, 128),
+                                       dtype=np.int32))
+        dst, sums = cellcopy(src, block_cells=2)
+        bad = dst.at[3, 5].add(1)
+        assert not bool(verify(bad, sums))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,kv,s,d,causal,dtype", [
+        (2, 4, 4, 256, 64, True, jnp.float32),    # MHA causal
+        (1, 8, 2, 256, 128, True, jnp.bfloat16),  # GQA bf16
+        (2, 4, 1, 128, 64, False, jnp.float32),   # MQA non-causal
+        (1, 2, 2, 512, 32, True, jnp.float32),    # long seq small d
+    ])
+    def test_sweep(self, b, h, kv, s, d, causal, dtype):
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+        k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+        v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+        got = flash_attention(q, k, v, causal=causal, block_q=64,
+                              block_k=64)
+        want = attention_ref(q, k, v, causal=causal)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+    def test_block_shape_invariance(self):
+        ks = jax.random.split(jax.random.key(2), 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 64))
+        k = jax.random.normal(ks[1], (1, 2, 256, 64))
+        v = jax.random.normal(ks[2], (1, 2, 256, 64))
+        a = flash_attention(q, k, v, block_q=64, block_k=64)
+        b_ = flash_attention(q, k, v, block_q=128, block_k=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_bshd_wrapper_matches_blocks_layout(self):
+        from repro.models.blocks import _plain_attention
+        ks = jax.random.split(jax.random.key(3), 3)
+        b, s, h, d = 2, 128, 4, 64
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, h, d))
+        v = jax.random.normal(ks[2], (b, s, h, d))
+        got = flash_attention_bshd(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+        want = _plain_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("b,h,s,n,chunk", [
+        (2, 2, 64, 16, 16), (1, 4, 128, 32, 32), (2, 1, 96, 64, 32),
+        (1, 1, 32, 8, 8)])
+    def test_sweep(self, b, h, s, n, chunk):
+        ks = jax.random.split(jax.random.key(7), 5)
+        r = jax.random.normal(ks[0], (b, h, s, n))
+        k = jax.random.normal(ks[1], (b, h, s, n))
+        v = jax.random.normal(ks[2], (b, h, s, n))
+        w = jnp.exp(-jnp.exp(
+            jax.random.normal(ks[3], (b, h, s, n)) * 0.5 - 2.0))
+        u = jax.random.normal(ks[4], (h, n)) * 0.5
+        got = wkv6(r, k, v, w, u, chunk=chunk)
+        want = wkv6_ref(r, k, v, w, u)
+        rel = float(jnp.abs(got - want).max()
+                    / (jnp.abs(want).max() + 1e-9))
+        assert rel < 1e-4, rel
+
+    def test_chunk_invariance(self):
+        ks = jax.random.split(jax.random.key(9), 5)
+        b, h, s, n = 1, 2, 64, 16
+        r, k, v = (jax.random.normal(ks[i], (b, h, s, n)) for i in range(3))
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, h, s, n)) - 2.0))
+        u = jax.random.normal(ks[4], (h, n))
+        a = wkv6(r, k, v, w, u, chunk=16)
+        b_ = wkv6(r, k, v, w, u, chunk=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bshn_wrapper_matches_blocks_oracle(self):
+        from repro.models.blocks import _wkv6_scan
+        ks = jax.random.split(jax.random.key(11), 5)
+        b, s, h, n = 2, 64, 2, 16
+        r, k, v = (jax.random.normal(ks[i], (b, s, h, n)) for i in range(3))
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, n)) - 2.0))
+        u = jax.random.normal(ks[4], (h, n))
+        got = wkv6_bshn(r, k, v, w, u, chunk=16, interpret=True)
+        want = _wkv6_scan(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,129 @@
+"""Perf model: the paper's headline claims reproduce from the calibrated
+constants; the simulator reproduces Fig 10's structure."""
+import pytest
+
+from repro.perfmodel.apps import cg_program, miniamr_program
+from repro.perfmodel.interconnects import (CXL_SHM, CXL_SHM_NOFLUSH,
+                                           ETHERNET_TCP, MELLANOX_TCP,
+                                           coherence_latency)
+from repro.perfmodel.simulator import Engine
+
+KB = 1024
+MiB = 1024 * 1024
+
+
+class TestTable1:
+    def test_raw_latency_ratios(self):
+        """Observation 1: CXL (flushed) 7.2x-8.1x lower latency than
+        TCP-based interconnects at 8 B."""
+        r_eth = ETHERNET_TCP.raw_latency(8) / CXL_SHM.raw_latency(8)
+        r_cx6 = MELLANOX_TCP.raw_latency(8) / CXL_SHM.raw_latency(8)
+        assert 6.8 <= r_eth <= 8.5
+        assert 7.2 <= r_cx6 <= 8.6
+
+    def test_flush_cost_ratio(self):
+        """Observation 3: cache flushing raises CXL latency ~2.8x."""
+        r = CXL_SHM.raw_latency(8) / CXL_SHM_NOFLUSH.raw_latency(8)
+        assert 2.5 <= r <= 3.1
+
+
+class TestOMB:
+    def test_onesided_latency_headlines(self):
+        cxl = CXL_SHM.mpi_latency(8, onesided=True)
+        assert 10e-6 <= cxl <= 15e-6            # ~12 us
+        assert 44 <= ETHERNET_TCP.mpi_latency(8, onesided=True) / cxl <= 55
+        assert 43 <= MELLANOX_TCP.mpi_latency(8, onesided=True) / cxl <= 54
+
+    def test_bandwidth_headlines(self):
+        bw16 = CXL_SHM.mpi_bandwidth(16 * KB, 16, onesided=True) / MiB
+        assert 7700 <= bw16 <= 9600             # ~8600 MiB/s
+        bw8 = CXL_SHM.mpi_bandwidth(16 * KB, 8, onesided=True) / MiB
+        assert 6600 <= bw8 <= 8200              # ~7420
+        # two-sided double copy: ~30% below one-sided
+        two = max(CXL_SHM.mpi_bandwidth(s, 32, onesided=False)
+                  for s in [2 ** k for k in range(10, 24)]) / MiB
+        assert 5400 <= two <= 7200              # ~6050
+
+    def test_crossovers(self):
+        """CX-6 TCP overtakes CXL beyond 16 KB (bw) / ~256 KB (latency)."""
+        sizes = [2 ** k for k in range(10, 24)]
+        bw_cross = min(s for s in sizes
+                       if MELLANOX_TCP.mpi_bandwidth(s, 32, onesided=True)
+                       > CXL_SHM.mpi_bandwidth(s, 32, onesided=True))
+        assert 16 * KB < bw_cross <= 128 * KB
+        lat_cross = min(s for s in sizes
+                        if MELLANOX_TCP.mpi_latency(s, onesided=True)
+                        < CXL_SHM.mpi_latency(s, onesided=True))
+        assert 256 * KB <= lat_cross <= 1024 * KB
+
+    def test_eth_vs_cxl_bw_ratio(self):
+        r = max(CXL_SHM.mpi_bandwidth(s, 16, onesided=True)
+                / ETHERNET_TCP.mpi_bandwidth(s, 16, onesided=True)
+                for s in [2 ** k for k in range(0, 24)])
+        assert 55 <= r <= 90                    # paper: up to 71.6x
+
+
+class TestCoherence:
+    def test_uncacheable_cliff(self):
+        """Fig 11: uncacheable ~256x clflush beyond 2 KB; >4000 us."""
+        r = coherence_latency(2048, "uncacheable") / \
+            coherence_latency(2048, "clflush")
+        assert 180 <= r <= 320
+        assert coherence_latency(2048, "uncacheable") > 4000e-6
+
+    def test_clflushopt_parallelism(self):
+        r = coherence_latency(128 * KB, "clflush") / \
+            coherence_latency(128 * KB, "clflushopt")
+        assert 3.5 <= r <= 4.5
+        # single cache line: no difference
+        assert coherence_latency(64, "clflush") == pytest.approx(
+            coherence_latency(64, "clflushopt"))
+
+
+class TestSimulator:
+    def test_compute_only_scales(self):
+        eng = Engine(4, CXL_SHM, procs_per_node=8)
+
+        def prog(r):
+            yield ("compute", 1.0)
+        res = eng.run(prog)
+        assert res["total_s"] == pytest.approx(1.0)
+        assert res["comm_fraction"] == 0.0
+
+    def test_message_rendezvous(self):
+        eng = Engine(2, CXL_SHM, procs_per_node=1)
+
+        def prog(r):
+            if r == 0:
+                yield ("compute", 0.5)
+                yield ("send", 1, 1024, 0)
+            else:
+                yield ("recv", 0, 1024, 0)
+        res = eng.run(prog)
+        assert res["total_s"] >= 0.5            # receiver waited
+
+    def test_fig10_structure(self):
+        """CXL fastest; CG comm fraction small at small scale; miniAMR
+        comm-heavy; ethernet beats CX-6 TCP at 2 nodes but not at 16+
+        (latency- vs bandwidth-dominated regimes)."""
+        def run(app, fab, nodes):
+            n = nodes * 8
+            maker = cg_program if app == "cg" else miniamr_program
+            kw = {"iters": 5} if app == "cg" else {"steps": 10}
+            return Engine(n, fab, procs_per_node=8).run(
+                lambda r: maker(r, n, **kw))
+
+        for nodes in (2, 8):
+            cg_c = run("cg", CXL_SHM, nodes)
+            cg_m = run("cg", MELLANOX_TCP, nodes)
+            cg_e = run("cg", ETHERNET_TCP, nodes)
+            assert cg_c["total_s"] <= cg_m["total_s"] <= cg_e["total_s"]
+        assert run("cg", CXL_SHM, 2)["comm_fraction"] < 0.15
+
+        am2_e = run("miniamr", ETHERNET_TCP, 2)
+        am2_m = run("miniamr", MELLANOX_TCP, 2)
+        assert am2_e["total_s"] < am2_m["total_s"]      # eth wins small
+        am16_e = run("miniamr", ETHERNET_TCP, 16)
+        am16_m = run("miniamr", MELLANOX_TCP, 16)
+        assert am16_e["total_s"] > am16_m["total_s"]    # eth loses at scale
+        assert run("miniamr", CXL_SHM, 8)["comm_fraction"] > 0.05

@@ -1,0 +1,164 @@
+"""Two-sided pt2pt (§3.3) + collectives over cMPI, coherent AND incoherent
+pools, plus the real-process runtime."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (allgather_bruck, allgather_ring, allreduce,
+                        alltoall, barrier_dissemination, bcast, reduce,
+                        run_processes, run_threads)
+from repro.core.collectives import allreduce_rd, reduce_scatter_ring
+
+
+class TestP2P:
+    @pytest.mark.parametrize("coherent", [True, False])
+    def test_ring_exchange(self, coherent):
+        def prog(env):
+            r, n = env.rank, env.size
+            env.comm.send((r + 1) % n, f"m{r}".encode(), tag=5)
+            return env.comm.recv((r - 1) % n, tag=5)[0]
+
+        res = run_threads(4, prog, coherent=coherent)
+        assert [res[r] for r in range(4)] == \
+            [f"m{(r - 1) % 4}".encode() for r in range(4)]
+
+    def test_tag_matching_reorders(self):
+        def prog(env):
+            if env.rank == 0:
+                env.comm.send(1, b"first", tag=1)
+                env.comm.send(1, b"second", tag=2)
+            if env.rank == 1:
+                # receive out of order: tag 2 first
+                b2, _ = env.comm.recv(0, tag=2)
+                b1, _ = env.comm.recv(0, tag=1)
+                return (b1, b2)
+            return None
+
+        res = run_threads(2, prog)
+        assert res[1] == (b"first", b"second")
+
+    def test_head_to_head_isend(self):
+        """Both ranks isend a queue-overflowing message then recv — the
+        progress engine must avoid the classic deadlock."""
+        big = bytes(200_000)
+
+        def prog(env):
+            peer = 1 - env.rank
+            req = env.comm.isend(peer, big, tag=9)
+            data, _ = env.comm.recv(peer, tag=9, timeout=60)
+            req.wait(60)
+            return len(data)
+
+        res = run_threads(2, prog, cell_size=4096, n_cells=4, timeout=120)
+        assert res == [200_000, 200_000]
+
+    def test_self_send(self):
+        def prog(env):
+            env.comm.send(env.rank, b"self", tag=3)
+            return env.comm.recv(env.rank, tag=3)[0]
+
+        assert run_threads(2, prog) == [b"self", b"self"]
+
+    def test_real_processes(self):
+        """The shared-memory pool between REAL processes (fork)."""
+        def prog(env):
+            peer = 1 - env.rank
+            env.comm.send(peer, f"proc{env.rank}".encode() * 100, tag=1)
+            return env.comm.recv(peer, tag=1)[0][:6]
+
+        res = run_processes(2, prog, pool_bytes=32 << 20)
+        assert res[0] == b"proc1p"[:6] or res[0].startswith(b"proc1")
+        assert res[1].startswith(b"proc0")
+
+
+class TestCollectives:
+    @pytest.mark.parametrize("n", [2, 3, 4, 5])
+    def test_allreduce_ring(self, n):
+        def prog(env):
+            x = (np.arange(23.0) + 1) * (env.rank + 1)
+            return allreduce(env.comm, x, algo="ring")
+
+        exp = (np.arange(23.0) + 1) * sum(range(1, n + 1))
+        for out in run_threads(n, prog):
+            assert np.allclose(out, exp)
+
+    @pytest.mark.parametrize("n", [2, 4, 8])
+    def test_allreduce_recursive_doubling(self, n):
+        def prog(env):
+            return allreduce_rd(env.comm,
+                                np.full(7, float(env.rank + 1)))
+
+        for out in run_threads(n, prog):
+            assert np.allclose(out, sum(range(1, n + 1)))
+
+    @pytest.mark.parametrize("n", [2, 3, 5])
+    def test_allgather_both(self, n):
+        def prog(env):
+            shard = np.array([env.rank, env.rank * 10])
+            return (allgather_bruck(env.comm, shard),
+                    allgather_ring(env.comm, shard).reshape(-1))
+
+        exp = np.array([v for i in range(n) for v in (i, i * 10)])
+        for bruck, ring in run_threads(n, prog):
+            assert np.array_equal(bruck, exp)
+            assert np.array_equal(ring, exp)
+
+    def test_reduce_scatter(self):
+        n = 4
+
+        def prog(env):
+            x = np.arange(8.0) + env.rank
+            return reduce_scatter_ring(env.comm, x)
+
+        res = run_threads(n, prog)
+        full = sum(np.arange(8.0) + r for r in range(n))
+        for r in range(n):
+            assert np.allclose(res[r], full[2 * ((r + 1) % n):
+                                            2 * ((r + 1) % n) + 2])
+
+    def test_bcast_reduce(self):
+        def prog(env):
+            data = np.arange(6.0) if env.rank == 1 else None
+            b = bcast(env.comm, data, root=1)
+            s = reduce(env.comm, np.full(3, float(env.rank)), root=0)
+            return b, s
+
+        res = run_threads(3, prog)
+        for r, (b, s) in enumerate(res):
+            assert np.allclose(b, np.arange(6.0))
+            if r == 0:
+                assert np.allclose(s, 3.0)   # 0+1+2
+
+    def test_alltoall(self):
+        n = 4
+
+        def prog(env):
+            blocks = [np.array([env.rank * 100 + d]) for d in range(n)]
+            return alltoall(env.comm, blocks)
+
+        res = run_threads(n, prog)
+        for r in range(n):
+            assert [int(b[0]) for b in res[r]] == \
+                [s * 100 + r for s in range(n)]
+
+    def test_barrier(self):
+        def prog(env):
+            barrier_dissemination(env.comm)
+            return True
+
+        assert all(run_threads(5, prog))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 64))
+def test_property_allreduce_matches_numpy(n, size):
+    def prog(env):
+        rng = np.random.default_rng(env.rank)
+        x = rng.normal(size=size)
+        return x, allreduce(env.comm, x, algo="ring")
+
+    res = run_threads(n, prog)
+    expected = sum(r[0] for r in res)
+    for _, got in res:
+        assert np.allclose(got, expected)

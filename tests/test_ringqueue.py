@@ -1,0 +1,130 @@
+"""SPSC ring queues + queue matrix (§3.3): FIFO, wraparound, chunking,
+fullness, concurrency, and correctness on the incoherent pool."""
+import threading
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coherence import CoherentView
+from repro.core.pool import IncoherentPool, LocalPool, RankCache
+from repro.core.ringqueue import QueueMatrix, SPSCQueue, queue_bytes
+
+
+def make_pair(cell_size=256, n_cells=4, incoherent=False):
+    backing = LocalPool(queue_bytes(cell_size, n_cells) + 256)
+    if incoherent:
+        vp = CoherentView(IncoherentPool(backing, RankCache(backing)),
+                          "incoherent")
+        vc = CoherentView(IncoherentPool(backing, RankCache(backing)),
+                          "incoherent")
+    else:
+        vp = vc = CoherentView(backing, "coherent")
+    prod = SPSCQueue(vp, 0, cell_size, n_cells, producer=True,
+                     initialize=True)
+    cons = SPSCQueue(vc, 0, cell_size, n_cells, producer=False)
+    return prod, cons
+
+
+class TestSPSC:
+    @pytest.mark.parametrize("incoherent", [False, True])
+    def test_fifo(self, incoherent):
+        p, c = make_pair(incoherent=incoherent)
+        for i in range(3):
+            p.enqueue(f"m{i}".encode())
+        for i in range(3):
+            data, _ = c.dequeue()
+            assert data == f"m{i}".encode()
+
+    def test_empty_and_full(self):
+        p, c = make_pair(n_cells=2)
+        assert c.try_dequeue() is None
+        assert p.try_enqueue(b"1")
+        assert p.try_enqueue(b"2")
+        assert not p.try_enqueue(b"3")          # full
+        c.dequeue()
+        assert p.try_enqueue(b"3")              # space reclaimed
+
+    def test_wraparound(self):
+        p, c = make_pair(n_cells=2)
+        for i in range(20):
+            p.enqueue(str(i).encode())
+            data, _ = c.dequeue()
+            assert data == str(i).encode()
+
+    def test_chunked_message(self):
+        p, c = make_pair(cell_size=64, n_cells=4)
+        msg = bytes(range(256)) * 4             # 1024 B >> 64 B cells
+
+        results = {}
+
+        def consumer():
+            results["msg"], results["tag"] = c.recv_message(timeout=10)
+
+        t = threading.Thread(target=consumer)
+        t.start()
+        p.send_message(msg, tag=42, timeout=10)
+        t.join(10)
+        assert results["msg"] == msg
+        assert results["tag"] == 42
+
+    def test_concurrent_stream(self):
+        p, c = make_pair(cell_size=128, n_cells=4)
+        n = 500
+        got = []
+
+        def consumer():
+            for _ in range(n):
+                got.append(c.dequeue(timeout=20)[0])
+
+        t = threading.Thread(target=consumer)
+        t.start()
+        for i in range(n):
+            p.enqueue(f"payload-{i}".encode(), timeout=20)
+        t.join(20)
+        assert got == [f"payload-{i}".encode() for i in range(n)]
+
+
+class TestMatrix:
+    def test_pairwise_isolation(self):
+        n = 3
+        backing = LocalPool(QueueMatrix.region_bytes(n, 128, 4) + 256)
+        view = CoherentView(backing, "coherent")
+        mats = [QueueMatrix(view, 0, n, r, 128, 4, initialize=(r == 0))
+                for r in range(n)]
+        # every ordered pair gets a distinct queue
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                mats[s].send_queue(d).send_message(
+                    f"{s}->{d}".encode(), tag=s * 10 + d)
+        for d in range(n):
+            for s in range(n):
+                if s == d:
+                    continue
+                msg, tag = mats[d].recv_queue(s).recv_message()
+                assert msg == f"{s}->{d}".encode()
+                assert tag == s * 10 + d
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.binary(min_size=0, max_size=700), min_size=1,
+                max_size=25),
+       st.sampled_from([64, 128, 256]))
+def test_property_stream_integrity(messages, cell_size):
+    """Any message sequence (any sizes incl. > cell) arrives intact and
+    in order through the chunking framing."""
+    p, c = make_pair(cell_size=cell_size, n_cells=8)
+    out = []
+
+    def consumer():
+        for _ in messages:
+            out.append(c.recv_message(timeout=30)[0])
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    for m in messages:
+        p.send_message(m, timeout=30)
+    t.join(30)
+    assert out == list(messages)

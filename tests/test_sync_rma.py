@@ -1,0 +1,160 @@
+"""Synchronization (§3.4) and one-sided RMA (§3.2): barrier, bakery lock
+mutual exclusion, PSCW epochs, put/get/accumulate, fence."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import run_threads
+from repro.core.coherence import CoherentView
+from repro.core.pool import LocalPool
+from repro.core.sync import BakeryLock, SeqBarrier
+
+
+class TestSeqBarrier:
+    def test_rendezvous(self):
+        pool = LocalPool(4096)
+        view = CoherentView(pool, "coherent")
+        n = 4
+        bars = [SeqBarrier(view, 0, n, r, initialize=(r == 0))
+                for r in range(n)]
+        arrived = []
+        lock = threading.Lock()
+
+        def worker(r):
+            time.sleep(0.01 * r)
+            with lock:
+                arrived.append(r)
+            bars[r].wait()
+            # after the barrier, everyone must have arrived
+            with lock:
+                assert len(arrived) == n
+
+        ts = [threading.Thread(target=worker, args=(r,)) for r in range(n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(10)
+
+    def test_reusable(self):
+        pool = LocalPool(4096)
+        view = CoherentView(pool, "coherent")
+        bars = [SeqBarrier(view, 0, 2, r, initialize=(r == 0))
+                for r in range(2)]
+
+        def worker(r):
+            for _ in range(50):
+                bars[r].wait()
+
+        ts = [threading.Thread(target=worker, args=(r,)) for r in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(10)
+            assert not t.is_alive()
+
+
+class TestBakery:
+    def test_mutual_exclusion(self):
+        pool = LocalPool(4096)
+        n = 4
+        locks = [BakeryLock(CoherentView(pool, "coherent"), 0, n, r,
+                            initialize=(r == 0)) for r in range(n)]
+        counter = {"v": 0}
+
+        def worker(r):
+            for _ in range(200):
+                locks[r].acquire()
+                v = counter["v"]          # racy read-modify-write unless
+                time.sleep(0)             # the lock really excludes
+                counter["v"] = v + 1
+                locks[r].release()
+
+        ts = [threading.Thread(target=worker, args=(r,)) for r in range(n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(30)
+        assert counter["v"] == n * 200
+
+
+class TestRMA:
+    def test_put_get_fence(self):
+        def prog(env):
+            r, n = env.rank, env.size
+            win = env.comm.win_allocate("w", 64)
+            win.fence()
+            win.put((r + 1) % n, 0, f"from{r}".encode())
+            win.fence()
+            return bytes(win.get(r, 0, 5))
+
+        res = run_threads(3, prog, pool_bytes=8 << 20)
+        for r, got in enumerate(res):
+            assert got == f"from{(r - 1) % 3}".encode()
+
+    def test_put_array_roundtrip(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 1024)
+            arr = np.arange(32, dtype=np.float64) * (env.rank + 1)
+            win.fence()
+            win.put_array(env.rank, 0, arr)
+            win.fence()
+            peer = (env.rank + 1) % env.size
+            return win.get_array(peer, 0, (32,), np.float64)
+
+        res = run_threads(2, prog, pool_bytes=8 << 20)
+        assert np.allclose(res[0], np.arange(32) * 2)
+        assert np.allclose(res[1], np.arange(32) * 1)
+
+    def test_accumulate_atomic_under_lock(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 64)
+            win.fence()
+            for _ in range(25):
+                win.accumulate(0, 0, np.array([1.0]))
+            win.fence()
+            return np.frombuffer(win.get(0, 0, 8))[0]
+
+        res = run_threads(4, prog, pool_bytes=8 << 20, timeout=120)
+        assert res[0] == 100.0
+
+    def test_pscw_epoch(self):
+        def prog(env):
+            r = env.rank
+            win = env.comm.win_allocate("w", 64)
+            if r == 0:                        # origin
+                win.start([1])
+                win.put(1, 0, b"epoch-data")
+                win.complete([1])
+                return b""
+            win.post([0])                     # target
+            win.wait([0])
+            return bytes(win.get(1, 0, 10))
+
+        res = run_threads(2, prog, pool_bytes=8 << 20)
+        assert res[1] == b"epoch-data"
+
+    def test_lock_unlock(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 64)
+            win.fence()
+            for _ in range(10):
+                win.lock()
+                cur = np.frombuffer(win.get(0, 0, 8))[0]
+                win.put(0, 0, np.float64(cur + 1).tobytes())
+                win.unlock()
+            win.fence()
+            return np.frombuffer(win.get(0, 0, 8))[0]
+
+        res = run_threads(3, prog, pool_bytes=8 << 20, timeout=120)
+        assert res[0] == 30.0
+
+    def test_window_bounds(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 16)
+            with pytest.raises(IndexError):
+                win.put(0, 12, b"too-long")
+            return True
+
+        assert all(run_threads(2, prog, pool_bytes=8 << 20))

@@ -1,0 +1,221 @@
+"""Training substrate: optimizer math, data determinism, checkpointing
+(fs + arena), fault tolerance (restart bitwise-identity, failure
+injection, elastic width change, straggler detection), loss-decreases
+integration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core import Arena, LocalPool
+from repro.launch.train import run_training
+from repro.models import lm
+from repro.train import data as D
+from repro.train import optimizer as opt
+from repro.train.checkpoint import ArenaCheckpoint, CheckpointManager
+from repro.train.fault import (FailureInjector, HeartbeatBoard,
+                               InjectedFailure, ElasticPlan)
+
+
+def tiny(arch="smollm-135m", seq=32, batch=4):
+    cfg = get_config(arch).reduced()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=seq,
+                                global_batch=batch)
+    return cfg, shape
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+class TestOptimizer:
+    def test_adamw_matches_reference(self):
+        oc = opt.OptConfig(name="adamw", lr=1e-2, warmup_steps=1,
+                           weight_decay=0.0, grad_clip=1e9)
+        p = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        g = {"w": jnp.full((4, 4), 0.5), "b": jnp.ones((4,))}
+        st = opt.init(oc, p)
+        p1, st1, m = opt.apply_updates(oc, p, g, st)
+        # step 1 reference: mhat = g, vhat = g^2 -> update = g/(|g|+eps)
+        lr = float(opt.lr_at(oc, jnp.zeros((), jnp.int32)))
+        exp_w = 1.0 - lr * (0.5 / (0.5 + oc.eps))
+        np.testing.assert_allclose(np.asarray(p1["w"]), exp_w, rtol=1e-5)
+        assert int(st1["count"]) == 1
+
+    def test_grad_clip(self):
+        g = {"a": jnp.full((100,), 10.0)}
+        clipped, gn = opt.clip_by_global_norm(g, 1.0)
+        assert float(gn) == pytest.approx(100.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(
+            1.0, rel=1e-5)
+
+    def test_adafactor_factored_shapes(self):
+        oc = opt.OptConfig(name="adafactor", factored_dims_min=4)
+        p = {"w": jnp.ones((8, 16)), "b": jnp.zeros((8,))}
+        st = opt.init(oc, p)
+        assert st["vr"]["w"].shape == (8,)
+        assert st["vc"]["w"].shape == (16,)
+        assert st["vc"]["b"].shape == (8,)     # unfactored
+        g = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, p)
+        p1, st1, _ = opt.apply_updates(oc, p, g, st)
+        assert np.all(np.isfinite(np.asarray(p1["w"])))
+        assert float(jnp.abs(p1["w"] - p["w"]).max()) > 0
+
+    def test_lr_schedule(self):
+        oc = opt.OptConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                           min_lr_ratio=0.1)
+        lrs = [float(opt.lr_at(oc, jnp.asarray(s))) for s in
+               (0, 9, 10, 100, 1000)]
+        assert lrs[0] < lrs[1] <= lrs[2]        # warmup
+        assert lrs[3] == pytest.approx(0.1, rel=1e-3)
+        assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+
+class TestData:
+    def test_deterministic_by_step(self):
+        cfg, shape = tiny()
+        dc = D.for_model(cfg, shape)
+        ds = D.SyntheticLM(dc)
+        a = ds.batch(5)
+        b = ds.batch(5)
+        assert np.array_equal(a["tokens"], b["tokens"])
+        c = ds.batch(6)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_sharding_partitions_batch(self):
+        cfg, shape = tiny(batch=8)
+        ds = D.SyntheticLM(D.for_model(cfg, shape))
+        sh0 = ds.batch(0, 0, 2)
+        sh1 = ds.batch(0, 1, 2)
+        assert sh0["tokens"].shape[0] == 4
+        assert not np.array_equal(sh0["tokens"], sh1["tokens"])
+
+    def test_prefetcher(self):
+        cfg, shape = tiny()
+        ds = D.SyntheticLM(D.for_model(cfg, shape))
+        pf = D.Prefetcher(ds, start_step=3)
+        s, b = pf.next()
+        assert s == 3 and "tokens" in b
+        s, _ = pf.next()
+        assert s == 4
+        pf.stop()
+
+    def test_markov_structure_learnable(self):
+        """The synthetic stream must have sub-uniform entropy (something
+        to learn)."""
+        cfg, shape = tiny(seq=256, batch=8)
+        ds = D.SyntheticLM(D.for_model(cfg, shape))
+        t = ds.batch(0)["tokens"]
+        # bigram predictability: most-frequent successor share >> 1/V
+        pairs = {}
+        for row in t:
+            for a, b in zip(row[:-1], row[1:]):
+                pairs.setdefault(int(a), {}).setdefault(int(b), 0)
+                pairs[int(a)][int(b)] += 1
+        top_share = np.mean([max(v.values()) / sum(v.values())
+                             for v in pairs.values() if sum(v.values()) > 5])
+        assert top_share > 3.0 / cfg.vocab_size
+
+
+# --------------------------------------------------------------------------
+# checkpoint + fault tolerance
+# --------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def test_fs_roundtrip_bitwise(self, tmp_path):
+        cfg, _ = tiny()
+        params = lm.init(cfg, jax.random.key(0))
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(7, params)
+        step, restored = mgr.restore(params)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_save_and_latest(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        tree = {"x": jnp.arange(10)}
+        mgr.save_async(1, tree)
+        mgr.save_async(2, {"x": jnp.arange(10) * 2})
+        mgr.wait()
+        assert mgr.latest_step() == 2
+        _, got = mgr.restore(tree)
+        assert np.array_equal(np.asarray(got["x"]), np.arange(10) * 2)
+
+    def test_arena_backend(self):
+        arena = Arena(LocalPool(16 << 20), 0, initialize=True)
+        ck = ArenaCheckpoint(arena, "t")
+        tree = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            size=(32, 8)).astype(np.float32)),
+            "s": jnp.asarray(3, jnp.int32)}
+        ck.save(11, tree)
+        step, got = ck.restore(tree)
+        assert step == 11
+        assert np.array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+        ck.save(12, tree)        # overwrite path (destroy + recreate)
+        step, _ = ck.restore(tree)
+        assert step == 12
+
+
+class TestFaultTolerance:
+    def test_restart_bitwise_identical(self, tmp_path):
+        cfg, shape = tiny()
+        # uninterrupted run
+        ref = run_training(cfg, shape, 8, quiet=True)
+        # interrupted at step 5, then resumed
+        inj = FailureInjector(fail_at_step=5)
+        with pytest.raises(InjectedFailure):
+            run_training(cfg, shape, 8, ckpt_dir=tmp_path / "c",
+                         ckpt_every=2, injector=inj, quiet=True)
+        out = run_training(cfg, shape, 8, ckpt_dir=tmp_path / "c",
+                           ckpt_every=2, quiet=True)
+        for a, b in zip(jax.tree.leaves(ref["params"]),
+                        jax.tree.leaves(out["params"])):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                "restart is not bitwise identical"
+
+    def test_elastic_width_change(self, tmp_path):
+        """Checkpoints are layout-free: a run that saved at width 1 can
+        be consumed when the data schedule re-shards (4 -> 2 shards)."""
+        cfg, shape = tiny(batch=8)
+        ds = D.SyntheticLM(D.for_model(cfg, shape))
+        four = np.concatenate([ds.batch(0, s, 4)["tokens"]
+                               for s in range(4)])
+        two = np.concatenate([ds.batch(0, s, 2)["tokens"]
+                              for s in range(2)])
+        assert four.shape == two.shape == (8, shape.seq_len)
+
+    def test_heartbeat_straggler_detection(self):
+        hb = HeartbeatBoard(4)
+        now = 100.0
+        for r in range(4):
+            hb.beat(r, step=10 if r != 2 else 3, t=now - (20 if r == 3
+                                                          else 1))
+        h = hb.health(now=now, deadline=10.0, lag_steps=3)
+        assert h["dead"] == [3]
+        assert h["stragglers"] == [2]
+
+    def test_elastic_plan(self):
+        p = ElasticPlan(8)
+        assert p.after_failures([5]).n_shards == 4   # keep divisor width
+        assert p.after_failures([]).n_shards == 8
+
+
+# --------------------------------------------------------------------------
+# integration: loss decreases
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    cfg, shape = tiny(seq=64, batch=8)
+    out = run_training(cfg, shape, 120, quiet=True)
+    first = np.mean(out["history"][:5])
+    last = np.mean(out["history"][-5:])
+    assert last < first - 0.15, (first, last)
