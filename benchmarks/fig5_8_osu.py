@@ -7,9 +7,14 @@ modeled : calibrated model across CXL SHM / TCP-Ethernet / TCP-CX6 for the
 measured: the real cMPI transports on this host (2 procs): one-sided =
           RMA window put/get, two-sided = SPSC queue send/recv, vs real
           localhost TCP.
+protocol: eager (queue cells) vs rendezvous (pool-resident staging /
+          PoolBuffer zero-copy sends) crossover — latency AND bytes
+          copied per message as counted by ProtocolStats, the paper's
+          copies-are-the-cost model.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -66,6 +71,76 @@ def run_measured_rma(sizes, iters=100) -> dict[int, float]:
     return run_processes(2, prog, pool_bytes=128 << 20, timeout=600)[0]
 
 
+def run_protocols(sizes, iters=60) -> list[list]:
+    """Eager vs rendezvous: one-way stream latency + copied bytes/message.
+
+    eager      forces every message through queue cells (threshold = inf);
+    rendezvous sends from a PoolBuffer (pool-resident source, zero
+               sender-side copies; receiver bulk read_acquire_into).
+    Copied bytes come from each rank's ProtocolStats delta across the
+    loop: every physical data move through the coherence protocol,
+    framing headers and descriptors included (the PoolBuffer path does
+    no per-message arena metadata traffic, so its delta is essentially
+    pure payload + one descriptor per message).
+    """
+    from repro.core.runtime import run_processes
+
+    def make_prog(protocol):
+        def prog(env):
+            out = {}
+            for s in sizes:
+                dst = bytearray(s)
+                if protocol == "rendezvous" and env.rank == 0:
+                    src = env.comm.alloc_buffer(s)
+                    src.view()[:] = b"\xab" * s
+                else:
+                    src = b"\xab" * s
+                env.comm.barrier()
+                st = env.arena.view.stats
+                c0 = st.copied_bytes
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    if env.rank == 0:
+                        env.comm.send(1, src, tag=1)
+                        env.comm.recv(1, tag=2)      # 1-byte credit
+                    else:
+                        env.comm.recv_into(0, dst, tag=1)
+                        env.comm.send(0, b"", tag=2)
+                dt = time.perf_counter() - t0
+                c1 = st.copied_bytes
+                env.comm.barrier()
+                out[s] = (dt / iters, c1 - c0)
+            return out
+        return prog
+
+    rows = []
+    results = {}
+    for protocol, thresh in (("eager", 1 << 40), ("rendezvous", 0)):
+        res = run_processes(2, make_prog(protocol), pool_bytes=256 << 20,
+                            cell_size=16384,
+                            eager_threshold=thresh, timeout=600)
+        for s in sizes:
+            lat = res[0][s][0]
+            copied = (res[0][s][1] + res[1][s][1]) / iters
+            results[(protocol, s)] = (lat, copied)
+            rows.append(["measured", "protocol", f"cmpi_{protocol}", 2, s,
+                         f"{lat * 1e6:.2f}", f"{copied:.0f}"])
+    # crossover + headline copy ratio
+    cross = next((s for s in sizes
+                  if results[("rendezvous", s)][0]
+                  <= results[("eager", s)][0]), None)
+    print(f"eager/rendezvous latency crossover: "
+          f"{cross if cross is not None else f'> {sizes[-1]}'} bytes")
+    big = sizes[-1]
+    ratio = (results[("eager", big)][1]
+             / max(results[("rendezvous", big)][1], 1))
+    print(f"copied bytes per {big}B message: "
+          f"eager {results[('eager', big)][1]:.0f} vs "
+          f"rendezvous {results[('rendezvous', big)][1]:.0f} "
+          f"-> {ratio:.2f}x fewer on rendezvous")
+    return rows
+
+
 def run(quick: bool = False) -> list[list]:
     rows = run_modeled()
     sizes = [8, 512, 4 * KB, 64 * KB] if quick else \
@@ -83,9 +158,12 @@ def run(quick: bool = False) -> list[list]:
                      f"{rma_lat[s] * 1e6:.2f}", ""])
         rows.append(["measured", "twosided", "host_tcp_localhost", 2, s,
                      f"{tcp_lat[s] * 1e6:.2f}", ""])
+    proto_sizes = [64 * KB, 1 * MiB] if quick else \
+        [16 * KB, 64 * KB, 256 * KB, 1 * MiB]
+    rows += run_protocols(proto_sizes, iters=20 if quick else 60)
     write_csv("fig5_8_osu",
               ["kind", "sided", "fabric", "procs", "msg_bytes",
-               "latency_us", "bandwidth_MiB_s"], rows)
+               "latency_us", "bandwidth_MiB_s_or_copied_B"], rows)
     return rows
 
 
@@ -104,4 +182,6 @@ def main(quick: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -9,7 +9,9 @@ import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+_root = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_root))            # benchmarks package
+sys.path.insert(0, str(_root / "src"))    # repro package
 
 from benchmarks.common import tcp_pingpong  # noqa: E402
 from repro.core import run_processes  # noqa: E402

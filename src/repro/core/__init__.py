@@ -1,23 +1,37 @@
 """cMPI core: the paper's contribution as a library.
 
-  pool        — CXL-pool stand-ins (local / real shared memory / incoherent)
-  coherence   — software cache-coherence protocol (§3.5)
+  pool        — CXL-pool stand-ins (local / real shared memory / incoherent);
+                buffer-protocol native (write accepts views, readinto fills
+                caller buffers, memview exposes pool-resident windows)
+  coherence   — software cache-coherence protocol (§3.5); ProtocolStats
+                counts payload copies (copies / copied_bytes) — the CXL
+                messaging cost model — and read_acquire_into gives the
+                single-copy pool -> destination load
   arena       — CXL SHM Arena: multi-level-hash named objects (§3.1)
-  ringqueue   — SPSC queue matrix for two-sided pt2pt (§3.3)
-  rma         — one-sided windows, put/get, PSCW/lock/fence sync (§3.2, §3.4)
-  pt2pt       — Communicator: send/recv/isend/irecv over the queue matrix
-  collectives — recursive-doubling / ring / Bruck collectives over pt2pt
+  ringqueue   — SPSC queue matrix for two-sided pt2pt (§3.3); zero-copy
+                framing via gather-enqueue (try_enqueue_parts) and
+                dequeue_into
+  rma         — one-sided windows, put/get (+ put_from/get_into buffer
+                variants), PSCW/lock/fence sync (§3.2, §3.4)
+  pt2pt       — Communicator: send/recv/isend/irecv over the queue matrix.
+                Two protocols per message: EAGER (<= eager_threshold,
+                chunked through queue cells as views) and RENDEZVOUS
+                (staged once in a pool object + control descriptor;
+                PoolBuffer sends skip even the staging copy). recv_into /
+                irecv_into deliver straight into caller buffers.
+  collectives — recursive-doubling / ring / Bruck collectives over pt2pt,
+                operating on ndarray views end to end
   runtime     — thread and process runtimes for multi-rank execution
 """
 from repro.core.arena import Arena, ArenaFullError, ObjHandle, PAPER_ARENA
-from repro.core.coherence import CoherentView
+from repro.core.coherence import CoherentView, ProtocolStats
 from repro.core.collectives import (allgather_bruck, allgather_ring,
                                     allreduce, alltoall,
                                     barrier_dissemination, bcast, reduce,
                                     reduce_scatter_ring)
 from repro.core.pool import (CACHELINE, IncoherentPool, LocalPool, Pool,
-                             RankCache, SharedMemoryPool)
-from repro.core.pt2pt import ANY_TAG, Communicator, Request
+                             RankCache, SharedMemoryPool, as_u8)
+from repro.core.pt2pt import ANY_TAG, Communicator, PoolBuffer, Request
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
                                   QueueMatrix, SPSCQueue)
 from repro.core.rma import Window

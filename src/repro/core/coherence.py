@@ -25,12 +25,21 @@ sync flags) so they never linger in cache.
 
 The latency model attached to these counters lives in
 ``repro.perfmodel.interconnects`` — this module only counts events.
+
+``ProtocolStats`` additionally counts DATA COPIES: every byte that moves
+through the protocol layer (user buffer -> pool, pool -> user buffer, or
+an explicit staging memcpy reported via ``count_copy``). This includes
+framing — cell/message headers, rendezvous descriptors — and any arena
+metadata traffic issued through the same view; only non-temporal control
+words (nt_ops) are excluded. Copies-per-message is the paper's
+performance model for CXL messaging, and the eager-vs-rendezvous
+benchmark (benchmarks/fig5_8_osu.py) reports the per-message delta.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.pool import CACHELINE, IncoherentPool, Pool
+from repro.core.pool import CACHELINE, IncoherentPool, Pool, as_u8
 
 MODES = ("coherent", "incoherent", "uncacheable")
 
@@ -45,6 +54,11 @@ class ProtocolStats:
     fences: int = 0
     nt_ops: int = 0             # non-temporal control-word accesses
     uncached_ops: int = 0
+    # every physical data move through the view: payload AND framing/
+    # metadata bytes (headers, descriptors, arena slots); nt control
+    # words are counted separately as nt_ops
+    copies: int = 0
+    copied_bytes: int = 0
 
     def lines(self, n: int) -> int:
         return (n + CACHELINE - 1) // CACHELINE
@@ -74,26 +88,52 @@ class CoherentView:
     # ------------------------------------------------------------------
     # protocol access
     # ------------------------------------------------------------------
-    def write_release(self, off: int, data: bytes) -> None:
-        """store; flush; sfence — makes the write globally visible."""
-        n = len(data)
+    def count_copy(self, nbytes: int, k: int = 1) -> None:
+        """Report ``k`` payload copies of ``nbytes`` each that happened
+        outside the view (staging memcpys in the messaging layers)."""
+        self.stats.copies += k
+        self.stats.copied_bytes += k * nbytes
+
+    def write_release(self, off: int, data) -> None:
+        """store; flush; sfence — makes the write globally visible.
+        ``data`` is any C-contiguous buffer-protocol object (bytes,
+        memoryview slice, numpy array) — moved into the pool exactly
+        once. Single-part case of ``write_release_gather``."""
+        self.write_release_gather(off, (data,))
+
+    def write_release_gather(self, off: int, parts) -> int:
+        """Scatter-gather write_release: store each part back-to-back
+        from ``off``, then ONE flush + fence over the whole span —
+        exactly how a queue cell is filled on hardware (stores, clwb the
+        span, one sfence). Counts one copy per non-empty part. Returns
+        total bytes written."""
+        views = [as_u8(p) for p in parts]
+        n = sum(len(v) for v in views)
         self.stats.writes += 1
         self.stats.written_bytes += n
+        self.stats.copies += sum(1 for v in views if len(v))
+        self.stats.copied_bytes += n
+        o = off
+        for v in views:
+            if len(v):
+                self.pool.write(o, v)
+                o += len(v)
         if self.mode == "uncacheable":
             self.stats.uncached_ops += self.stats.lines(n)
-            self.pool.write(off, data)
-            return
-        self.pool.write(off, data)
+            return n
         if self._inc:
-            self.pool.flush(off, n)       # write back + invalidate
+            self.pool.flush(off, n)
             self.pool.fence()
         self.stats.flush_lines += self.stats.lines(n)
         self.stats.fences += 1
+        return n
 
     def read_acquire(self, off: int, n: int) -> bytes:
         """lfence; invalidate; load — defeats stale cached/prefetched data."""
         self.stats.reads += 1
         self.stats.read_bytes += n
+        self.stats.copies += 1
+        self.stats.copied_bytes += n
         if self.mode == "uncacheable":
             self.stats.uncached_ops += self.stats.lines(n)
             return self.pool.read(off, n)
@@ -103,6 +143,26 @@ class CoherentView:
         self.stats.flush_lines += self.stats.lines(n)
         self.stats.fences += 1
         return self.pool.read(off, n)
+
+    def read_acquire_into(self, off: int, dst) -> int:
+        """lfence; invalidate; load straight into the caller's writable
+        buffer — the pool-to-destination move happens exactly once, with
+        no intermediate ``bytes``. Returns bytes read (= len(dst))."""
+        d = as_u8(dst)
+        n = len(d)
+        self.stats.reads += 1
+        self.stats.read_bytes += n
+        self.stats.copies += 1
+        self.stats.copied_bytes += n
+        if self.mode == "uncacheable":
+            self.stats.uncached_ops += self.stats.lines(n)
+            return self.pool.readinto(off, d)
+        if self._inc:
+            self.pool.fence()
+            self.pool.invalidate(off, n)
+        self.stats.flush_lines += self.stats.lines(n)
+        self.stats.fences += 1
+        return self.pool.readinto(off, d)
 
     # ------------------------------------------------------------------
     # non-temporal control words (u64 head/tail pointers, flags)

@@ -7,6 +7,12 @@ coordination (checkpoint manifests, data-pipeline epochs, elastic control),
 and their communication patterns are mirrored device-side in
 ``distributed/schedules.py``.
 
+Copy-aware: every per-round exchange sends ndarray views (buffer-protocol
+sends) and receives with ``recv_into`` into preallocated ndarrays — no
+``tobytes()`` serialization and no ``frombuffer().copy()`` round trips in
+the hot loops. Large rounds automatically ride the communicator's
+rendezvous path (one staged copy instead of per-cell chunking).
+
 Algorithms (n = comm size, numpy arrays):
   barrier         dissemination (log n rounds of pairwise messages)
   bcast           binomial tree
@@ -59,14 +65,12 @@ def bcast(comm: Communicator, arr: np.ndarray | None, root: int = 0
         parent = (vr - k + root) % n
         data, _ = comm.recv(parent, tag=_T + 16)
         payload = data
-    # forward to children: vr + k for k > vr's msb, within range
+    # forward to children: vr + k for every k = 2^j > vr, within range
     k = 1
     while k < n:
         if vr < k and vr + k < n:
             comm.send((vr + k + root) % n, payload, tag=_T + 16)
         k *= 2
-        if k <= vr:
-            continue
     return _unpack(payload)
 
 
@@ -95,17 +99,16 @@ def allreduce_rd(comm: Communicator, arr: np.ndarray, op=np.add
     """Recursive doubling (pow2 sizes) — paper's cited algorithm [5]."""
     n, r = comm.size, comm.rank
     assert _is_pow2(n), "recursive doubling needs power-of-two size"
-    acc = arr.copy()
+    acc = np.ascontiguousarray(arr).copy()
+    other = np.empty_like(acc)
     k = 1
     rnd = 0
     while k < n:
         peer = r ^ k
-        sreq = comm.isend(peer, np.ascontiguousarray(acc).tobytes(),
-                          tag=_T + 64 + rnd)
-        data, _ = comm.recv(peer, tag=_T + 64 + rnd)
+        sreq = comm.isend(peer, acc, tag=_T + 64 + rnd)
+        comm.recv_into(peer, other, tag=_T + 64 + rnd)
         sreq.wait()
-        other = np.frombuffer(data, dtype=acc.dtype).reshape(acc.shape)
-        acc = op(acc, other)
+        acc = op(acc, other)     # new array: in-flight views stay valid
         k <<= 1
         rnd += 1
     return acc
@@ -120,53 +123,52 @@ def reduce_scatter_ring(comm: Communicator, arr: np.ndarray, op=np.add
     if pad:
         flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
     shards = np.split(flat.copy(), n)
+    inc = np.empty(len(flat) // n, flat.dtype)
     right, left = (r + 1) % n, (r - 1) % n
     for step in range(n - 1):
         send_idx = (r - step) % n
         recv_idx = (r - step - 1) % n
-        sreq = comm.isend(right, shards[send_idx].tobytes(),
-                          tag=_T + 128 + step)
-        data, _ = comm.recv(left, tag=_T + 128 + step)
+        sreq = comm.isend(right, shards[send_idx], tag=_T + 128 + step)
+        comm.recv_into(left, inc, tag=_T + 128 + step)
         sreq.wait()
-        inc = np.frombuffer(data, dtype=flat.dtype)
         shards[recv_idx] = op(shards[recv_idx], inc)
     return shards[(r + 1) % n]
 
 
 def allgather_ring(comm: Communicator, shard: np.ndarray) -> np.ndarray:
     n, r = comm.size, comm.rank
-    shards: list[np.ndarray | None] = [None] * n
-    shards[r] = np.ascontiguousarray(shard)
+    shard = np.ascontiguousarray(shard)
+    shards = [np.empty(shard.shape, shard.dtype) for _ in range(n)]
+    shards[r][...] = shard
     right, left = (r + 1) % n, (r - 1) % n
     for step in range(n - 1):
         send_idx = (r - step) % n
         recv_idx = (r - step - 1) % n
-        sreq = comm.isend(right, shards[send_idx].tobytes(),
-                          tag=_T + 256 + step)
-        data, _ = comm.recv(left, tag=_T + 256 + step)
+        sreq = comm.isend(right, shards[send_idx], tag=_T + 256 + step)
+        comm.recv_into(left, shards[recv_idx], tag=_T + 256 + step)
         sreq.wait()
-        shards[recv_idx] = np.frombuffer(data, dtype=shard.dtype).reshape(
-            shard.shape).copy()
     return np.concatenate([s.reshape(-1) for s in shards])
 
 
 def allgather_bruck(comm: Communicator, shard: np.ndarray) -> np.ndarray:
     """Bruck all-gather — paper's cited algorithm [20]; ceil(log2 n) rounds."""
     n, r = comm.size, comm.rank
-    blocks = [np.ascontiguousarray(shard)]
+    shard = np.ascontiguousarray(shard)
+    per = shard.size
+    blocks = [shard]
     k = 1
     rnd = 0
     while k < n:
         dst = (r - k) % n
         src = (r + k) % n
         count = min(k, n - k)
-        payload = np.concatenate(
-            [b.reshape(-1) for b in blocks[:count]])
-        sreq = comm.isend(dst, payload.tobytes(), tag=_T + 512 + rnd)
-        data, _ = comm.recv(src, tag=_T + 512 + rnd)
+        # the block gather is the algorithm's packing step, done once as
+        # an ndarray concat; the wire exchange itself is view-based
+        payload = np.concatenate([b.reshape(-1) for b in blocks[:count]])
+        got = np.empty(count * per, shard.dtype)
+        sreq = comm.isend(dst, payload, tag=_T + 512 + rnd)
+        comm.recv_into(src, got, tag=_T + 512 + rnd)
         sreq.wait()
-        got = np.frombuffer(data, dtype=shard.dtype)
-        per = shard.size
         for i in range(count):
             blocks.append(got[i * per:(i + 1) * per].reshape(shard.shape))
         k <<= 1
@@ -205,13 +207,12 @@ def alltoall(comm: Communicator, blocks: list[np.ndarray]
     reqs = []
     for off in range(1, n):
         dst = (r + off) % n
-        reqs.append(comm.isend(dst, np.ascontiguousarray(
-            blocks[dst]).tobytes(), tag=_T + 1024 + off))
+        reqs.append(comm.isend(dst, np.ascontiguousarray(blocks[dst]),
+                               tag=_T + 1024 + off))
     for off in range(1, n):
         src = (r - off) % n
-        data, _ = comm.recv(src, tag=_T + 1024 + off)
-        out[src] = np.frombuffer(data, dtype=blocks[src].dtype).reshape(
-            blocks[src].shape).copy()
+        out[src] = np.empty(blocks[src].shape, blocks[src].dtype)
+        comm.recv_into(src, out[src], tag=_T + 1024 + off)
     comm.waitall(reqs)
     return out
 

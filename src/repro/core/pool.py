@@ -17,12 +17,31 @@ three backends:
                        software-coherence protocol necessary and sufficient.
 
 All offsets are absolute byte offsets into the pool.
+
+Data motion is buffer-protocol native: ``write`` accepts any object
+exporting a C-contiguous buffer (bytes, bytearray, memoryview, numpy
+array), ``readinto`` fills a caller-supplied writable buffer, and the
+memory-backed pools expose raw ``memview`` windows so payloads can live
+IN the pool (the MPI_Alloc_mem / CXL-resident-buffer story) — the basis
+of the zero-copy rendezvous path in ``core/pt2pt.py``.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
 from multiprocessing import shared_memory
+
+
+def as_u8(buf) -> memoryview:
+    """Flat uint8 view of any buffer-protocol object, zero-copy.
+
+    Requires C-contiguity (callers pass np.ascontiguousarray first for
+    strided arrays) — the same constraint real MPI datatypes place on
+    the fast path."""
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    if mv.ndim != 1 or mv.format != "B":
+        mv = mv.cast("B")
+    return mv
 
 
 class Pool:
@@ -33,8 +52,20 @@ class Pool:
     def read(self, off: int, n: int) -> bytes:
         raise NotImplementedError
 
-    def write(self, off: int, data: bytes) -> None:
+    def write(self, off: int, data) -> None:
         raise NotImplementedError
+
+    def readinto(self, off: int, dst) -> int:
+        """Fill the writable buffer ``dst`` from [off, off+len(dst)).
+        Subclasses override with a single-copy path."""
+        d = as_u8(dst)
+        d[:] = self.read(off, len(d))
+        return len(d)
+
+    def memview(self, off: int, n: int) -> memoryview:
+        """Raw writable window into pool memory (only memory-backed,
+        hardware-coherent pools can hand these out)."""
+        raise TypeError(f"{type(self).__name__} is not memory-mappable")
 
     def close(self) -> None:
         pass
@@ -53,11 +84,25 @@ class LocalPool(Pool):
             raise IndexError(f"pool read [{off}, {off + n}) out of bounds")
         return bytes(self.buf[off:off + n])
 
-    def write(self, off: int, data: bytes) -> None:
-        if off < 0 or off + len(data) > self.size:
-            raise IndexError(f"pool write [{off}, {off + len(data)}) "
+    def write(self, off: int, data) -> None:
+        d = as_u8(data)
+        if off < 0 or off + len(d) > self.size:
+            raise IndexError(f"pool write [{off}, {off + len(d)}) "
                              f"out of bounds")
-        self.buf[off:off + len(data)] = data
+        self.buf[off:off + len(d)] = d
+
+    def readinto(self, off: int, dst) -> int:
+        d = as_u8(dst)
+        n = len(d)
+        if off < 0 or off + n > self.size:
+            raise IndexError(f"pool read [{off}, {off + n}) out of bounds")
+        d[:] = memoryview(self.buf)[off:off + n]
+        return n
+
+    def memview(self, off: int, n: int) -> memoryview:
+        if off < 0 or off + n > self.size:
+            raise IndexError(f"pool view [{off}, {off + n}) out of bounds")
+        return memoryview(self.buf)[off:off + n]
 
 
 class SharedMemoryPool(Pool):
@@ -77,8 +122,20 @@ class SharedMemoryPool(Pool):
     def read(self, off: int, n: int) -> bytes:
         return bytes(self.shm.buf[off:off + n])
 
-    def write(self, off: int, data: bytes) -> None:
-        self.shm.buf[off:off + len(data)] = data
+    def write(self, off: int, data) -> None:
+        d = as_u8(data)
+        self.shm.buf[off:off + len(d)] = d
+
+    def readinto(self, off: int, dst) -> int:
+        d = as_u8(dst)
+        n = len(d)
+        d[:] = self.shm.buf[off:off + n]
+        return n
+
+    def memview(self, off: int, n: int) -> memoryview:
+        if off < 0 or off + n > self.size:
+            raise IndexError(f"pool view [{off}, {off + n}) out of bounds")
+        return self.shm.buf[off:off + n]
 
     def close(self) -> None:
         self.shm.close()
@@ -150,25 +207,32 @@ class RankCache:
 
     # -- cached access -----------------------------------------------------
     def load(self, off: int, n: int) -> bytes:
+        out = bytearray(n)
+        self.load_into(off, out)
+        return bytes(out)
+
+    def load_into(self, off: int, dst) -> int:
+        d = as_u8(dst)
+        n = len(d)
         with self.lock:
             self.stats.loads += 1
-            out = bytearray(n)
             for base in self._span(off, n):
                 ln = self._line(base)
                 s = max(off, base)
                 e = min(off + n, base + CACHELINE)
-                out[s - off:e - off] = ln.data[s - base:e - base]
-            return bytes(out)
+                d[s - off:e - off] = ln.data[s - base:e - base]
+            return n
 
-    def store(self, off: int, data: bytes) -> None:
+    def store(self, off: int, data) -> None:
+        d = as_u8(data)
         with self.lock:
             self.stats.stores += 1
-            n = len(data)
+            n = len(d)
             for base in self._span(off, n):
                 ln = self._line(base)
                 s = max(off, base)
                 e = min(off + n, base + CACHELINE)
-                ln.data[s - base:e - base] = data[s - off:e - off]
+                ln.data[s - base:e - base] = d[s - off:e - off]
                 ln.dirty = True
 
     # -- coherence ops (the paper's clflush/clflushopt + fence model) ------
@@ -218,8 +282,11 @@ class IncoherentPool(Pool):
     def read(self, off: int, n: int) -> bytes:
         return self.cache.load(off, n)
 
-    def write(self, off: int, data: bytes) -> None:
+    def write(self, off: int, data) -> None:
         self.cache.store(off, data)
+
+    def readinto(self, off: int, dst) -> int:
+        return self.cache.load_into(off, dst)
 
     # coherence surface
     def flush(self, off: int, n: int) -> int:

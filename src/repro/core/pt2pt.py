@@ -5,9 +5,30 @@ Send/recv over the SPSC queue matrix: the sender enqueues into queue
 per (src, dst) pair; tag matching uses a local reorder buffer (messages of
 other tags are parked, never dropped).
 
+Two data-plane protocols, selected per message by ``eager_threshold``:
+
+  EAGER       payload <= threshold. Chunks flow through the pair's SPSC
+              queue cells as memoryview slices (gather-enqueue; no
+              intermediate ``bytes`` is ever materialized). Copies per
+              message: user -> cell (1) + cell -> user (1).
+
+  RENDEZVOUS  payload > threshold, or any ``PoolBuffer`` send. The sender
+              stages the payload ONCE into a pool-resident object
+              ([ack 64B | payload]) and enqueues a single control
+              descriptor (total, tag, obj offset, obj name). The receiver
+              ``read_acquire_into``s its destination buffer straight from
+              the staging object and writes the ack byte; the sender's
+              progress engine then reclaims the stager. A ``PoolBuffer``
+              (pool-resident application buffer, MPI_Alloc_mem analogue)
+              skips the staging copy entirely — zero sender-side copies,
+              the one-sided bulk path the paper's CXL fabric enables
+              (cf. foMPI routing large transfers through RMA windows).
+
 Non-blocking isend/irecv return Request objects driven by an explicit
 progress pump (MPI_Test/MPI_Wait semantics — paper §3.4 keeps these
 unchanged, as do we: the message path itself is what got optimized).
+``recv_into``/``irecv_into`` deliver straight into caller buffers
+(numpy arrays included) with no ``frombuffer().copy()`` round trip.
 
 Bootstrap: rank 0 creates the queue-matrix and barrier objects in the
 arena; other ranks poll ``open`` until they appear — this mirrors the
@@ -23,25 +44,79 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.arena import Arena
-from repro.core.ringqueue import DEFAULT_CELL_SIZE, QueueMatrix
+from repro.core.arena import Arena, ObjHandle
+from repro.core.pool import as_u8
+from repro.core.ringqueue import (DEFAULT_CELL_SIZE, FLAG_FIRST, FLAG_LAST,
+                                  FLAG_RNDV, QueueMatrix)
 from repro.core.rma import Window
 from repro.core.sync import SeqBarrier
 
 ANY_TAG = -1
+
+# rendezvous staging object layout: [ctrl 64B | payload]; ctrl byte 0 is
+# the receiver-written ack ("drained, reclaim/reuse me")
+_RNDV_CTRL = 64
+
+
+class PoolBuffer:
+    """Message buffer RESIDENT in the shared pool (the MPI_Alloc_mem /
+    CXL-resident application buffer of the paper).
+
+    Sending one takes the rendezvous path with ZERO sender-side payload
+    copies: the control descriptor points at this object and the receiver
+    pulls straight from it. The send completes (synchronous-mode send)
+    once the receiver acks the drain, after which the buffer is reusable.
+
+    Arena object layout: [ctrl 64B | payload nbytes].
+    """
+
+    def __init__(self, comm: "Communicator", handle: ObjHandle):
+        self._comm = comm
+        self._handle = handle
+        self.nbytes = handle.size - _RNDV_CTRL
+        # one ack byte => at most ONE outstanding send per buffer
+        self._in_flight = False
+
+    @property
+    def offset(self) -> int:
+        """Absolute payload offset in the pool."""
+        return self._handle.offset + _RNDV_CTRL
+
+    def view(self) -> memoryview:
+        """Writable zero-copy window into pool memory (memory-backed,
+        hardware-coherent pools only — on incoherent pools use write)."""
+        return self._comm.arena.pool.memview(self.offset, self.nbytes)
+
+    def write(self, data, off: int = 0) -> None:
+        """Protocol-correct fill (valid on every pool mode)."""
+        mv = as_u8(data)
+        if off < 0 or off + len(mv) > self.nbytes:
+            raise IndexError("write beyond PoolBuffer")
+        self._comm.arena.view.write_release(self.offset + off, mv)
+
+    def read(self, off: int = 0, n: int | None = None) -> bytes:
+        n = self.nbytes - off if n is None else n
+        return self._comm.arena.view.read_acquire(self.offset + off, n)
+
+    def free(self) -> None:
+        self._comm.arena.destroy(self._handle)
 
 
 @dataclass
 class Request:
     kind: str                        # send | recv
     done: bool = False
-    data: Optional[bytes] = None     # recv result
+    data: Optional[bytes] = None     # recv result (bytes-mode receives)
+    nbytes: int = 0                  # payload size delivered/accepted
     tag: int = 0
     src: int = -1
     _gen: Any = field(default=None, repr=False)
     _comm: Any = field(default=None, repr=False)
+    _error: Optional[BaseException] = field(default=None, repr=False)
 
     def test(self) -> bool:
+        if self._error is not None:
+            raise self._error
         if self.done:
             return True
         if self.kind == "send":
@@ -70,11 +145,19 @@ class Communicator:
 
     def __init__(self, arena: Arena, rank: int, size: int, *,
                  cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
+                 eager_threshold: int | None = None,
                  name: str = "world", open_timeout: float = 30.0):
         self.arena = arena
         self.rank = rank
         self.size = size
+        self.name = name
         self.cell_size = cell_size
+        # protocol switch: payloads <= threshold go through queue cells
+        # (eager), larger ones through a pool staging object (rendezvous)
+        self.eager_threshold = (cell_size if eager_threshold is None
+                                else eager_threshold)
+        self.eager_sends = 0
+        self.rndv_sends = 0
         region = QueueMatrix.region_bytes(size, cell_size, n_cells)
         bar_bytes = SeqBarrier.region_bytes(size)
         if rank == 0:
@@ -109,12 +192,17 @@ class Communicator:
         # pair queue CONTIGUOUSLY, so only the head request of each
         # destination is ever pumped.
         self._send_fifo: dict[int, deque[Request]] = {}
+        # rendezvous stagers awaiting the receiver's ack (then destroyed)
+        self._stagers: list[ObjHandle] = []
+        self._rndv_seq = 0
+        self._pbuf_seq = 0
         # init barrier (paper §3.4: creation of shared queues synchronized
         # by the seq-number barrier)
         self.barrier()
 
     def _progress(self) -> None:
-        """Advance the head send of every destination FIFO."""
+        """Advance the head send of every destination FIFO, then reclaim
+        any rendezvous stagers the receivers have drained."""
         for fifo in self._send_fifo.values():
             while fifo:
                 head = fifo[0]
@@ -124,13 +212,44 @@ class Communicator:
                 except StopIteration:
                     head.done = True
                     fifo.popleft()           # next message may start
+                except BaseException as e:
+                    # a failed send (e.g. ArenaFullError while staging)
+                    # must not be reported done: record it on the
+                    # request, unblock the FIFO, surface it to the
+                    # caller that pumped progress
+                    head._error = e
+                    fifo.popleft()
+                    raise
+        if self._stagers:
+            self._reclaim_stagers()
+
+    def _reclaim_stagers(self) -> None:
+        v = self.arena.view
+        still = []
+        for h in self._stagers:
+            if v.nt_load_u8(h.offset):       # receiver ack'd the drain
+                self.arena.destroy(h)
+            else:
+                still.append(h)
+        self._stagers = still
+
+    # ------------------------------------------------------------------
+    # pool-resident buffers (zero-copy sends)
+    # ------------------------------------------------------------------
+    def alloc_buffer(self, nbytes: int) -> PoolBuffer:
+        """Allocate a pool-resident message buffer (MPI_Alloc_mem)."""
+        h = self.arena.create(f"pb:{self.name}:{self.rank}:{self._pbuf_seq}",
+                              _RNDV_CTRL + nbytes)
+        self._pbuf_seq += 1
+        return PoolBuffer(self, h)
 
     # ------------------------------------------------------------------
     # blocking pt2pt (implemented over the non-blocking path so every
     # blocking call keeps the progress engine turning)
     # ------------------------------------------------------------------
-    def send(self, dest: int, data: bytes, tag: int = 0,
+    def send(self, dest: int, data, tag: int = 0,
              timeout: float | None = 30.0) -> None:
+        """``data``: any buffer-protocol object or a PoolBuffer."""
         req = self.isend(dest, data, tag)
         t0 = time.monotonic()
         while not req.test():
@@ -150,39 +269,99 @@ class Communicator:
             time.sleep(0)
         return req.data, req.tag
 
-    # numpy convenience
+    def recv_into(self, src: int, buf, tag: int = ANY_TAG,
+                  timeout: float | None = 30.0) -> tuple[int, int]:
+        """Receive straight into ``buf`` (writable buffer-protocol object,
+        numpy arrays included); returns (nbytes, tag). If the arriving
+        message exceeds ``buf`` it is consumed and DISCARDED, and a
+        ValueError raised (MPI truncation semantics) — the communicator
+        stays usable."""
+        req = self.irecv_into(src, buf, tag)
+        t0 = time.monotonic()
+        while not req.test():
+            self._progress()
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"recv_into(src={src}, tag={tag})")
+            time.sleep(0)
+        return req.nbytes, req.tag
+
+    # numpy convenience — ndarray views end to end, no tobytes/frombuffer
     def send_array(self, dest: int, arr: np.ndarray, tag: int = 0) -> None:
-        self.send(dest, np.ascontiguousarray(arr).tobytes(), tag)
+        self.send(dest, np.ascontiguousarray(arr), tag)
 
     def recv_array(self, src: int, shape, dtype,
                    tag: int = ANY_TAG) -> np.ndarray:
-        data, _ = self.recv(src, tag)
-        return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+        out = np.empty(shape, dtype)
+        n, _ = self.recv_into(src, out, tag)
+        if n != out.nbytes:
+            raise ValueError(
+                f"recv_array: expected {out.nbytes}B for shape {shape} "
+                f"dtype {np.dtype(dtype)}, got {n}B")
+        return out
 
     # ------------------------------------------------------------------
     # non-blocking pt2pt
     # ------------------------------------------------------------------
-    def isend(self, dest: int, data: bytes, tag: int = 0) -> Request:
+    def isend(self, dest: int, data, tag: int = 0) -> Request:
         req = Request(kind="send", tag=tag)
+        pbuf = data if isinstance(data, PoolBuffer) else None
+        if pbuf is not None:
+            if pbuf._in_flight:
+                raise ValueError(
+                    "PoolBuffer already has an in-flight send; wait for "
+                    "it to complete before sending the buffer again "
+                    "(one ack slot per buffer)")
+            pbuf._in_flight = True
+        mv = None if pbuf is not None else as_u8(data)
+        nbytes = pbuf.nbytes if pbuf is not None else len(mv)
+        req.nbytes = nbytes
 
         def gen():
             if dest == self.rank:
-                self._parked[self.rank].append((bytes(data), tag))
+                if pbuf is not None:
+                    payload = pbuf.read()
+                    pbuf._in_flight = False
+                else:
+                    payload = mv.tobytes()
+                self._parked[self.rank].append((payload, tag))
                 return
             q = self.mq.send_queue(dest)
-            first_room = q.cell_size - q._MSG_HDR
-            head = (len(data).to_bytes(8, "little")
+            if pbuf is None and nbytes <= self.eager_threshold:
+                # ---- eager: memoryview slices through queue cells ----
+                self.eager_sends += 1
+                for parts, flags in q.plan_message(mv, tag):
+                    while not q.try_enqueue_parts(parts, flags):
+                        yield
+                return
+            # ---- rendezvous: stage once, ship a descriptor ----
+            self.rndv_sends += 1
+            v = self.arena.view
+            if pbuf is not None:
+                h = pbuf._handle
+                v.nt_store_u8(h.offset, 0)          # arm the ack
+            else:
+                h = self.arena.create(
+                    f"rv:{self.name}:{self.rank}:{dest}:{self._rndv_seq}",
+                    _RNDV_CTRL + nbytes)
+                self._rndv_seq += 1
+                v.nt_store_u8(h.offset, 0)          # heap memory is dirty
+                if nbytes:
+                    v.write_release(h.offset + _RNDV_CTRL, mv)
+            desc = (nbytes.to_bytes(8, "little")
                     + int(tag).to_bytes(8, "little")
-                    + bytes(data[:first_room]))
-            rest = bytes(data[first_room:])
-            chunks = [head] + [rest[i:i + q.cell_size]
-                               for i in range(0, len(rest), q.cell_size)]
-            from repro.core.ringqueue import FLAG_FIRST, FLAG_LAST
-            for i, ch in enumerate(chunks):
-                flags = (FLAG_FIRST if i == 0 else 0) | \
-                        (FLAG_LAST if i == len(chunks) - 1 else 0)
-                while not q.try_enqueue(ch, flags):
+                    + h.offset.to_bytes(8, "little")
+                    + h.name.encode())
+            while not q.try_enqueue_parts(
+                    (desc,), FLAG_FIRST | FLAG_LAST | FLAG_RNDV):
+                yield
+            if pbuf is not None:
+                # synchronous-mode: complete when the receiver drained
+                # the user's buffer (it is then reusable)
+                while not v.nt_load_u8(h.offset):
                     yield
+                pbuf._in_flight = False
+            else:
+                self._stagers.append(h)             # reclaimed on ack
         req._gen = gen()
         req._comm = self
         self._send_fifo.setdefault(dest, deque()).append(req)
@@ -190,7 +369,28 @@ class Communicator:
         return req
 
     def irecv(self, src: int, tag: int = ANY_TAG) -> Request:
+        return self._irecv_impl(src, tag, None)
+
+    def irecv_into(self, src: int, buf, tag: int = ANY_TAG) -> Request:
+        dst = as_u8(buf)
+        if dst.readonly:
+            raise ValueError("irecv_into needs a writable buffer")
+        return self._irecv_impl(src, tag, dst)
+
+    def _irecv_impl(self, src: int, tag: int, dst) -> Request:
         req = Request(kind="recv", tag=tag, src=src)
+
+        def deliver_parked(d: bytes, t: int) -> None:
+            if dst is not None:
+                if len(d) > len(dst):
+                    raise ValueError(
+                        f"recv_into: message of {len(d)}B exceeds "
+                        f"buffer of {len(dst)}B")
+                dst[:len(d)] = d
+                self.arena.view.count_copy(len(d))
+            else:
+                req.data = d
+            req.nbytes, req.tag = len(d), t
 
         def gen():
             park = self._parked[src]
@@ -198,7 +398,7 @@ class Communicator:
                 for i, (d, t) in enumerate(park):
                     if tag in (ANY_TAG, t):
                         del park[i]
-                        req.data, req.tag = d, t
+                        deliver_parked(d, t)
                         return
                 if src == self.rank:
                     yield
@@ -209,20 +409,68 @@ class Communicator:
                     yield
                     continue
                 payload, flags = out
+                if not flags & FLAG_FIRST:
+                    raise RuntimeError(
+                        "cMPI framing error: expected FIRST chunk")
                 total = int.from_bytes(payload[:8], "little")
                 t = int.from_bytes(payload[8:16], "little")
-                parts = [payload[16:]]
-                got = len(payload) - 16
-                while got < total:
-                    nxt = q.try_dequeue()
-                    if nxt is None:
+                match = tag in (ANY_TAG, t)
+                v = self.arena.view
+                # an undersized dst is a truncation error (MPI_ERR_
+                # TRUNCATE): the message is still fully consumed (so the
+                # pair queue stays framed and rendezvous stagers get
+                # ack'd) and then discarded before raising
+                truncate = (match and dst is not None
+                            and total > len(dst))
+                if flags & FLAG_RNDV:
+                    # ---- rendezvous: bulk-pull from the staging object
+                    obj_off = int.from_bytes(payload[16:24], "little")
+                    if match and dst is not None and not truncate:
+                        if total:
+                            v.read_acquire_into(obj_off + _RNDV_CTRL,
+                                                dst[:total])
+                        v.nt_store_u8(obj_off, 1)    # ack the drain
+                        req.nbytes, req.tag = total, t
+                        return
+                    if truncate:
+                        v.nt_store_u8(obj_off, 1)    # release the sender
+                        raise ValueError(
+                            f"recv_into: message of {total}B exceeds "
+                            f"buffer of {len(dst)}B (message discarded)")
+                    d = (v.read_acquire(obj_off + _RNDV_CTRL, total)
+                         if total else b"")
+                    v.nt_store_u8(obj_off, 1)
+                    if match:
+                        req.data = d
+                        req.nbytes, req.tag = total, t
+                        return
+                    park.append((d, t))
+                    continue
+                # ---- eager: drain chunk cells straight into the sink
+                if match and dst is not None and not truncate:
+                    sink = dst
+                else:
+                    sink = memoryview(bytearray(total))
+                k = min(len(payload) - 16, total)
+                sink[:k] = payload[16:16 + k]
+                v.count_copy(k)
+                while k < total:
+                    got = q.try_dequeue_into(sink[k:total])
+                    if got is None:
                         yield
                         continue
-                    parts.append(nxt[0])
-                    got += len(nxt[0])
-                d = b"".join(parts)[:total]
-                if tag in (ANY_TAG, t):
-                    req.data, req.tag = d, t
+                    k += got[0]
+                if truncate:
+                    raise ValueError(
+                        f"recv_into: message of {total}B exceeds "
+                        f"buffer of {len(dst)}B (message discarded)")
+                if match and dst is not None:
+                    req.nbytes, req.tag = total, t
+                    return
+                d = bytes(sink)
+                if match:
+                    req.data = d
+                    req.nbytes, req.tag = total, t
                     return
                 park.append((d, t))
         req._gen = gen()

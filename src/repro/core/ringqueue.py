@@ -18,6 +18,13 @@ sharing; control words use non-temporal access per §3.5):
 Messages larger than ``cell_size`` are split into cell-sized chunks sent
 sequentially (paper §4.3 studies the cell-size threshold; default 16 KB,
 optimal 64 KB — reproduced in benchmarks/fig9_cellsize.py).
+
+Zero-copy framing: ``try_enqueue_parts`` gathers a header plus any number
+of buffer-protocol slices straight into the cell (no intermediate bytes
+concatenation), and ``try_dequeue_into`` drains a cell's payload directly
+into a caller buffer. ``FLAG_RNDV`` marks a cell that carries a rendezvous
+control descriptor instead of payload (see core/pt2pt.py): large messages
+bypass the cell pipeline entirely via a pool-resident staging object.
 """
 from __future__ import annotations
 
@@ -25,7 +32,7 @@ import time
 from dataclasses import dataclass
 
 from repro.core.coherence import CoherentView
-from repro.core.pool import CACHELINE
+from repro.core.pool import CACHELINE, as_u8
 
 _T_TAIL = 0
 _T_HEAD = 64
@@ -33,6 +40,7 @@ _CELLS = 128
 
 FLAG_FIRST = 1      # first chunk of a message (payload starts with header)
 FLAG_LAST = 2
+FLAG_RNDV = 4       # cell holds a rendezvous descriptor, not payload
 
 DEFAULT_CELL_SIZE = 16 * 1024      # MPICH default (paper §4.3)
 OPTIMAL_CELL_SIZE = 64 * 1024      # paper's tuned value
@@ -72,24 +80,39 @@ class SPSCQueue:
             base + (_T_TAIL if producer else _T_HEAD))
 
     # ---------------- producer ----------------
-    def try_enqueue(self, payload: bytes, flags: int = 0) -> bool:
-        assert self.producer and len(payload) <= self.cell_size
+    def try_enqueue_parts(self, parts, flags: int = 0) -> bool:
+        """Gather-enqueue: write each buffer-protocol part straight into
+        the cell back-to-back — framing never concatenates into an
+        intermediate ``bytes``. The tail is published only after every
+        part is flushed (store-release ordering preserved)."""
+        assert self.producer
+        views = [as_u8(p) for p in parts]
+        n = sum(len(v) for v in views)
+        assert n <= self.cell_size
         tail = self._local_idx
         head = self.view.nt_load_u64(self.base + _T_HEAD)
         if tail - head >= self.n_cells:
             return False                       # full
         cell = self.base + _CELLS + (tail % self.n_cells) * self.stride
-        hdr = len(payload).to_bytes(4, "little") + flags.to_bytes(4, "little")
-        self.view.write_release(cell, hdr + payload)
+        self.view.write_release_gather(
+            cell,
+            (n.to_bytes(4, "little") + flags.to_bytes(4, "little"), *views))
         # publish AFTER the cell is flushed (store-release ordering)
         self._local_idx = tail + 1
         self.view.nt_store_u64(self.base + _T_TAIL, tail + 1)
         return True
 
-    def enqueue(self, payload: bytes, flags: int = 0,
+    def try_enqueue(self, payload, flags: int = 0) -> bool:
+        return self.try_enqueue_parts((payload,), flags)
+
+    def enqueue(self, payload, flags: int = 0,
                 timeout: float | None = None) -> None:
+        self.enqueue_parts((payload,), flags, timeout=timeout)
+
+    def enqueue_parts(self, parts, flags: int = 0,
+                      timeout: float | None = None) -> None:
         t0 = time.monotonic()
-        while not self.try_enqueue(payload, flags):
+        while not self.try_enqueue_parts(parts, flags):
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError("SPSC enqueue timed out")
             time.sleep(0)
@@ -110,6 +133,29 @@ class SPSCQueue:
         self.view.nt_store_u64(self.base + _T_HEAD, head + 1)
         return payload, flags
 
+    def try_dequeue_into(self, dst) -> tuple[int, int] | None:
+        """Drain one cell's payload straight into ``dst`` (writable
+        buffer). Returns (nbytes, flags), or None if the queue is empty.
+        Raises ValueError if the cell's payload exceeds ``dst``."""
+        assert not self.producer
+        head = self._local_idx
+        tail = self.view.nt_load_u64(self.base + _T_TAIL)
+        if head >= tail:
+            return None                        # empty
+        cell = self.base + _CELLS + (head % self.n_cells) * self.stride
+        hdr = self.view.read_acquire(cell, 8)
+        n = int.from_bytes(hdr[:4], "little")
+        flags = int.from_bytes(hdr[4:], "little")
+        d = as_u8(dst)
+        if n > len(d):
+            raise ValueError(f"dequeue_into: cell holds {n}B but dst "
+                             f"has room for {len(d)}B")
+        if n:
+            self.view.read_acquire_into(cell + 8, d[:n])
+        self._local_idx = head + 1
+        self.view.nt_store_u64(self.base + _T_HEAD, head + 1)
+        return n, flags
+
     def dequeue(self, timeout: float | None = None) -> tuple[bytes, int]:
         t0 = time.monotonic()
         while True:
@@ -120,25 +166,43 @@ class SPSCQueue:
                 raise TimeoutError("SPSC dequeue timed out")
             time.sleep(0)
 
+    def dequeue_into(self, dst, timeout: float | None = None
+                     ) -> tuple[int, int]:
+        t0 = time.monotonic()
+        while True:
+            out = self.try_dequeue_into(dst)
+            if out is not None:
+                return out
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError("SPSC dequeue timed out")
+            time.sleep(0)
+
     # ---------------- message framing (chunked, paper §4.3) ----------------
     # first chunk payload: [total_len u64 | tag u64 | data...]
     _MSG_HDR = 16
 
-    def send_message(self, data: bytes, tag: int = 0,
-                     timeout: float | None = None) -> int:
-        """Chunk ``data`` into cells; returns number of cells used."""
+    def plan_message(self, mv: memoryview, tag: int = 0):
+        """Yield one (parts, flags) tuple per cell for framing ``mv`` —
+        the single source of truth for the wire layout, shared by
+        ``send_message`` and the communicator's eager send generator."""
+        total = len(mv)
         first_room = self.cell_size - self._MSG_HDR
-        head = (len(data).to_bytes(8, "little")
-                + int(tag).to_bytes(8, "little") + data[:first_room])
-        rest = data[first_room:]
-        chunks = [head]
-        for i in range(0, len(rest), self.cell_size):
-            chunks.append(rest[i:i + self.cell_size])
-        for i, ch in enumerate(chunks):
-            flags = (FLAG_FIRST if i == 0 else 0) | \
-                    (FLAG_LAST if i == len(chunks) - 1 else 0)
-            self.enqueue(ch, flags, timeout=timeout)
-        return len(chunks)
+        hdr = (total.to_bytes(8, "little") + int(tag).to_bytes(8, "little"))
+        yield ((hdr, mv[:first_room]),
+               FLAG_FIRST | (FLAG_LAST if total <= first_room else 0))
+        for i in range(first_room, total, self.cell_size):
+            yield ((mv[i:i + self.cell_size],),
+                   FLAG_LAST if i + self.cell_size >= total else 0)
+
+    def send_message(self, data, tag: int = 0,
+                     timeout: float | None = None) -> int:
+        """Chunk ``data`` (any buffer-protocol object) into cells via
+        zero-copy views; returns number of cells used."""
+        cells = 0
+        for parts, flags in self.plan_message(as_u8(data), tag):
+            self.enqueue_parts(parts, flags, timeout=timeout)
+            cells += 1
+        return cells
 
     def recv_message(self, timeout: float | None = None) -> tuple[bytes, int]:
         payload, flags = self.dequeue(timeout=timeout)
@@ -146,13 +210,36 @@ class SPSCQueue:
             raise RuntimeError("SPSC framing error: expected FIRST chunk")
         total = int.from_bytes(payload[:8], "little")
         tag = int.from_bytes(payload[8:16], "little")
-        parts = [payload[16:]]
-        got = len(payload) - 16
+        out = bytearray(total)
+        mv = memoryview(out)
+        got = min(len(payload) - 16, total)
+        mv[:got] = payload[16:16 + got]
+        self.view.count_copy(got)
         while got < total:
-            p, fl = self.dequeue(timeout=timeout)
-            parts.append(p)
-            got += len(p)
-        return b"".join(parts)[:total], tag
+            n, _fl = self.dequeue_into(mv[got:], timeout=timeout)
+            got += n
+        return bytes(out), tag
+
+    def recv_message_into(self, dst, timeout: float | None = None
+                          ) -> tuple[int, int]:
+        """Receive the next message straight into ``dst``; returns
+        (nbytes, tag). Raises ValueError if ``dst`` is too small."""
+        payload, flags = self.dequeue(timeout=timeout)
+        if not flags & FLAG_FIRST:
+            raise RuntimeError("SPSC framing error: expected FIRST chunk")
+        total = int.from_bytes(payload[:8], "little")
+        tag = int.from_bytes(payload[8:16], "little")
+        d = as_u8(dst)
+        if total > len(d):
+            raise ValueError(f"recv_message_into: message of {total}B "
+                             f"exceeds buffer of {len(d)}B")
+        got = min(len(payload) - 16, total)
+        d[:got] = payload[16:16 + got]
+        self.view.count_copy(got)
+        while got < total:
+            n, _fl = self.dequeue_into(d[got:total], timeout=timeout)
+            got += n
+        return total, tag
 
 
 class QueueMatrix:

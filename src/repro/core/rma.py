@@ -9,6 +9,11 @@ rank's window address from local information only (base + rank * win_size).
 read_acquire from it. No network, no protocol stack, no target-side
 involvement — the entire point of the paper.
 
+The buffer variants ``put_from`` / ``get_into`` move payloads as
+memoryviews with exactly one copy each way (the same primitives the
+pt2pt rendezvous path is built on); ``put_array`` / ``get_array`` are
+ndarray-view wrappers over them — no ``tobytes``/``frombuffer().copy()``.
+
 Synchronization (paper §3.4) lives in a companion object created with the
 window: PSCW flag matrices, a seq-number fence barrier, and an RW window
 lock — all atomics-free.
@@ -18,6 +23,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.arena import Arena, ObjHandle
+from repro.core.pool import as_u8
 from repro.core.sync import PSCW, RWLock, SeqBarrier
 
 
@@ -68,20 +74,32 @@ class Window:
     # ------------------------------------------------------------------
     # RMA operations
     # ------------------------------------------------------------------
-    def put(self, target: int, disp: int, data: bytes) -> None:
-        self.arena.view.write_release(self._addr(target, disp, len(data)),
-                                      bytes(data))
+    def put(self, target: int, disp: int, data) -> None:
+        self.put_from(target, disp, data)
+
+    def put_from(self, target: int, disp: int, buf) -> None:
+        """MPI_Put from any C-contiguous buffer-protocol object — the
+        payload moves user buffer -> window exactly once."""
+        mv = as_u8(buf)
+        self.arena.view.write_release(self._addr(target, disp, len(mv)), mv)
 
     def get(self, target: int, disp: int, n: int) -> bytes:
         return self.arena.view.read_acquire(self._addr(target, disp, n), n)
 
+    def get_into(self, target: int, disp: int, dst) -> int:
+        """MPI_Get straight into a writable caller buffer; returns bytes
+        read. The payload moves window -> user buffer exactly once."""
+        mv = as_u8(dst)
+        return self.arena.view.read_acquire_into(
+            self._addr(target, disp, len(mv)), mv)
+
     def put_array(self, target: int, disp: int, arr: np.ndarray) -> None:
-        self.put(target, disp, np.ascontiguousarray(arr).tobytes())
+        self.put_from(target, disp, np.ascontiguousarray(arr))
 
     def get_array(self, target: int, disp: int, shape, dtype) -> np.ndarray:
-        n = int(np.prod(shape)) * np.dtype(dtype).itemsize
-        return np.frombuffer(self.get(target, disp, n),
-                             dtype=dtype).reshape(shape).copy()
+        out = np.empty(shape, dtype)
+        self.get_into(target, disp, out)
+        return out
 
     def accumulate(self, target: int, disp: int, arr: np.ndarray,
                    op=np.add) -> None:

@@ -49,6 +49,7 @@ def _make_arena(pool: Pool, rank: int, coherent: bool,
 def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
                 pool_bytes: int = 8 << 20, coherent: bool = True,
                 cell_size: int = 4096, n_cells: int = 8,
+                eager_threshold: int | None = None,
                 arena_kw: dict | None = None,
                 timeout: float = 60.0) -> list[Any]:
     pool = LocalPool(pool_bytes)
@@ -66,7 +67,8 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
     def worker(rank: int):
         try:
             comm = Communicator(arenas[rank], rank, size,
-                                cell_size=cell_size, n_cells=n_cells)
+                                cell_size=cell_size, n_cells=n_cells,
+                                eager_threshold=eager_threshold)
             gate.wait(timeout)
             results[rank] = fn(RankEnv(rank, size, arenas[rank], comm))
         except BaseException as e:  # noqa: BLE001 — reported to the caller
@@ -93,13 +95,15 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
 # --------------------------------------------------------------------------
 
 def _proc_entry(shm_name: str, rank: int, size: int, fn, cell_size: int,
-                n_cells: int, arena_kw: dict, q: mp.Queue):
+                n_cells: int, eager_threshold: int | None,
+                arena_kw: dict, q: mp.Queue):
     try:
         pool = SharedMemoryPool(0, name=shm_name, create=False)
         arena = Arena(pool, rank, mode="coherent", initialize=False,
                       **arena_kw)
         comm = Communicator(arena, rank, size, cell_size=cell_size,
-                            n_cells=n_cells)
+                            n_cells=n_cells,
+                            eager_threshold=eager_threshold)
         out = fn(RankEnv(rank, size, arena, comm))
         q.put((rank, "ok", out))
         pool.close()
@@ -110,6 +114,7 @@ def _proc_entry(shm_name: str, rank: int, size: int, fn, cell_size: int,
 def run_processes(size: int, fn: Callable[[RankEnv], Any], *,
                   pool_bytes: int = 64 << 20,
                   cell_size: int = 16384, n_cells: int = 8,
+                  eager_threshold: int | None = None,
                   arena_kw: dict | None = None,
                   timeout: float = 120.0) -> list[Any]:
     arena_kw = arena_kw or {}
@@ -122,7 +127,8 @@ def run_processes(size: int, fn: Callable[[RankEnv], Any], *,
         q: mp.Queue = ctx.Queue()
         procs = [ctx.Process(target=_proc_entry,
                              args=(pool.name, r, size, fn, cell_size,
-                                   n_cells, arena_kw, q), daemon=True)
+                                   n_cells, eager_threshold, arena_kw, q),
+                             daemon=True)
                  for r in range(size)]
         for p in procs:
             p.start()

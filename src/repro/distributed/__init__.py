@@ -1,7 +1,29 @@
-from repro.distributed.context import DistContext  # noqa: F401
-from repro.distributed.sharding import (  # noqa: F401
-    batch_pspecs,
-    decode_state_pspecs,
-    opt_state_pspecs,
-    param_pspecs,
-)
+"""Distributed layer: device-side (jax) sharding/context/schedules and
+host-side (jax-free) coordination.
+
+Exports are LAZY (PEP 562): importing this package must not pull in jax,
+so host-side ranks (data loaders, checkpoint writers) can use
+``repro.distributed.host_coord`` — or import its names from here —
+without a device runtime. jax loads only when a jax-backed name
+(DistContext, *_pspecs) is first touched.
+"""
+_CONTEXT = ("DistContext",)
+_SHARDING = ("batch_pspecs", "decode_state_pspecs", "opt_state_pspecs",
+             "param_pspecs")
+_HOST_COORD = ("agree_max_step", "allreduce_metrics", "bcast_manifest",
+               "sync_epoch")
+
+__all__ = [*_CONTEXT, *_SHARDING, *_HOST_COORD]
+
+
+def __getattr__(name):
+    if name in _CONTEXT:
+        from repro.distributed import context
+        return getattr(context, name)
+    if name in _SHARDING:
+        from repro.distributed import sharding
+        return getattr(sharding, name)
+    if name in _HOST_COORD:
+        from repro.distributed import host_coord
+        return getattr(host_coord, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,65 @@
+"""Host-side coordination over cMPI — the control-plane callers of
+``core/collectives``.
+
+The device mesh (jax side, ``schedules.py``) synchronizes gradients; the
+HOSTS still have to coordinate: agree on checkpoint manifests, reduce
+scalar training metrics across ranks, and advance data-pipeline epochs in
+lockstep. These helpers run those flows over the cMPI Communicator with
+ndarray views end to end — metric vectors travel as buffer-protocol sends
+and land via ``recv_into`` (inside the collectives), never through
+``tobytes()`` / ``frombuffer().copy()`` round trips. Large manifests
+automatically ride the communicator's rendezvous path.
+
+No jax import here: host coordination must work on ranks that never
+initialize a device runtime (e.g. a data-loader or checkpoint-writer
+process).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import collectives as coll
+from repro.core.pt2pt import Communicator
+
+
+def allreduce_metrics(comm: Communicator, metrics: dict[str, float],
+                      op=np.add) -> dict[str, float]:
+    """Reduce a {name: scalar} dict across all ranks (sum by default).
+    Keys must match on every rank; values travel as one float64 vector."""
+    keys = sorted(metrics)
+    vec = np.array([float(metrics[k]) for k in keys], np.float64)
+    out = coll.allreduce(comm, vec, op=op)
+    return dict(zip(keys, out.tolist()))
+
+
+def bcast_manifest(comm: Communicator, manifest: dict | None,
+                   root: int = 0) -> dict:
+    """Broadcast a JSON-serializable manifest (checkpoint index, data
+    epoch plan, elastic membership) from ``root`` to every rank.
+
+    The JSON bytes are wrapped as a uint8 ndarray view — zero-copy into
+    the broadcast tree; decoding happens once at the consumer boundary."""
+    if comm.rank == root:
+        blob = json.dumps(manifest, sort_keys=True).encode()
+        arr = np.frombuffer(blob, np.uint8)
+    else:
+        arr = None
+    out = coll.bcast(comm, arr, root=root)
+    return json.loads(out.tobytes().decode())
+
+
+def sync_epoch(comm: Communicator, epoch: int, root: int = 0) -> int:
+    """Advance the data-pipeline epoch in lockstep: every rank adopts
+    the root's epoch counter (a barrier + 8-byte broadcast)."""
+    coll.barrier_dissemination(comm)
+    out = coll.bcast(comm, np.array([epoch], np.int64), root=root)
+    return int(out[0])
+
+
+def agree_max_step(comm: Communicator, step: int) -> int:
+    """Elastic-restart helper: the cluster resumes from the HIGHEST step
+    any surviving rank holds a complete checkpoint for."""
+    out = coll.allreduce(comm, np.array([step], np.int64), op=np.maximum)
+    return int(out[0])

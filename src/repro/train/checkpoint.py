@@ -39,6 +39,24 @@ class CheckpointManager:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._sweep_stale_tmps()
+
+    def _sweep_stale_tmps(self) -> None:
+        """Remove .LATEST.<pid>.<tid>.tmp leftovers from writers that
+        died between write and rename. Only files from DEAD processes
+        are swept — a live writer (this process's own async thread, or
+        a concurrent run) must keep its tmp until its atomic rename."""
+        for p in self.dir.glob(".LATEST.*.tmp"):
+            try:
+                pid = int(p.name.split(".")[2])
+                os.kill(pid, 0)                 # raises if pid is gone
+            except (IndexError, ValueError, ProcessLookupError):
+                try:
+                    p.unlink()
+                except FileNotFoundError:
+                    pass
+            except PermissionError:
+                pass                            # pid alive, not ours
 
     # ---------------- save ----------------
     def save(self, step: int, tree) -> None:
@@ -69,9 +87,16 @@ class CheckpointManager:
             manifest["leaves"].append(
                 {"i": i, "shape": list(a.shape), "dtype": str(a.dtype)})
         (d / "manifest.json").write_text(json.dumps(manifest))
-        tmp = self.dir / ".LATEST.tmp"
-        tmp.write_text(str(step))
-        os.replace(tmp, self.dir / "LATEST")       # atomic publish
+        # unique tmp per writer: an abandoned async writer (e.g. a run
+        # killed mid-save) and a resumed run's writer must never race on
+        # one tmp path — the rename itself stays the atomic publish
+        tmp = self.dir / f".LATEST.{os.getpid()}.{threading.get_ident()}.tmp"
+        try:
+            tmp.write_text(str(step))
+            os.replace(tmp, self.dir / "LATEST")   # atomic publish
+        except BaseException:
+            tmp.unlink(missing_ok=True)
+            raise
 
     # ---------------- restore ----------------
     def latest_step(self) -> int | None:

@@ -1,8 +1,27 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real single
 CPU device; multi-device tests spawn subprocesses that set the flag
-themselves (see tests/test_distributed.py)."""
+themselves (see tests/test_distributed.py).
+
+If hypothesis is not installed (it is an optional dev dependency, see
+requirements-dev.txt), a deterministic lightweight fallback is installed
+into sys.modules BEFORE test modules import it, so the suite still
+collects and the property tests still run (without shrinking)."""
+import importlib.util
+import pathlib
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).parent / "_hypothesis_fallback.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
 
 
 @pytest.fixture

@@ -130,6 +130,19 @@ class TestCollectives:
             if r == 0:
                 assert np.allclose(s, 3.0)   # 0+1+2
 
+    @pytest.mark.parametrize("n,root", [(3, 1), (5, 2), (5, 4), (6, 3),
+                                        (7, 5)])
+    def test_bcast_nonzero_root_non_pow2(self, n, root):
+        """Regression for the binomial-tree forwarding loop: every rank
+        must receive with non-zero roots at non-power-of-two sizes."""
+        def prog(env):
+            data = (np.arange(11.0) * 3 + root) if env.rank == root \
+                else None
+            return bcast(env.comm, data, root=root)
+
+        for out in run_threads(n, prog):
+            assert np.allclose(out, np.arange(11.0) * 3 + root)
+
     def test_alltoall(self):
         n = 4
 
