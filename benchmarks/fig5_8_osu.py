@@ -11,6 +11,13 @@ protocol: eager (queue cells) vs rendezvous (pool-resident staging /
           PoolBuffer zero-copy sends) crossover — latency AND bytes
           copied per message as counted by ProtocolStats, the paper's
           copies-are-the-cost model.
+collective: free-function allreduce (per-round staged rendezvous) vs the
+          Comm-method allreduce (persistent pool-resident round buffers,
+          PoolView zero-sender-copy rounds) — copied bytes per rank on
+          1 MB payloads, the Comm API v2 headline.
+
+``--smoke`` runs a CI-sized subset: the ``eager_threshold="auto"``
+crossover micro-probe plus the collective copied-bytes comparison.
 """
 from __future__ import annotations
 
@@ -141,6 +148,71 @@ def run_protocols(sizes, iters=60) -> list[list]:
     return rows
 
 
+def run_collectives(nbytes: int = 1 << 20, iters: int = 4,
+                    procs: int = 2) -> list[list]:
+    """Copied bytes per rank for a ``nbytes`` allreduce: the deprecated
+    free-function path (every ring round stages into a fresh arena
+    object) vs ``comm.allreduce`` (persistent pool-resident round
+    buffers; each round ships a PoolView descriptor and pays exactly one
+    pool->pool copy). The delta is the PR's acceptance metric."""
+    from repro.core import collectives as coll
+    from repro.core.runtime import run_processes
+
+    def prog(env):
+        x = np.full(nbytes // 8, float(env.rank + 1))
+        # warm both paths (allocates the persistent round buffers)
+        coll.allreduce(env.comm, x, algo="ring")
+        env.comm.allreduce(x, algo="ring")
+        st = env.arena.view.stats
+        env.comm.barrier()
+        c0 = st.copied_bytes
+        for _ in range(iters):
+            r_free = coll.allreduce(env.comm, x, algo="ring")
+        c1 = st.copied_bytes
+        env.comm.barrier()
+        for _ in range(iters):
+            r_meth = env.comm.allreduce(x, algo="ring")
+        c2 = st.copied_bytes
+        env.comm.barrier()
+        assert np.allclose(r_free, r_meth)
+        return (c1 - c0) / iters, (c2 - c1) / iters
+
+    res = run_processes(procs, prog, pool_bytes=256 << 20,
+                        cell_size=16384, timeout=600)
+    free_b = sum(r[0] for r in res) / procs
+    meth_b = sum(r[1] for r in res) / procs
+    ratio = free_b / max(meth_b, 1)
+    print(f"allreduce {nbytes}B x {procs} ranks, copied bytes/rank: "
+          f"free-function {free_b:.0f} vs comm.allreduce {meth_b:.0f} "
+          f"-> {ratio:.2f}x fewer on pool-resident round buffers")
+    assert meth_b < free_b, (
+        "pool-resident method collectives must copy fewer bytes than "
+        "the free-function path")
+    return [["measured", "collective", "cmpi_allreduce_free", procs,
+             nbytes, "", f"{free_b:.0f}"],
+            ["measured", "collective", "cmpi_allreduce_comm", procs,
+             nbytes, "", f"{meth_b:.0f}"]]
+
+
+def run_crossover_probe(procs: int = 2) -> None:
+    """Exercise ``eager_threshold='auto'``: every rank runs the one-shot
+    init-time micro-probe and reports its measured crossover."""
+    from repro.core.runtime import run_processes
+
+    def prog(env):
+        env.comm.send(1 - env.rank, b"x" * 100_000, tag=1)
+        data, _ = env.comm.recv(1 - env.rank, tag=1)
+        assert len(data) == 100_000
+        return env.comm.eager_threshold, env.comm.probed_crossover
+
+    res = run_processes(procs, prog, pool_bytes=64 << 20,
+                        eager_threshold="auto", timeout=300)
+    for r, (thr, cross) in enumerate(res):
+        print(f"rank {r}: auto eager_threshold={thr}B "
+              f"(measured rendezvous crossover: "
+              f"{cross if cross is not None else 'beyond probe range'})")
+
+
 def run(quick: bool = False) -> list[list]:
     rows = run_modeled()
     sizes = [8, 512, 4 * KB, 64 * KB] if quick else \
@@ -161,6 +233,9 @@ def run(quick: bool = False) -> list[list]:
     proto_sizes = [64 * KB, 1 * MiB] if quick else \
         [16 * KB, 64 * KB, 256 * KB, 1 * MiB]
     rows += run_protocols(proto_sizes, iters=20 if quick else 60)
+    if not quick:
+        # quick mode skips this: CI runs it via --smoke in the next step
+        rows += run_collectives(iters=4)
     write_csv("fig5_8_osu",
               ["kind", "sided", "fabric", "procs", "msg_bytes",
                "latency_us", "bandwidth_MiB_s_or_copied_B"], rows)
@@ -181,7 +256,20 @@ def main(quick: bool = False) -> None:
     print(f"{len(meas)} measured rows (see artifacts/bench/fig5_8_osu.csv)")
 
 
+def smoke() -> None:
+    """CI-sized subset: the auto-threshold crossover probe plus the
+    pool-resident collective copied-bytes comparison."""
+    run_crossover_probe()
+    run_collectives(iters=2)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: crossover probe + collective copies")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        main(quick=args.quick)

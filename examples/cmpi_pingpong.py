@@ -1,7 +1,7 @@
 """cMPI ping-pong: the paper's core mechanism live — two REAL processes
 exchanging messages through shared memory (the CXL SHM stand-in), with the
-arena, SPSC queues, one-sided RMA windows and PSCW synchronization, vs. a
-localhost TCP baseline.
+arena, SPSC queues, MPI-4 persistent requests (Comm API v2), one-sided
+RMA windows and PSCW synchronization, vs. a localhost TCP baseline.
 
     PYTHONPATH=src python examples/cmpi_pingpong.py
 """
@@ -35,6 +35,25 @@ def prog(env):
                 env.comm.recv(0, tag=1)
                 env.comm.send(0, payload, tag=2)
         out[("two", s)] = (time.perf_counter() - t0) / ITERS / 2
+    # two-sided again through MPI-4 persistent requests (Comm API v2):
+    # the wire plan is fixed once, start()/wait() reuse it every iter
+    peer = 1 - env.rank
+    for s in SIZES:
+        sbuf = bytearray(s)
+        rbuf = bytearray(s)
+        psend = env.comm.send_init(peer, sbuf, tag=3)
+        precv = env.comm.recv_init(peer, rbuf, tag=3)
+        env.comm.barrier()
+        t0 = time.perf_counter()
+        for _ in range(ITERS):
+            if env.rank == 0:
+                psend.start().wait()
+                precv.start(); precv.wait()
+            else:
+                precv.start(); precv.wait()
+                psend.start().wait()
+        out[("pers", s)] = (time.perf_counter() - t0) / ITERS / 2
+        psend.free()
     # one-sided put/get through an RMA window + PSCW epochs
     win = env.comm.win_allocate("demo", max(SIZES) + 64)
     for s in SIZES:
@@ -55,10 +74,11 @@ def prog(env):
 def main() -> None:
     shm = run_processes(2, prog, pool_bytes=64 << 20, cell_size=65536)[0]
     tcp = tcp_pingpong(SIZES, iters=ITERS)
-    print(f"{'size':>8s} {'cMPI two-sided':>16s} {'cMPI one-sided':>16s} "
-          f"{'localhost TCP':>15s}")
+    print(f"{'size':>8s} {'cMPI two-sided':>16s} {'cMPI persistent':>16s} "
+          f"{'cMPI one-sided':>16s} {'localhost TCP':>15s}")
     for s in SIZES:
         print(f"{s:8d} {shm[('two', s)] * 1e6:13.1f} us "
+              f"{shm[('pers', s)] * 1e6:13.1f} us "
               f"{shm[('one', s)] * 1e6:13.1f} us "
               f"{tcp[s] * 1e6:12.1f} us")
     print("\n(CPython per-op cost dominates the absolute numbers on this "

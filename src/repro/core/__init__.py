@@ -13,27 +13,67 @@
                 dequeue_into
   rma         — one-sided windows, put/get (+ put_from/get_into buffer
                 variants), PSCW/lock/fence sync (§3.2, §3.4)
-  pt2pt       — Communicator: send/recv/isend/irecv over the queue matrix.
-                Two protocols per message: EAGER (<= eager_threshold,
-                chunked through queue cells as views) and RENDEZVOUS
-                (staged once in a pool object + control descriptor;
-                PoolBuffer sends skip even the staging copy). recv_into /
-                irecv_into deliver straight into caller buffers.
-  collectives — recursive-doubling / ring / Bruck collectives over pt2pt,
-                operating on ndarray views end to end
+  pt2pt       — the pt2pt ENGINE: send/recv/isend/irecv over the queue
+                matrix, eager/rendezvous protocol selection, PoolBuffer /
+                PoolView zero-sender-copy sends
+  comm        — ``Comm``, the v2 public API: method collectives over
+                persistent pool-resident round buffers, split()/dup()
+                sub-communicators, MPI-4 persistent requests
+                (send_init/recv_init), eager_threshold="auto"
+  collectives — the view-based collective ALGORITHMS (recursive doubling /
+                ring / Bruck); the free-function surface is deprecated in
+                favor of Comm methods
   runtime     — thread and process runtimes for multi-rank execution
+
+Deprecated (import still works, emits DeprecationWarning): the
+``Communicator`` name (use ``Comm``) and the free-function collectives
+``bcast(comm, ...)``-style surface (use ``comm.bcast(...)`` methods).
 """
+import warnings as _warnings
+from importlib import import_module as _import_module
+
 from repro.core.arena import Arena, ArenaFullError, ObjHandle, PAPER_ARENA
 from repro.core.coherence import CoherentView, ProtocolStats
-from repro.core.collectives import (allgather_bruck, allgather_ring,
-                                    allreduce, alltoall,
-                                    barrier_dissemination, bcast, reduce,
-                                    reduce_scatter_ring)
+from repro.core.comm import Comm, PersistentRequest, startall
 from repro.core.pool import (CACHELINE, IncoherentPool, LocalPool, Pool,
                              RankCache, SharedMemoryPool, as_u8)
-from repro.core.pt2pt import ANY_TAG, Communicator, PoolBuffer, Request
+from repro.core.pt2pt import ANY_TAG, PoolBuffer, PoolView, Request
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
                                   QueueMatrix, SPSCQueue)
 from repro.core.rma import Window
 from repro.core.runtime import RankEnv, run_processes, run_threads
 from repro.core.sync import PSCW, BakeryLock, RWLock, SeqBarrier
+
+# pre-v2 API surface: served lazily so each access emits a
+# DeprecationWarning while old code keeps working unchanged
+_DEPRECATED = {
+    "Communicator": ("repro.core.pt2pt", "Communicator", "repro.core.Comm"),
+    "bcast": ("repro.core.collectives", "bcast", "Comm.bcast"),
+    "reduce": ("repro.core.collectives", "reduce", "Comm.reduce"),
+    "allreduce": ("repro.core.collectives", "allreduce", "Comm.allreduce"),
+    "allgather_ring": ("repro.core.collectives", "allgather_ring",
+                       "Comm.allgather"),
+    "allgather_bruck": ("repro.core.collectives", "allgather_bruck",
+                        "Comm.allgather(algo='bruck')"),
+    "reduce_scatter_ring": ("repro.core.collectives", "reduce_scatter_ring",
+                            "Comm.reduce_scatter"),
+    "alltoall": ("repro.core.collectives", "alltoall", "Comm.alltoall"),
+    "barrier_dissemination": ("repro.core.collectives",
+                              "barrier_dissemination", "Comm.barrier"),
+}
+
+
+def __getattr__(name: str):
+    entry = _DEPRECATED.get(name)
+    if entry is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    module, attr, replacement = entry
+    _warnings.warn(
+        f"repro.core.{name} is deprecated; use {replacement} instead "
+        f"(the Comm API v2 facade)",
+        DeprecationWarning, stacklevel=2)
+    return getattr(_import_module(module), attr)
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_DEPRECATED))

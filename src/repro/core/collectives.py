@@ -1,4 +1,4 @@
-"""Collective communication built on cMPI point-to-point (paper §3.6).
+"""Collective ALGORITHMS built on cMPI point-to-point (paper §3.6).
 
 The paper leaves collectives as future work but notes they decompose into
 pt2pt via standard algorithms (recursive doubling [5], Bruck [20]). We
@@ -7,11 +7,23 @@ coordination (checkpoint manifests, data-pipeline epochs, elastic control),
 and their communication patterns are mirrored device-side in
 ``distributed/schedules.py``.
 
+NOTE (Comm API v2): the free-function surface here (``bcast(comm, arr)``
+-style) is DEPRECATED as a public API — use the method collectives on
+``repro.core.Comm`` (``comm.bcast(arr)``, ``comm.allreduce(...)``, ...),
+which additionally route large payloads through persistent pool-resident
+round buffers (zero-sender-copy PoolView rounds) and add hierarchical
+algorithms over ``comm.split()`` sub-communicators. The functions in this
+module remain as the protocol-correct view-based engine: ``Comm`` falls
+back to them for small payloads and on pools without raw memory views
+(incoherent mode), and importing them via ``repro.core`` emits a
+``DeprecationWarning`` while continuing to work.
+
 Copy-aware: every per-round exchange sends ndarray views (buffer-protocol
 sends) and receives with ``recv_into`` into preallocated ndarrays — no
 ``tobytes()`` serialization and no ``frombuffer().copy()`` round trips in
-the hot loops. Large rounds automatically ride the communicator's
-rendezvous path (one staged copy instead of per-cell chunking).
+the hot loops. Large rounds ride the communicator's rendezvous path (one
+staged copy per round, vs ZERO sender-side copies on the Comm method
+path, which is the difference ``benchmarks/fig5_8_osu.py`` measures).
 
 Algorithms (n = comm size, numpy arrays):
   barrier         dissemination (log n rounds of pairwise messages)
@@ -33,6 +45,16 @@ _T = 0x7F000000   # tag space reserved for collectives
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+def shards_to_chunk_order(flat: np.ndarray, n: int) -> np.ndarray:
+    """After a ring reduce-scatter + allgather, rank i's reduced shard is
+    CHUNK (i+1) % n of the padded payload — reorder the allgathered flat
+    vector from rank order into chunk order. Shared by the free-function
+    and Comm-method allreduce compositions."""
+    per = flat.size // n
+    parts = [flat[i * per:(i + 1) * per] for i in range(n)]
+    return np.concatenate([parts[(c - 1) % n] for c in range(n)])
 
 
 def barrier_dissemination(comm: Communicator) -> None:
@@ -189,11 +211,7 @@ def allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
     if algo == "rd":
         return allreduce_rd(comm, arr, op)
     shard = reduce_scatter_ring(comm, arr, op)
-    flat = allgather_ring(comm, shard)
-    # rank i's reduced shard is CHUNK (i+1) % n — reorder to chunk order
-    per = flat.size // n
-    parts = [flat[i * per:(i + 1) * per] for i in range(n)]
-    flat = np.concatenate([parts[(c - 1) % n] for c in range(n)])
+    flat = shards_to_chunk_order(allgather_ring(comm, shard), n)
     return flat[:arr.size].reshape(arr.shape).astype(arr.dtype)
 
 

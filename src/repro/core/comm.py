@@ -1,0 +1,670 @@
+"""Comm: the cMPI v2 user-facing communicator facade.
+
+The paper presents cMPI as an MPI library; this module is that library's
+public surface. ``Comm`` subclasses the pt2pt engine (``Communicator``)
+and adds everything an MPI application expects from a first-class
+communicator object:
+
+* **Method collectives** — ``comm.bcast / reduce / allreduce / allgather
+  / reduce_scatter / alltoall / barrier``. Large payloads are routed
+  through a per-comm pool of persistent pool-resident ROUND BUFFERS
+  (``_RoundPool``): every ring/Bruck round sends a ``PoolView`` slice of
+  a resident buffer, so exchanges ride the zero-sender-copy rendezvous
+  path instead of re-staging into a fresh arena object each round (the
+  foMPI lesson: route bulk transfers through window/pool-resident
+  memory). On pools without raw views (incoherent mode) the methods fall
+  back to the protocol-correct view-based algorithms in
+  ``core/collectives``.
+
+* **Sub-communicators** — ``comm.split(color, key)`` and ``comm.dup()``
+  derive new communicators over the SAME arena with namespaced queue
+  matrices and remapped ranks (``sub.parent_ranks`` maps sub-rank ->
+  parent rank). Tag spaces are disjoint by construction: each derived
+  comm owns its own SPSC queue matrix. This enables the hierarchical
+  allreduce (``algo="hier"``): intra-group ring reduce-scatter,
+  inter-group recursive doubling on the shards, intra-group ring
+  allgather — selected automatically for large payloads on composite
+  communicator sizes.
+
+* **Persistent requests** (MPI-4 style) — ``comm.send_init`` /
+  ``comm.recv_init`` return a ``PersistentRequest`` whose
+  ``start()/wait()`` pair can be reused across iterations. The wire plan
+  (eager vs staged vs pool-resident) is decided ONCE at init; a staged
+  persistent send allocates its staging object once and reuses it every
+  ``start()`` — no arena create/destroy churn in steady state.
+
+* **Auto-tuned eager threshold** — ``eager_threshold="auto"`` runs a
+  one-shot micro-probe at init measuring the eager cell path against the
+  rendezvous staging path on this host and records the measured
+  crossover (``comm.probed_crossover``).
+
+The pre-v2 surface (free-function collectives, the ``Communicator``
+name) remains importable from ``repro.core`` as deprecation shims.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import collectives as _coll
+from repro.core.arena import Arena, _hash_name
+from repro.core.collectives import _is_pow2, shards_to_chunk_order
+from repro.core.pool import as_u8
+from repro.core.pt2pt import (ANY_TAG, Communicator, PoolBuffer, PoolView,
+                              Request, _RNDV_CTRL)
+from repro.core.ringqueue import DEFAULT_CELL_SIZE
+
+_T = 0x7F000000          # collectives tag space (shared with collectives.py)
+_NAME_BUDGET = 24        # derived comm names are hashed beyond this length
+
+
+def _derived_name(parent: str, suffix: str) -> str:
+    """Deterministic (rank-independent) name for a derived communicator,
+    kept short enough that pb:/rv: object names stay under NAME_MAX."""
+    name = f"{parent}.{suffix}"
+    if len(name) > _NAME_BUDGET:
+        name = f"c{_hash_name(name.encode(), 0):016x}"
+    return name
+
+
+def _best_group(n: int) -> int:
+    """Largest divisor of n no larger than sqrt(n) (1 if n is prime)."""
+    g = 1
+    d = 2
+    while d * d <= n:
+        if n % d == 0:
+            g = d
+        d += 1
+    return g
+
+
+class _RoundPool:
+    """Per-comm pool of persistent pool-resident round buffers.
+
+    Collectives index buffers by role (0 = working buffer, 1 = incoming
+    block, 2.. = per-peer alltoall lanes). Capacity grows to the
+    high-water mark (rounded to a power of two) and is then REUSED across
+    rounds and across collective calls — steady-state iterative workloads
+    do zero arena create/destroy work.
+    """
+
+    def __init__(self, comm: "Comm"):
+        self._comm = comm
+        self._bufs: dict[int, PoolBuffer] = {}
+
+    def buf(self, idx: int, nbytes: int) -> PoolBuffer:
+        pb = self._bufs.get(idx)
+        if pb is None or pb.nbytes < nbytes:
+            if pb is not None:
+                pb.free()
+            cap = 1 << max(6, (max(nbytes, 1) - 1).bit_length())
+            pb = self._comm.alloc_buffer(cap)
+            self._bufs[idx] = pb
+        return pb
+
+    def array(self, idx: int, shape, dtype) -> tuple[PoolBuffer, np.ndarray]:
+        """A numpy array aliasing pool memory (coherent pools only) plus
+        its backing buffer — fills and op-applications write straight
+        into pool-resident memory, so sends need no staging copy."""
+        shape = tuple(shape)
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        pb = self.buf(idx, nbytes)
+        arr = np.frombuffer(pb.view()[:nbytes], dtype=dtype).reshape(shape)
+        return pb, arr
+
+    def free_all(self) -> None:
+        for pb in self._bufs.values():
+            try:
+                pb.free()
+            except FileNotFoundError:
+                pass
+        self._bufs.clear()
+
+
+class PersistentRequest:
+    """MPI-4-style persistent communication request.
+
+    Created by ``Comm.send_init`` / ``Comm.recv_init``; ``start()``
+    launches one operation over the pre-planned wire layout, ``wait()``
+    (or ``test()``) completes it, and the pair may be repeated any number
+    of times. The buffer handed to ``*_init`` is captured as a live view:
+    mutate it between iterations, never replace it.
+
+    Send plans, fixed at init time:
+      eager   payload <= eager_threshold: chunk through queue cells
+      staged  payload  > threshold: ONE persistent pool staging buffer,
+              refilled (one counted copy) and re-sent each start() — the
+              per-iteration arena create/destroy of a plain ``isend`` is
+              gone, so the arena slot count stays constant across
+              iterations
+      pool    a PoolBuffer/PoolView source: zero sender-side copies
+    """
+
+    def __init__(self, comm: "Comm", kind: str, peer: int, buf,
+                 tag: int):
+        self._comm = comm
+        self.kind = kind
+        self.peer = peer
+        self.tag = tag
+        self.started = 0
+        self._active: Optional[Request] = None
+        self._stager: Optional[PoolBuffer] = None
+        if kind == "send":
+            if isinstance(buf, (PoolBuffer, PoolView)):
+                self._mode = "pool"
+                self._payload = buf
+                self._mv = None
+            else:
+                self._mv = as_u8(buf)
+                if len(self._mv) > comm.eager_threshold:
+                    self._mode = "staged"
+                    self._stager = comm.alloc_buffer(len(self._mv))
+                else:
+                    self._mode = "eager"
+        else:
+            self._mv = as_u8(buf)
+            if self._mv.readonly:
+                raise ValueError("recv_init needs a writable buffer")
+            self._mode = "recv"
+
+    @property
+    def active(self) -> bool:
+        return self._active is not None and not self._active.done
+
+    def start(self) -> "PersistentRequest":
+        if self.active:
+            raise RuntimeError(
+                "persistent request already active; wait() before "
+                "restarting")
+        if self.kind == "send":
+            if self._mode == "pool":
+                self._active = self._comm.isend(self.peer, self._payload,
+                                                self.tag)
+            elif self._mode == "staged":
+                # refill the persistent stager (the one staging copy),
+                # then ship it zero-copy — no arena churn per iteration
+                self._stager.write(self._mv)
+                self._active = self._comm.isend(
+                    self.peer, self._stager.slice(0, len(self._mv)),
+                    self.tag)
+            else:
+                self._active = self._comm.isend(self.peer, self._mv,
+                                                self.tag)
+        else:
+            self._active = self._comm.irecv_into(self.peer, self._mv,
+                                                 self.tag)
+        self.started += 1
+        return self
+
+    def test(self) -> bool:
+        if self._active is None:
+            raise RuntimeError("persistent request not started")
+        return self._active.test()
+
+    def wait(self, timeout: float | None = 30.0) -> int:
+        if self._active is None:
+            raise RuntimeError("persistent request not started")
+        self._active.wait(timeout)
+        return self._active.nbytes
+
+    def free(self) -> None:
+        if self.active:
+            raise RuntimeError("cannot free an active persistent request")
+        if self._stager is not None:
+            self._stager.free()
+            self._stager = None
+
+
+def startall(reqs: list[PersistentRequest]) -> list[PersistentRequest]:
+    """MPI_Startall: start every persistent request in order."""
+    for r in reqs:
+        r.start()
+    return reqs
+
+
+class Comm(Communicator):
+    """First-class cMPI communicator (the v2 public API)."""
+
+    def __init__(self, arena: Arena, rank: int, size: int, *,
+                 cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
+                 eager_threshold: int | str | None = None,
+                 name: str = "world", open_timeout: float = 30.0):
+        auto = eager_threshold == "auto"
+        super().__init__(arena, rank, size, cell_size=cell_size,
+                         n_cells=n_cells,
+                         eager_threshold=None if auto else eager_threshold,
+                         name=name, open_timeout=open_timeout)
+        self._derived_seq = 0
+        self._hier_cache: dict[int, tuple["Comm", "Comm"]] = {}
+        self._rounds = _RoundPool(self)
+        self._resident_ok: Optional[bool] = None
+        # sub-rank -> parent-comm rank (identity for a root communicator)
+        self.parent_ranks: tuple[int, ...] = tuple(range(size))
+        self.probed_crossover: Optional[int] = None
+        if auto:
+            self.eager_threshold = self._probe_eager_threshold()
+
+    # ------------------------------------------------------------------
+    # auto-tuned eager threshold (one-shot micro-probe)
+    # ------------------------------------------------------------------
+    def _probe_eager_threshold(self, reps: int = 3) -> int:
+        """Measure the eager (per-cell chunk copies) vs rendezvous
+        (arena create + one stage + one bulk read + destroy) cost locally
+        and return the crossover: the largest probed size at which eager
+        still wins. Per-rank and one-shot; thresholds may legitimately
+        differ across ranks (the protocol is self-describing per
+        message, so asymmetric thresholds are safe)."""
+        v = self.arena.view
+        cell = self.cell_size
+        sizes = [max(64, cell // 4), cell, 2 * cell, 4 * cell, 8 * cell]
+        scratch = memoryview(bytearray(sizes[-1]))
+        h = self.arena.create(f"prb:{self.name}:{self.rank}",
+                              _RNDV_CTRL + sizes[-1])
+
+        def eager_cost(s: int) -> float:
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                for off in range(0, s, cell):
+                    chunk = scratch[off:off + min(cell, s - off)]
+                    v.write_release(h.offset + _RNDV_CTRL, chunk)
+                    v.read_acquire_into(h.offset + _RNDV_CTRL, chunk)
+            return (time.perf_counter() - t0) / reps
+
+        def rndv_cost(s: int) -> float:
+            t0 = time.perf_counter()
+            for i in range(reps):
+                hh = self.arena.create(
+                    f"prv:{self.name}:{self.rank}:{i}", _RNDV_CTRL + s)
+                v.write_release(hh.offset + _RNDV_CTRL, scratch[:s])
+                v.read_acquire_into(hh.offset + _RNDV_CTRL, scratch[:s])
+                self.arena.destroy(hh)
+            return (time.perf_counter() - t0) / reps
+
+        try:
+            eager_cost(sizes[0])                 # warm the path once
+            rndv_cost(sizes[0])
+            threshold = sizes[-1]                # eager everywhere probed
+            for i, s in enumerate(sizes):
+                if rndv_cost(s) <= eager_cost(s):
+                    self.probed_crossover = s
+                    threshold = sizes[i - 1] if i else max(64, s // 2)
+                    break
+        finally:
+            self.arena.destroy(h)
+        return threshold
+
+    # ------------------------------------------------------------------
+    # sub-communicators
+    # ------------------------------------------------------------------
+    def split(self, color: int | None, key: int = 0) -> Optional["Comm"]:
+        """MPI_Comm_split: collective over this comm. Ranks supplying the
+        same ``color`` form a new communicator (ranked by ``(key, parent
+        rank)``) over the same arena with its own namespaced queue matrix
+        — tag spaces of parent and siblings are disjoint by construction.
+        ``color=None`` (MPI_UNDEFINED) participates but receives None."""
+        seq = self._derived_seq
+        self._derived_seq += 1
+        if color is not None and int(color) < 0:
+            raise ValueError("color must be a non-negative int or None")
+        c = -1 if color is None else int(color)
+        mine = np.array([c, int(key), self.rank], np.int64)
+        table = _coll.allgather_ring(self, mine).reshape(self.size, 3)
+        if color is None:
+            return None
+        members = sorted((int(k), int(r)) for cc, k, r in table if cc == c)
+        ranks = [r for _, r in members]
+        sub = Comm(self.arena, ranks.index(self.rank), len(ranks),
+                   cell_size=self.cell_size, n_cells=self.n_cells,
+                   eager_threshold=self.eager_threshold,
+                   name=_derived_name(self.name, f"s{seq}.{c}"))
+        sub.parent_ranks = tuple(ranks)
+        return sub
+
+    def dup(self) -> "Comm":
+        """MPI_Comm_dup: a congruent communicator (same group, same rank
+        order) with an independent queue matrix, hence a fully disjoint
+        tag/message space."""
+        seq = self._derived_seq
+        self._derived_seq += 1
+        sub = Comm(self.arena, self.rank, self.size,
+                   cell_size=self.cell_size, n_cells=self.n_cells,
+                   eager_threshold=self.eager_threshold,
+                   name=_derived_name(self.name, f"d{seq}"))
+        sub.parent_ranks = self.parent_ranks
+        return sub
+
+    def free(self) -> None:
+        """Release this comm's persistent round buffers, including those
+        of cached hierarchical sub-communicators (the queue matrix and
+        barrier objects stay in the arena — other ranks may still be
+        draining them; the paper's arena never frees those either)."""
+        for intra, inter in self._hier_cache.values():
+            if intra is not None:
+                intra.free()
+            if inter is not None:
+                inter.free()
+        self._hier_cache.clear()
+        self._rounds.free_all()
+
+    # ------------------------------------------------------------------
+    # persistent requests (MPI-4)
+    # ------------------------------------------------------------------
+    def send_init(self, dest: int, buf, tag: int = 0) -> PersistentRequest:
+        return PersistentRequest(self, "send", dest, buf, tag)
+
+    def recv_init(self, src: int, buf, tag: int = ANY_TAG
+                  ) -> PersistentRequest:
+        return PersistentRequest(self, "recv", src, buf, tag)
+
+    # ------------------------------------------------------------------
+    # pool-resident collective machinery
+    # ------------------------------------------------------------------
+    @property
+    def _resident(self) -> bool:
+        """True when round buffers can be aliased as raw numpy views:
+        memory-backed pool AND hardware-coherent mode. Otherwise the
+        methods fall back to the protocol-correct view-based algorithms."""
+        if self._resident_ok is None:
+            ok = self.arena.view.mode == "coherent"
+            if ok:
+                try:
+                    self.arena.pool.memview(0, 1)
+                except TypeError:
+                    ok = False
+            self._resident_ok = ok
+        return self._resident_ok
+
+    def _use_resident(self, nbytes: int) -> bool:
+        # small payloads stay on the eager cell path — a descriptor
+        # round-trip per round would cost more than it saves
+        return self._resident and self.size > 1 \
+            and nbytes > self.eager_threshold
+
+    # ------------------------------------------------------------------
+    # method collectives
+    # ------------------------------------------------------------------
+    def barrier(self) -> None:          # inherited seq-number barrier;
+        super().barrier()               # restated here as part of the API
+
+    def bcast(self, arr: np.ndarray | None, root: int = 0) -> np.ndarray:
+        """Binomial-tree broadcast; non-root ranks pass ``arr=None``.
+        Large payloads land once in a resident round buffer and are
+        forwarded to every child with zero sender-side copies."""
+        n, r = self.size, self.rank
+        if n == 1:
+            return np.asarray(arr).copy()
+        vr = (r - root) % n
+        # each rank picks its own forwarding path (the wire protocol is
+        # self-describing per message): resident ranks land the payload
+        # in a round buffer once and forward it as zero-copy PoolViews
+        if vr == 0:
+            a = np.ascontiguousarray(arr)
+            resident = self._use_resident(a.nbytes)
+            if resident:
+                pb, buf = self._rounds.array(0, (a.nbytes,), np.uint8)
+                np.copyto(buf, a.reshape(-1).view(np.uint8))
+            # ';' separator: dtype.str itself may contain '|' (e.g. "|u1")
+            meta = (f"{a.dtype.str};"
+                    f"{','.join(map(str, a.shape))}").encode()
+            out = a
+        else:
+            k = 1
+            while k * 2 <= vr:
+                k *= 2
+            parent = (vr - k + root) % n
+            meta, _ = self.recv(parent, tag=_T + 16)
+            dts, shs = meta.decode().split(";")
+            dtype = np.dtype(dts)
+            shape = tuple(int(x) for x in shs.split(",") if x)
+            nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+            # a leaf (no children to forward to) gains nothing from
+            # landing in a round buffer — it would just pay an extra
+            # pool->user copy; receive straight into user memory instead
+            kk = 1
+            while kk <= vr:
+                kk *= 2
+            has_child = vr + kk < n
+            resident = has_child and self._use_resident(nbytes)
+            if resident:
+                pb, buf = self._rounds.array(0, (nbytes,), np.uint8)
+                self.recv_into(parent, buf, tag=_T + 17)
+                out = buf.view(dtype).reshape(shape)
+            else:
+                out = np.empty(shape, dtype)
+                self.recv_into(parent, out, tag=_T + 17)
+        payload = pb.slice(0, out.nbytes) if resident else out
+        k = 1
+        while k < n:
+            if vr < k and vr + k < n:
+                child = (vr + k + root) % n
+                self.send(child, meta, tag=_T + 16)
+                self.send(child, payload, tag=_T + 17)
+            k *= 2
+        return np.array(out) if (resident or vr == 0) else out
+
+    def reduce(self, arr: np.ndarray, op=np.add, root: int = 0
+               ) -> np.ndarray | None:
+        arr = np.ascontiguousarray(arr)
+        if self.size == 1:
+            return arr.copy()
+        if not self._use_resident(arr.nbytes):
+            return _coll.reduce(self, arr, op, root)
+        n, r = self.size, self.rank
+        vr = (r - root) % n
+        pb, acc = self._rounds.array(0, arr.shape, arr.dtype)
+        np.copyto(acc, arr)
+        _, tmp = self._rounds.array(1, arr.shape, arr.dtype)
+        k = 1
+        while k < n:
+            if vr % (2 * k) == 0:
+                if vr + k < n:
+                    self.recv_into((vr + k + root) % n, tmp, tag=_T + 32)
+                    acc[...] = op(acc, tmp)
+            elif vr % (2 * k) == k:
+                self.send((vr - k + root) % n, pb.slice(0, arr.nbytes),
+                          tag=_T + 32)
+                return None
+            k *= 2
+        return np.array(acc) if r == root else None
+
+    def allreduce(self, arr: np.ndarray, op=np.add, algo: str = "auto",
+                  group_size: int | None = None) -> np.ndarray:
+        """allreduce with automatic algorithm selection:
+        recursive doubling (small, pow2 sizes), hierarchical (large
+        payloads on composite sizes — intra-group ring + inter-group
+        recursive doubling over split() sub-communicators), ring
+        reduce-scatter + allgather otherwise."""
+        arr = np.ascontiguousarray(arr)
+        n = self.size
+        if n == 1:
+            return arr.copy()
+        if algo == "auto":
+            if _is_pow2(n) and arr.size < 4096:
+                algo = "rd"
+            elif n >= 4 and _best_group(n) >= 2 and arr.size >= 4096:
+                algo = "hier"
+            else:
+                algo = "ring"
+        if algo == "hier":
+            return self._allreduce_hier(arr, op, group_size)
+        if algo == "rd":
+            return self._allreduce_rd(arr, op)
+        return self._allreduce_ring(arr, op)
+
+    def _allreduce_rd(self, arr: np.ndarray, op=np.add) -> np.ndarray:
+        n, r = self.size, self.rank
+        assert _is_pow2(n), "recursive doubling needs power-of-two size"
+        if not self._use_resident(arr.nbytes):
+            return _coll.allreduce_rd(self, arr, op)
+        pb, acc = self._rounds.array(0, arr.shape, arr.dtype)
+        np.copyto(acc, arr)
+        _, other = self._rounds.array(1, arr.shape, arr.dtype)
+        k = 1
+        rnd = 0
+        while k < n:
+            peer = r ^ k
+            sreq = self.isend(peer, pb.slice(0, arr.nbytes),
+                              tag=_T + 64 + rnd)
+            self.recv_into(peer, other, tag=_T + 64 + rnd)
+            sreq.wait()                 # ack: peer drained our buffer
+            acc[...] = op(acc, other)
+            k <<= 1
+            rnd += 1
+        return np.array(acc)
+
+    def _allreduce_ring(self, arr: np.ndarray, op=np.add) -> np.ndarray:
+        """Ring allreduce composed from reduce_scatter + allgather (the
+        same decomposition as the free-function path, chunk reorder
+        included). Each stage independently picks its resident or
+        fallback form — the two are wire-compatible (same tags, round
+        indices and sizes), so ranks whose eager thresholds or pool
+        capabilities differ still interoperate. On the resident path
+        every round ships a PoolView chunk (no staging) and pays one
+        pool->pool copy — ~2(n-1)/n of the payload per rank, half the
+        staged free-function cost."""
+        shard = self.reduce_scatter(arr, op)
+        flat = shards_to_chunk_order(self.allgather(shard, algo="ring"),
+                                     self.size)
+        return flat[:arr.size].reshape(arr.shape).astype(arr.dtype,
+                                                         copy=False)
+
+    def _hier_comms(self, g: int) -> tuple["Comm", "Comm"]:
+        cached = self._hier_cache.get(g)
+        if cached is None:
+            intra = self.split(self.rank // g, key=self.rank)
+            inter = self.split(self.rank % g, key=self.rank)
+            cached = (intra, inter)
+            self._hier_cache[g] = cached
+        return cached
+
+    def _allreduce_hier(self, arr: np.ndarray, op=np.add,
+                        group_size: int | None = None) -> np.ndarray:
+        """Hierarchical allreduce over split() sub-communicators:
+        intra-group ring reduce-scatter -> inter-group allreduce on the
+        shards (recursive doubling when the group count is pow2) ->
+        intra-group ring allgather. Groups are contiguous rank blocks of
+        ``group_size`` (default: largest divisor <= sqrt(n))."""
+        n = self.size
+        g = group_size if group_size is not None else _best_group(n)
+        if g < 2 or n % g != 0:
+            return self._allreduce_ring(arr, op)
+        intra, inter = self._hier_comms(g)
+        shard = intra.reduce_scatter(arr, op)
+        shard = inter.allreduce(
+            shard, op, algo="rd" if _is_pow2(inter.size) else "ring")
+        flat = shards_to_chunk_order(intra.allgather(shard), g)
+        return flat[:arr.size].reshape(arr.shape).astype(arr.dtype,
+                                                         copy=False)
+
+    def reduce_scatter(self, arr: np.ndarray, op=np.add) -> np.ndarray:
+        """Ring reduce-scatter; returns this rank's reduced shard (chunk
+        ``(rank+1) % size`` of the zero-padded flat payload)."""
+        arr = np.ascontiguousarray(arr)
+        n, r = self.size, self.rank
+        if n == 1:
+            return arr.reshape(-1).copy()
+        if not self._use_resident(arr.nbytes):
+            return _coll.reduce_scatter_ring(self, arr, op)
+        flat = arr.reshape(-1)
+        per = -(-flat.size // n)
+        pb, work = self._rounds.array(0, (n, per), arr.dtype)
+        wf = work.reshape(-1)
+        wf[:flat.size] = flat
+        if per * n > flat.size:
+            wf[flat.size:] = 0
+        _, inc = self._rounds.array(1, (per,), arr.dtype)
+        right, left = (r + 1) % n, (r - 1) % n
+        cb = per * arr.dtype.itemsize
+        for step in range(n - 1):
+            send_idx = (r - step) % n
+            recv_idx = (r - step - 1) % n
+            sreq = self.isend(right, pb.slice(send_idx * cb, cb),
+                              tag=_T + 128 + step)
+            self.recv_into(left, inc, tag=_T + 128 + step)
+            sreq.wait()
+            work[recv_idx] = op(work[recv_idx], inc)
+        return np.array(work[(r + 1) % n])
+
+    def allgather(self, shard: np.ndarray, algo: str = "auto"
+                  ) -> np.ndarray:
+        """All-gather; returns the flat concatenation in rank order.
+        ``algo``: ring | bruck | auto (ring for few ranks, Bruck's
+        ceil(log2 n) rounds beyond that)."""
+        shard = np.ascontiguousarray(shard)
+        n, r = self.size, self.rank
+        if n == 1:
+            return shard.reshape(-1).copy()
+        if algo == "auto":
+            algo = "bruck" if n >= 8 else "ring"
+        if not self._use_resident(shard.nbytes * n):
+            f = (_coll.allgather_bruck if algo == "bruck"
+                 else _coll.allgather_ring)
+            return f(self, shard).reshape(-1)
+        per = shard.size
+        sb = shard.nbytes
+        pb, work = self._rounds.array(0, (n, per), shard.dtype)
+        if algo == "bruck":
+            # blocks accumulate CONTIGUOUSLY in bruck order, so each
+            # round ships one PoolView over blocks[:count] — the
+            # packing concat of the non-resident path disappears
+            work[0] = shard.reshape(-1)
+            k = 1
+            have = 1
+            rnd = 0
+            while k < n:
+                count = min(k, n - k)
+                sreq = self.isend((r - k) % n, pb.slice(0, count * sb),
+                                  tag=_T + 512 + rnd)
+                self.recv_into((r + k) % n, work[have:have + count],
+                               tag=_T + 512 + rnd)
+                sreq.wait()
+                have += count
+                k <<= 1
+                rnd += 1
+            # work[i] holds rank (r+i) % n's shard — rotate to rank order
+            out = np.empty((n, per), shard.dtype)
+            for i in range(n):
+                out[(r + i) % n] = work[i]
+            return out.reshape(-1)
+        work[r] = shard.reshape(-1)
+        right, left = (r + 1) % n, (r - 1) % n
+        for step in range(n - 1):
+            send_idx = (r - step) % n
+            recv_idx = (r - step - 1) % n
+            sreq = self.isend(right, pb.slice(send_idx * sb, sb),
+                              tag=_T + 256 + step)
+            self.recv_into(left, work[recv_idx], tag=_T + 256 + step)
+            sreq.wait()
+        return np.array(work).reshape(-1)
+
+    def alltoall(self, blocks: list[np.ndarray]) -> list[np.ndarray]:
+        """Pairwise exchange; ``blocks[i]`` goes to rank i. Resident
+        path: one persistent round-buffer lane per peer, so all n-1
+        sends are outstanding zero-copy PoolViews at once."""
+        n, r = self.size, self.rank
+        assert len(blocks) == n
+        same = all(b.shape == blocks[0].shape and b.dtype == blocks[0].dtype
+                   for b in blocks)
+        total = sum(b.nbytes for b in blocks)
+        if n == 1:
+            return [blocks[0].copy()]
+        if not (same and self._use_resident(total)):
+            return _coll.alltoall(self, blocks)
+        out: list[np.ndarray | None] = [None] * n
+        out[r] = blocks[r].copy()
+        reqs = []
+        for off in range(1, n):
+            dst = (r + off) % n
+            pb, lane = self._rounds.array(1 + off, blocks[dst].shape,
+                                          blocks[dst].dtype)
+            np.copyto(lane, blocks[dst])
+            reqs.append(self.isend(dst, pb.slice(0, blocks[dst].nbytes),
+                                   tag=_T + 1024 + off))
+        for off in range(1, n):
+            src = (r - off) % n
+            out[src] = np.empty(blocks[src].shape, blocks[src].dtype)
+            self.recv_into(src, out[src], tag=_T + 1024 + off)
+        self.waitall(reqs)
+        return out

@@ -12,23 +12,36 @@ Two data-plane protocols, selected per message by ``eager_threshold``:
               intermediate ``bytes`` is ever materialized). Copies per
               message: user -> cell (1) + cell -> user (1).
 
-  RENDEZVOUS  payload > threshold, or any ``PoolBuffer`` send. The sender
-              stages the payload ONCE into a pool-resident object
-              ([ack 64B | payload]) and enqueues a single control
-              descriptor (total, tag, obj offset, obj name). The receiver
+  RENDEZVOUS  payload > threshold, or any ``PoolBuffer``/``PoolView``
+              send. The sender stages the payload ONCE into a
+              pool-resident object ([ack 64B | payload]) and enqueues a
+              single 32-byte control descriptor
+              (total, tag, ack offset, data offset). The receiver
               ``read_acquire_into``s its destination buffer straight from
               the staging object and writes the ack byte; the sender's
               progress engine then reclaims the stager. A ``PoolBuffer``
               (pool-resident application buffer, MPI_Alloc_mem analogue)
-              skips the staging copy entirely — zero sender-side copies,
-              the one-sided bulk path the paper's CXL fabric enables
-              (cf. foMPI routing large transfers through RMA windows).
+              — or a ``PoolView`` slice of one — skips the staging copy
+              entirely: zero sender-side copies, the one-sided bulk path
+              the paper's CXL fabric enables (cf. foMPI routing large
+              transfers through RMA windows). ``Comm``'s method
+              collectives (core/comm.py) send ``PoolView`` slices of
+              persistent round buffers so ring/Bruck rounds never
+              re-stage.
 
 Non-blocking isend/irecv return Request objects driven by an explicit
 progress pump (MPI_Test/MPI_Wait semantics — paper §3.4 keeps these
 unchanged, as do we: the message path itself is what got optimized).
-``recv_into``/``irecv_into`` deliver straight into caller buffers
-(numpy arrays included) with no ``frombuffer().copy()`` round trip.
+Every blocking call AND every ``test()``/``wait()`` — receives included —
+turns the send progress engine, so ``isend`` + ``irecv().wait()`` loops
+cannot deadlock on full queues. ``recv_into``/``irecv_into`` deliver
+straight into caller buffers (numpy arrays included) with no
+``frombuffer().copy()`` round trip.
+
+This module is the pt2pt ENGINE. The user-facing v2 surface — method
+collectives, ``split``/``dup`` sub-communicators, persistent requests,
+``eager_threshold="auto"`` — is the ``Comm`` facade in
+``repro.core.comm``, which subclasses ``Communicator``.
 
 Bootstrap: rank 0 creates the queue-matrix and barrier objects in the
 arena; other ranks poll ``open`` until they appear — this mirrors the
@@ -101,6 +114,28 @@ class PoolBuffer:
     def free(self) -> None:
         self._comm.arena.destroy(self._handle)
 
+    def slice(self, off: int = 0, nbytes: int | None = None) -> "PoolView":
+        """A sendable window [off, off+nbytes) of this buffer. Slices
+        share the buffer's single ack slot, so at most one send per
+        underlying buffer may be in flight at a time."""
+        nbytes = self.nbytes - off if nbytes is None else nbytes
+        if off < 0 or nbytes < 0 or off + nbytes > self.nbytes:
+            raise IndexError(
+                f"slice [{off}, {off + nbytes}) beyond PoolBuffer "
+                f"of {self.nbytes}B")
+        return PoolView(self, off, nbytes)
+
+
+@dataclass(frozen=True)
+class PoolView:
+    """A contiguous slice of a PoolBuffer, sendable with zero sender-side
+    copies: the rendezvous descriptor points the receiver straight at
+    pool memory. Produced by ``PoolBuffer.slice``; the ``Comm`` method
+    collectives send these for every ring/Bruck round."""
+    buffer: PoolBuffer
+    off: int
+    nbytes: int
+
 
 @dataclass
 class Request:
@@ -125,11 +160,34 @@ class Request:
             # SPSC queue (framing is contiguous per message)
             self._comm._progress()
             return self.done
+        # a receive must ALSO turn the full progress engine: a bare
+        # isend-to-peer + irecv().wait() loop would otherwise deadlock
+        # once the pair queue fills (each rank blocked in a recv that
+        # never advances its own outstanding send), and a synchronous
+        # send waited before a posted receive needs that receive matched
+        # passively (MPI posted-receive semantics)
+        if self._comm is not None:
+            self._comm._progress()
+            if self.done:                # completed by the engine
+                return True
+            if self._error is not None:
+                raise self._error
         try:
             next(self._gen)
         except StopIteration:
             self.done = True
+            self._unpost()
+        except BaseException:
+            self._unpost()               # keep the FIFO draining
+            raise
         return self.done
+
+    def _unpost(self) -> None:
+        if self._comm is None or self.kind != "recv":
+            return
+        fifo = self._comm._recv_fifo.get(self.src)
+        if fifo and fifo[0] is self:
+            fifo.popleft()
 
     def wait(self, timeout: float | None = 30.0):
         t0 = time.monotonic()
@@ -152,6 +210,7 @@ class Communicator:
         self.size = size
         self.name = name
         self.cell_size = cell_size
+        self.n_cells = n_cells
         # protocol switch: payloads <= threshold go through queue cells
         # (eager), larger ones through a pool staging object (rendezvous)
         self.eager_threshold = (cell_size if eager_threshold is None
@@ -167,10 +226,16 @@ class Communicator:
                                   cell_size, n_cells, initialize=True)
             self._barrier = SeqBarrier(arena.view, self._bar_obj.offset, size,
                                        rank, initialize=True)
+            # publication flag LAST: arena.create makes a name findable
+            # before its contents are initialized, and derived comms
+            # (split/dup) recycle dirty heap — a member must never map
+            # control words rank 0 has not zeroed yet
+            arena.create(f"{name}:ok", 64)
         else:
             t0 = time.monotonic()
             while True:
                 try:
+                    arena.open(f"{name}:ok")
                     self._mq_obj = arena.open(f"{name}:mq")
                     self._bar_obj = arena.open(f"{name}:bar")
                     break
@@ -192,6 +257,12 @@ class Communicator:
         # pair queue CONTIGUOUSLY, so only the head request of each
         # destination is ever pumped.
         self._send_fifo: dict[int, deque[Request]] = {}
+        # posted receives, one FIFO per source (the MPI posted-receive
+        # queue): the progress engine matches the HEAD of each source so
+        # a synchronous send can complete even if its peer waits other
+        # requests first; only the head ever drains the pair queue, so
+        # two receive generators never interleave one message's chunks
+        self._recv_fifo: dict[int, deque[Request]] = {}
         # rendezvous stagers awaiting the receiver's ack (then destroyed)
         self._stagers: list[ObjHandle] = []
         self._rndv_seq = 0
@@ -201,8 +272,9 @@ class Communicator:
         self.barrier()
 
     def _progress(self) -> None:
-        """Advance the head send of every destination FIFO, then reclaim
-        any rendezvous stagers the receivers have drained."""
+        """Advance the head send of every destination FIFO and the head
+        posted receive of every source FIFO, then reclaim any rendezvous
+        stagers the receivers have drained."""
         for fifo in self._send_fifo.values():
             while fifo:
                 head = fifo[0]
@@ -220,6 +292,25 @@ class Communicator:
                     head._error = e
                     fifo.popleft()
                     raise
+        for fifo in self._recv_fifo.values():
+            # pump EVERY posted receive once: generators self-restrict
+            # so only the effective head drains the pair queue, while
+            # later receives may still complete from parked messages
+            # (MPI: receives of different tags complete independently)
+            for req in list(fifo):
+                if req.done or req._error is not None:
+                    continue
+                try:
+                    next(req._gen)
+                except StopIteration:
+                    req.done = True          # matched passively
+                except BaseException as e:
+                    # a failed receive (e.g. truncation) is recorded on
+                    # its own request — never surfaced to the innocent
+                    # caller that happened to pump progress
+                    req._error = e
+            while fifo and (fifo[0].done or fifo[0]._error is not None):
+                fifo.popleft()
         if self._stagers:
             self._reclaim_stagers()
 
@@ -252,8 +343,7 @@ class Communicator:
         """``data``: any buffer-protocol object or a PoolBuffer."""
         req = self.isend(dest, data, tag)
         t0 = time.monotonic()
-        while not req.test():
-            self._progress()
+        while not req.test():           # test() runs the progress sweep
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError(f"send(dest={dest}, tag={tag})")
             time.sleep(0)
@@ -262,8 +352,7 @@ class Communicator:
              timeout: float | None = 30.0) -> tuple[bytes, int]:
         req = self.irecv(src, tag)
         t0 = time.monotonic()
-        while not req.test():
-            self._progress()
+        while not req.test():           # test() runs the progress sweep
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError(f"recv(src={src}, tag={tag})")
             time.sleep(0)
@@ -278,8 +367,7 @@ class Communicator:
         stays usable."""
         req = self.irecv_into(src, buf, tag)
         t0 = time.monotonic()
-        while not req.test():
-            self._progress()
+        while not req.test():           # test() runs the progress sweep
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError(f"recv_into(src={src}, tag={tag})")
             time.sleep(0)
@@ -304,7 +392,13 @@ class Communicator:
     # ------------------------------------------------------------------
     def isend(self, dest: int, data, tag: int = 0) -> Request:
         req = Request(kind="send", tag=tag)
-        pbuf = data if isinstance(data, PoolBuffer) else None
+        if isinstance(data, PoolBuffer):
+            pview: Optional[PoolView] = PoolView(data, 0, data.nbytes)
+        elif isinstance(data, PoolView):
+            pview = data
+        else:
+            pview = None
+        pbuf = pview.buffer if pview is not None else None
         if pbuf is not None:
             if pbuf._in_flight:
                 raise ValueError(
@@ -312,21 +406,22 @@ class Communicator:
                     "it to complete before sending the buffer again "
                     "(one ack slot per buffer)")
             pbuf._in_flight = True
-        mv = None if pbuf is not None else as_u8(data)
-        nbytes = pbuf.nbytes if pbuf is not None else len(mv)
+        mv = None if pview is not None else as_u8(data)
+        nbytes = pview.nbytes if pview is not None else len(mv)
         req.nbytes = nbytes
 
         def gen():
             if dest == self.rank:
-                if pbuf is not None:
-                    payload = pbuf.read()
+                if pview is not None:
+                    payload = bytes(self.arena.view.read_acquire(
+                        pbuf.offset + pview.off, nbytes)) if nbytes else b""
                     pbuf._in_flight = False
                 else:
                     payload = mv.tobytes()
                 self._parked[self.rank].append((payload, tag))
                 return
             q = self.mq.send_queue(dest)
-            if pbuf is None and nbytes <= self.eager_threshold:
+            if pview is None and nbytes <= self.eager_threshold:
                 # ---- eager: memoryview slices through queue cells ----
                 self.eager_sends += 1
                 for parts, flags in q.plan_message(mv, tag):
@@ -336,28 +431,33 @@ class Communicator:
             # ---- rendezvous: stage once, ship a descriptor ----
             self.rndv_sends += 1
             v = self.arena.view
-            if pbuf is not None:
-                h = pbuf._handle
-                v.nt_store_u8(h.offset, 0)          # arm the ack
+            if pview is not None:
+                # pool-resident source: no staging copy at all
+                ack_off = pbuf._handle.offset
+                data_off = pbuf.offset + pview.off
+                v.nt_store_u8(ack_off, 0)           # arm the ack
             else:
                 h = self.arena.create(
                     f"rv:{self.name}:{self.rank}:{dest}:{self._rndv_seq}",
                     _RNDV_CTRL + nbytes)
                 self._rndv_seq += 1
-                v.nt_store_u8(h.offset, 0)          # heap memory is dirty
+                ack_off = h.offset
+                data_off = h.offset + _RNDV_CTRL
+                v.nt_store_u8(ack_off, 0)           # heap memory is dirty
                 if nbytes:
-                    v.write_release(h.offset + _RNDV_CTRL, mv)
+                    v.write_release(data_off, mv)
+            # wire descriptor: [total u64 | tag u64 | ack u64 | data u64]
             desc = (nbytes.to_bytes(8, "little")
                     + int(tag).to_bytes(8, "little")
-                    + h.offset.to_bytes(8, "little")
-                    + h.name.encode())
+                    + ack_off.to_bytes(8, "little")
+                    + data_off.to_bytes(8, "little"))
             while not q.try_enqueue_parts(
                     (desc,), FLAG_FIRST | FLAG_LAST | FLAG_RNDV):
                 yield
-            if pbuf is not None:
+            if pview is not None:
                 # synchronous-mode: complete when the receiver drained
                 # the user's buffer (it is then reusable)
-                while not v.nt_load_u8(h.offset):
+                while not v.nt_load_u8(ack_off):
                     yield
                 pbuf._in_flight = False
             else:
@@ -403,6 +503,19 @@ class Communicator:
                 if src == self.rank:
                     yield
                     continue
+                # per-source matching is ordered: only the EFFECTIVE
+                # HEAD posted receive may drain the pair queue (it parks
+                # foreign tags; two generators interleaving one
+                # message's chunks would corrupt the framing). Non-head
+                # receives above still complete from parked messages.
+                fifo = self._recv_fifo.get(src)
+                if fifo:
+                    while fifo and (fifo[0].done
+                                    or fifo[0]._error is not None):
+                        fifo.popleft()
+                    if fifo and fifo[0] is not req:
+                        yield
+                        continue
                 q = self.mq.recv_queue(src)
                 out = q.try_dequeue()
                 if out is None:
@@ -423,23 +536,24 @@ class Communicator:
                 truncate = (match and dst is not None
                             and total > len(dst))
                 if flags & FLAG_RNDV:
-                    # ---- rendezvous: bulk-pull from the staging object
-                    obj_off = int.from_bytes(payload[16:24], "little")
+                    # ---- rendezvous: bulk-pull from the pool-resident
+                    # source (staging object or PoolBuffer/PoolView)
+                    ack_off = int.from_bytes(payload[16:24], "little")
+                    data_off = int.from_bytes(payload[24:32], "little")
                     if match and dst is not None and not truncate:
                         if total:
-                            v.read_acquire_into(obj_off + _RNDV_CTRL,
-                                                dst[:total])
-                        v.nt_store_u8(obj_off, 1)    # ack the drain
+                            v.read_acquire_into(data_off, dst[:total])
+                        v.nt_store_u8(ack_off, 1)    # ack the drain
                         req.nbytes, req.tag = total, t
                         return
                     if truncate:
-                        v.nt_store_u8(obj_off, 1)    # release the sender
+                        v.nt_store_u8(ack_off, 1)    # release the sender
                         raise ValueError(
                             f"recv_into: message of {total}B exceeds "
                             f"buffer of {len(dst)}B (message discarded)")
-                    d = (v.read_acquire(obj_off + _RNDV_CTRL, total)
+                    d = (v.read_acquire(data_off, total)
                          if total else b"")
-                    v.nt_store_u8(obj_off, 1)
+                    v.nt_store_u8(ack_off, 1)
                     if match:
                         req.data = d
                         req.nbytes, req.tag = total, t
@@ -474,14 +588,15 @@ class Communicator:
                     return
                 park.append((d, t))
         req._gen = gen()
+        req._comm = self        # wait()/test() must pump the send engine
+        self._recv_fifo.setdefault(src, deque()).append(req)
         return req
 
     def waitall(self, reqs: list[Request],
                 timeout: float | None = 30.0) -> None:
         t0 = time.monotonic()
         pending = list(reqs)
-        while pending:
-            self._progress()
+        while pending:                  # test() runs the progress sweep
             pending = [r for r in pending if not r.test()]
             if pending and timeout is not None \
                     and time.monotonic() - t0 > timeout:

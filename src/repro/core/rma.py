@@ -59,6 +59,7 @@ class Window:
                                  initialize=create)
         self._pscw = PSCW(v, pscw_off, n_ranks, rank, initialize=create)
         self._lock = RWLock(v, lock_off, n_ranks, rank, initialize=create)
+        self._freed = False
 
     # ------------------------------------------------------------------
     # address arithmetic (the MPI_Win_allocate_shared layout)
@@ -146,6 +147,18 @@ class Window:
             self._lock.release_excl()
 
     def free(self) -> None:
+        """Collective MPI_Win_free: every rank calls it. Fences first so
+        no rank is still inside an access/exposure epoch when the backing
+        objects go away, then rank 0 destroys them. Idempotent on every
+        rank (a second call is a no-op), and safe for non-root ranks that
+        were mid-epoch — the fence orders their last RMA op before the
+        destroy. Note: the destroy itself happens after the final sync
+        point, so do not re-create a window under the same name without
+        an external barrier."""
+        if self._freed:
+            return
+        self._freed = True
+        self._fence.wait()
         if self.rank == 0:
             try:
                 self.arena.destroy(self.data)

@@ -11,7 +11,11 @@
   multiprocessing SharedMemoryPool. This is the measurement configuration
   for the OSU-style benchmarks (real memory fabric vs. real TCP sockets).
 
-Both return per-rank results and re-raise the first rank failure.
+Both hand each rank a ``RankEnv`` whose ``comm`` is a v2 ``Comm``
+(method collectives, split/dup, persistent requests); pass
+``eager_threshold="auto"`` to have every rank micro-probe its
+eager/rendezvous crossover at init. Both return per-rank results and
+re-raise the first rank failure.
 """
 from __future__ import annotations
 
@@ -22,9 +26,9 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.core.arena import Arena
+from repro.core.comm import Comm
 from repro.core.pool import IncoherentPool, LocalPool, Pool, RankCache, \
     SharedMemoryPool
-from repro.core.pt2pt import Communicator
 
 
 @dataclass
@@ -32,7 +36,7 @@ class RankEnv:
     rank: int
     size: int
     arena: Arena
-    comm: Communicator
+    comm: Comm
 
 
 def _make_arena(pool: Pool, rank: int, coherent: bool,
@@ -49,7 +53,7 @@ def _make_arena(pool: Pool, rank: int, coherent: bool,
 def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
                 pool_bytes: int = 8 << 20, coherent: bool = True,
                 cell_size: int = 4096, n_cells: int = 8,
-                eager_threshold: int | None = None,
+                eager_threshold: int | str | None = None,
                 arena_kw: dict | None = None,
                 timeout: float = 60.0) -> list[Any]:
     pool = LocalPool(pool_bytes)
@@ -66,9 +70,9 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
 
     def worker(rank: int):
         try:
-            comm = Communicator(arenas[rank], rank, size,
-                                cell_size=cell_size, n_cells=n_cells,
-                                eager_threshold=eager_threshold)
+            comm = Comm(arenas[rank], rank, size,
+                        cell_size=cell_size, n_cells=n_cells,
+                        eager_threshold=eager_threshold)
             gate.wait(timeout)
             results[rank] = fn(RankEnv(rank, size, arenas[rank], comm))
         except BaseException as e:  # noqa: BLE001 — reported to the caller
@@ -95,15 +99,14 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
 # --------------------------------------------------------------------------
 
 def _proc_entry(shm_name: str, rank: int, size: int, fn, cell_size: int,
-                n_cells: int, eager_threshold: int | None,
+                n_cells: int, eager_threshold: int | str | None,
                 arena_kw: dict, q: mp.Queue):
     try:
         pool = SharedMemoryPool(0, name=shm_name, create=False)
         arena = Arena(pool, rank, mode="coherent", initialize=False,
                       **arena_kw)
-        comm = Communicator(arena, rank, size, cell_size=cell_size,
-                            n_cells=n_cells,
-                            eager_threshold=eager_threshold)
+        comm = Comm(arena, rank, size, cell_size=cell_size,
+                    n_cells=n_cells, eager_threshold=eager_threshold)
         out = fn(RankEnv(rank, size, arena, comm))
         q.put((rank, "ok", out))
         pool.close()
@@ -114,7 +117,7 @@ def _proc_entry(shm_name: str, rank: int, size: int, fn, cell_size: int,
 def run_processes(size: int, fn: Callable[[RankEnv], Any], *,
                   pool_bytes: int = 64 << 20,
                   cell_size: int = 16384, n_cells: int = 8,
-                  eager_threshold: int | None = None,
+                  eager_threshold: int | str | None = None,
                   arena_kw: dict | None = None,
                   timeout: float = 120.0) -> list[Any]:
     arena_kw = arena_kw or {}

@@ -1,10 +1,10 @@
 """Host-side coordination over cMPI — the control-plane callers of
-``core/collectives``.
+the ``Comm`` method collectives.
 
 The device mesh (jax side, ``schedules.py``) synchronizes gradients; the
 HOSTS still have to coordinate: agree on checkpoint manifests, reduce
 scalar training metrics across ranks, and advance data-pipeline epochs in
-lockstep. These helpers run those flows over the cMPI Communicator with
+lockstep. These helpers run those flows over the cMPI ``Comm`` (API v2) with
 ndarray views end to end — metric vectors travel as buffer-protocol sends
 and land via ``recv_into`` (inside the collectives), never through
 ``tobytes()`` / ``frombuffer().copy()`` round trips. Large manifests
@@ -20,21 +20,20 @@ import json
 
 import numpy as np
 
-from repro.core import collectives as coll
-from repro.core.pt2pt import Communicator
+from repro.core.comm import Comm
 
 
-def allreduce_metrics(comm: Communicator, metrics: dict[str, float],
+def allreduce_metrics(comm: Comm, metrics: dict[str, float],
                       op=np.add) -> dict[str, float]:
     """Reduce a {name: scalar} dict across all ranks (sum by default).
     Keys must match on every rank; values travel as one float64 vector."""
     keys = sorted(metrics)
     vec = np.array([float(metrics[k]) for k in keys], np.float64)
-    out = coll.allreduce(comm, vec, op=op)
+    out = comm.allreduce(vec, op=op)
     return dict(zip(keys, out.tolist()))
 
 
-def bcast_manifest(comm: Communicator, manifest: dict | None,
+def bcast_manifest(comm: Comm, manifest: dict | None,
                    root: int = 0) -> dict:
     """Broadcast a JSON-serializable manifest (checkpoint index, data
     epoch plan, elastic membership) from ``root`` to every rank.
@@ -46,20 +45,20 @@ def bcast_manifest(comm: Communicator, manifest: dict | None,
         arr = np.frombuffer(blob, np.uint8)
     else:
         arr = None
-    out = coll.bcast(comm, arr, root=root)
+    out = comm.bcast(arr, root=root)
     return json.loads(out.tobytes().decode())
 
 
-def sync_epoch(comm: Communicator, epoch: int, root: int = 0) -> int:
+def sync_epoch(comm: Comm, epoch: int, root: int = 0) -> int:
     """Advance the data-pipeline epoch in lockstep: every rank adopts
     the root's epoch counter (a barrier + 8-byte broadcast)."""
-    coll.barrier_dissemination(comm)
-    out = coll.bcast(comm, np.array([epoch], np.int64), root=root)
+    comm.barrier()
+    out = comm.bcast(np.array([epoch], np.int64), root=root)
     return int(out[0])
 
 
-def agree_max_step(comm: Communicator, step: int) -> int:
+def agree_max_step(comm: Comm, step: int) -> int:
     """Elastic-restart helper: the cluster resumes from the HIGHEST step
     any surviving rank holds a complete checkpoint for."""
-    out = coll.allreduce(comm, np.array([step], np.int64), op=np.maximum)
+    out = comm.allreduce(np.array([step], np.int64), op=np.maximum)
     return int(out[0])

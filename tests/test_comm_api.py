@@ -1,0 +1,536 @@
+"""Comm API v2: method collectives over pool-resident round buffers,
+split/dup sub-communicators, hierarchical allreduce, persistent requests,
+the auto-tuned eager threshold, deprecation shims, and the progress /
+window-free regression fixes."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import run_threads
+from repro.core.comm import _best_group, _derived_name
+
+CELL = 4096
+
+
+# --------------------------------------------------------------------------
+# split / dup
+# --------------------------------------------------------------------------
+
+class TestSplitDup:
+    def test_split_remaps_ranks_and_groups(self):
+        def prog(env):
+            sub = env.comm.split(env.rank % 2, key=env.rank)
+            s = sub.allreduce(np.array([float(env.rank)]))
+            return sub.rank, sub.size, sub.parent_ranks, float(s[0])
+
+        res = run_threads(4, prog, cell_size=CELL)
+        assert res[0] == (0, 2, (0, 2), 2.0)    # evens: 0 + 2
+        assert res[2] == (1, 2, (0, 2), 2.0)
+        assert res[1] == (0, 2, (1, 3), 4.0)    # odds: 1 + 3
+        assert res[3] == (1, 2, (1, 3), 4.0)
+
+    def test_split_key_reorders(self):
+        def prog(env):
+            sub = env.comm.split(0, key=-env.rank)    # reversed order
+            return sub.rank, sub.parent_ranks
+
+        res = run_threads(3, prog, cell_size=CELL)
+        assert [r[0] for r in res] == [2, 1, 0]
+        assert all(r[1] == (2, 1, 0) for r in res)
+
+    def test_split_color_none_excluded(self):
+        def prog(env):
+            sub = env.comm.split(0 if env.rank < 2 else None,
+                                 key=env.rank)
+            if sub is None:
+                return None
+            return sub.size, float(sub.allreduce(
+                np.array([1.0]))[0])
+
+        res = run_threads(3, prog, cell_size=CELL)
+        assert res[0] == (2, 2.0) and res[1] == (2, 2.0)
+        assert res[2] is None
+
+    def test_disjoint_tag_spaces(self):
+        """The SAME tag on parent, split and dup never cross-matches:
+        each derived comm owns its own queue matrix."""
+        def prog(env):
+            peer = 1 - env.rank
+            sub = env.comm.split(0, key=env.rank)
+            d = env.comm.dup()
+            env.comm.send(peer, b"parent", tag=5)
+            sub.send(peer, b"split", tag=5)
+            d.send(peer, b"dup", tag=5)
+            a, _ = d.recv(peer, tag=5)
+            b, _ = env.comm.recv(peer, tag=5)
+            c, _ = sub.recv(peer, tag=5)
+            return a, b, c
+
+        for got in run_threads(2, prog, cell_size=CELL):
+            assert got == (b"dup", b"parent", b"split")
+
+    def test_nested_split(self):
+        def prog(env):
+            half = env.comm.split(env.rank // 2, key=env.rank)
+            solo = half.split(half.rank, key=0)       # size-1 comms
+            v = solo.allreduce(np.array([float(env.rank)]))
+            again = half.split(0, key=-half.rank)     # re-split, reversed
+            return solo.size, float(v[0]), again.rank, half.rank
+
+        res = run_threads(4, prog, cell_size=CELL)
+        for r, (ssz, v, arank, hrank) in enumerate(res):
+            assert ssz == 1 and v == float(r)
+            assert arank == 1 - hrank
+
+    def test_dup_congruent(self):
+        def prog(env):
+            d = env.comm.dup()
+            assert (d.rank, d.size) == (env.rank, env.size)
+            out = d.allreduce(np.full(5, float(env.rank + 1)))
+            return out[0]
+
+        assert all(v == 6.0 for v in run_threads(3, prog, cell_size=CELL))
+
+    def test_derived_name_stays_short(self):
+        name = "world"
+        for i in range(8):
+            name = _derived_name(name, f"s{i}.{i}")
+        assert len(name) <= 24
+
+
+# --------------------------------------------------------------------------
+# method collectives (pool-resident and fallback paths)
+# --------------------------------------------------------------------------
+
+class TestMethodCollectives:
+    @pytest.mark.parametrize("coherent,nelem", [(True, 23), (True, 20000),
+                                                (False, 23), (False, 20000)])
+    def test_allreduce_matches_free(self, coherent, nelem):
+        """Method allreduce == free-function result on both the resident
+        path (large, coherent) and every fallback."""
+        def prog(env):
+            x = (np.arange(nelem, dtype=np.float64) + 1) * (env.rank + 1)
+            return env.comm.allreduce(x, algo="ring")
+
+        n = 3
+        exp = (np.arange(nelem, dtype=np.float64) + 1) * sum(
+            range(1, n + 1))
+        for out in run_threads(n, prog, coherent=coherent, cell_size=CELL,
+                               pool_bytes=32 << 20):
+            assert np.allclose(out, exp)
+
+    @pytest.mark.parametrize("n", [2, 4])
+    def test_allreduce_rd_resident(self, n):
+        def prog(env):
+            return env.comm.allreduce(
+                np.full(9000, float(env.rank + 1)), algo="rd")
+
+        for out in run_threads(n, prog, cell_size=CELL,
+                               pool_bytes=32 << 20):
+            assert np.allclose(out, sum(range(1, n + 1)))
+
+    @pytest.mark.parametrize("n,g", [(4, None), (4, 2), (6, None), (6, 3)])
+    def test_allreduce_hier(self, n, g):
+        def prog(env):
+            x = np.arange(10000.0) * (env.rank + 1)
+            return env.comm.allreduce(x, algo="hier", group_size=g)
+
+        exp = np.arange(10000.0) * sum(range(1, n + 1))
+        for out in run_threads(n, prog, cell_size=CELL,
+                               pool_bytes=64 << 20, timeout=120):
+            assert np.allclose(out, exp)
+
+    def test_hier_subcomms_cached(self):
+        def prog(env):
+            c = env.comm
+            c.allreduce(np.arange(8000.0), algo="hier")
+            n_cached = len(c._hier_cache)
+            c.allreduce(np.arange(8000.0), algo="hier")
+            return n_cached, len(c._hier_cache)
+
+        for a, b in run_threads(4, prog, cell_size=CELL,
+                                pool_bytes=64 << 20):
+            assert a == b == 1          # split() ran once, then reused
+
+    @pytest.mark.parametrize("algo", ["ring", "bruck"])
+    def test_allgather_resident(self, algo):
+        n = 5
+
+        def prog(env):
+            shard = np.full(3000, float(env.rank))
+            return env.comm.allgather(shard, algo=algo)
+
+        exp = np.concatenate([np.full(3000, float(i)) for i in range(n)])
+        for out in run_threads(n, prog, cell_size=CELL,
+                               pool_bytes=64 << 20, timeout=120):
+            assert np.array_equal(out, exp)
+
+    def test_bcast_reduce_scatter_alltoall_methods(self):
+        n = 4
+
+        def prog(env):
+            c = env.comm
+            b = c.bcast(np.arange(12000.0) if env.rank == 2 else None,
+                        root=2)
+            rs = c.reduce_scatter(np.arange(8.0) + env.rank)
+            a2a = c.alltoall([np.full(4000, env.rank * 10 + d, np.int64)
+                              for d in range(n)])
+            red = c.reduce(np.full(6000, float(env.rank)), root=1)
+            c.barrier()
+            return b, rs, [int(x[0]) for x in a2a], red
+
+        res = run_threads(n, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          timeout=120)
+        full = sum(np.arange(8.0) + r for r in range(n))
+        for r, (b, rs, a2a, red) in enumerate(res):
+            assert np.allclose(b, np.arange(12000.0))
+            k = 2 * ((r + 1) % n)
+            assert np.allclose(rs, full[k:k + 2])
+            assert a2a == [s * 10 + r for s in range(n)]
+            if r == 1:
+                assert np.allclose(red, sum(range(n)))
+            else:
+                assert red is None
+
+    def test_resident_copies_fewer_bytes(self):
+        """The acceptance bar at test scale: comm.allreduce moves fewer
+        protocol-counted bytes per call than the free-function path."""
+        from repro.core import collectives as coll
+        nelem = 32768                    # 256 KB float64
+
+        def prog(env):
+            x = np.full(nelem, float(env.rank + 1))
+            coll.allreduce(env.comm, x, algo="ring")   # warm
+            env.comm.allreduce(x, algo="ring")
+            st = env.arena.view.stats
+            c0 = st.copied_bytes
+            a = coll.allreduce(env.comm, x, algo="ring")
+            c1 = st.copied_bytes
+            b = env.comm.allreduce(x, algo="ring")
+            c2 = st.copied_bytes
+            assert np.allclose(a, b)
+            return c1 - c0, c2 - c1
+
+        res = run_threads(2, prog, cell_size=16384, pool_bytes=64 << 20,
+                          timeout=120)
+        free_b = sum(r[0] for r in res)
+        meth_b = sum(r[1] for r in res)
+        assert meth_b < free_b
+        # per-round staging is gone: expect ~2x, allow protocol headroom
+        assert free_b > 1.5 * meth_b
+
+    def test_round_buffers_persist(self):
+        """Repeated method collectives reuse the round-buffer pool:
+        arena slot count is flat across iterations."""
+        def prog(env):
+            x = np.arange(20000.0)
+            env.comm.allreduce(x, algo="ring")
+            env.comm.barrier()
+            s0 = env.arena.stats()["slots_used"]
+            for _ in range(4):
+                env.comm.allreduce(x, algo="ring")
+                env.comm.barrier()
+            return s0, env.arena.stats()["slots_used"]
+
+        for s0, s1 in run_threads(2, prog, cell_size=CELL,
+                                  pool_bytes=32 << 20):
+            assert s0 == s1
+
+    def test_best_group(self):
+        assert _best_group(4) == 2
+        assert _best_group(6) == 2
+        assert _best_group(9) == 3
+        assert _best_group(12) == 3
+        assert _best_group(7) == 1       # prime: no hierarchy
+
+
+# --------------------------------------------------------------------------
+# persistent requests
+# --------------------------------------------------------------------------
+
+class TestPersistentRequests:
+    @pytest.mark.parametrize("nelem", [16, 30000])   # eager and staged
+    def test_reuse_n_iterations(self, nelem):
+        iters = 6
+
+        def prog(env):
+            peer = 1 - env.rank
+            sbuf = np.zeros(nelem, np.float64)
+            rbuf = np.zeros(nelem, np.float64)
+            ps = env.comm.send_init(peer, sbuf, tag=7)
+            pr = env.comm.recv_init(peer, rbuf, tag=7)
+            got = []
+            slots = []
+            for i in range(iters):
+                sbuf[:] = i * (env.rank + 1)
+                ps.start()
+                pr.start()
+                n = pr.wait()
+                ps.wait()
+                assert n == sbuf.nbytes
+                got.append(float(rbuf[0]))
+                env.comm.barrier()       # align slot counts across ranks
+                slots.append(env.arena.stats()["slots_used"])
+            return got, slots
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          timeout=120)
+        assert res[0][0] == [i * 2.0 for i in range(iters)]
+        assert res[1][0] == [i * 1.0 for i in range(iters)]
+        # the staged plan allocates its stager ONCE: no per-iteration
+        # arena create/destroy churn
+        for _, slots in res:
+            assert len(set(slots)) == 1
+
+    def test_start_while_active_raises(self):
+        def prog(env):
+            if env.rank == 0:
+                buf = bytearray(8)
+                pr = env.comm.recv_init(1, buf, tag=1)
+                pr.start()
+                with pytest.raises(RuntimeError, match="active"):
+                    pr.start()
+                env.comm.send(1, b"", tag=2)     # unblock the sender
+                pr.wait()
+                return bytes(buf)
+            env.comm.recv(0, tag=2)
+            env.comm.send(0, b"deadbeef", tag=1)
+            return None
+
+        assert run_threads(2, prog, cell_size=CELL)[0] == b"deadbeef"
+
+    def test_poolbuffer_persistent_send(self):
+        def prog(env):
+            if env.rank == 0:
+                pb = env.comm.alloc_buffer(CELL * 2)
+                ps = env.comm.send_init(1, pb, tag=3)
+                for i in range(3):
+                    pb.view()[:] = bytes([i]) * (CELL * 2)
+                    ps.start()
+                    ps.wait()
+                assert ps._mode == "pool"
+                return None
+            out = []
+            dst = bytearray(CELL * 2)
+            for _ in range(3):
+                env.comm.recv_into(0, dst, tag=3)
+                out.append(dst[0])
+            return out
+
+        assert run_threads(2, prog, cell_size=CELL)[1] == [0, 1, 2]
+
+    def test_free_releases_stager(self):
+        def prog(env):
+            if env.rank == 0:
+                ps = env.comm.send_init(1, bytearray(CELL * 4), tag=1)
+                before = env.arena.stats()["slots_used"]
+                ps.start()
+                env.comm.recv(1, tag=2)
+                ps.wait()
+                ps.free()
+                return before - 1 == env.arena.stats()["slots_used"]
+            env.comm.recv(0, tag=1)
+            env.comm.send(0, b"", tag=2)
+            return True
+
+        assert all(run_threads(2, prog, cell_size=CELL))
+
+
+# --------------------------------------------------------------------------
+# auto-tuned eager threshold
+# --------------------------------------------------------------------------
+
+class TestAutoThreshold:
+    def test_probe_records_crossover(self):
+        def prog(env):
+            assert isinstance(env.comm.eager_threshold, int)
+            assert env.comm.eager_threshold >= 64
+            peer = 1 - env.rank
+            env.comm.send(peer, b"x" * (CELL * 3), tag=1)
+            data, _ = env.comm.recv(peer, tag=1)
+            return len(data), env.comm.eager_threshold
+
+        res = run_threads(2, prog, cell_size=CELL,
+                          eager_threshold="auto", pool_bytes=32 << 20)
+        assert all(r[0] == CELL * 3 for r in res)
+
+    def test_subcomms_inherit_resolved_threshold(self):
+        def prog(env):
+            sub = env.comm.split(0, key=env.rank)
+            return env.comm.eager_threshold == sub.eager_threshold \
+                and isinstance(sub.eager_threshold, int)
+
+        assert all(run_threads(2, prog, cell_size=CELL,
+                               eager_threshold="auto",
+                               pool_bytes=32 << 20))
+
+
+# --------------------------------------------------------------------------
+# regressions: recv progress pump, collective window free
+# --------------------------------------------------------------------------
+
+class TestRegressions:
+    def test_irecv_wait_pumps_send_progress(self):
+        """Head-to-head isend + bare irecv().wait(): before the fix the
+        recv path never advanced the sender's FIFO, deadlocking once the
+        pair queue filled."""
+        big = bytes(CELL * 16)
+
+        def prog(env):
+            peer = 1 - env.rank
+            sreq = env.comm.isend(peer, big, tag=1)
+            rreq = env.comm.irecv(peer, tag=1)
+            data = rreq.wait(60)
+            sreq.wait(60)
+            return len(data)
+
+        res = run_threads(2, prog, cell_size=CELL, n_cells=4,
+                          eager_threshold=1 << 30, timeout=120)
+        assert res == [len(big), len(big)]
+
+    def test_posted_recv_matched_while_waiting_send(self):
+        """A synchronous (pool-resident) send waited BEFORE a posted
+        receive: the progress engine must match the posted receive
+        passively (MPI posted-receive semantics), or a ring of
+        start(send); start(recv); wait(send) deadlocks."""
+        def prog(env):
+            c = env.comm
+            peer = (c.rank + 1) % c.size
+            src = (c.rank - 1) % c.size
+            sbuf = np.full(4000, float(c.rank))      # > threshold: staged
+            rbuf = np.zeros(4000)
+            ps = c.send_init(peer, sbuf, tag=11)
+            pr = c.recv_init(src, rbuf, tag=11)
+            for _ in range(3):
+                ps.start()
+                pr.start()
+                ps.wait(60)              # sync send first — needs the
+                pr.wait(60)              # engine to match pr passively
+            return float(rbuf[0])
+
+        res = run_threads(3, prog, cell_size=CELL, timeout=120)
+        assert res == [2.0, 0.0, 1.0]
+
+    def test_posted_recvs_match_in_order_per_source(self):
+        """Two posted receives from one source complete in post order
+        even when the user waits them out of order."""
+        def prog(env):
+            if env.rank == 0:
+                env.comm.send(1, b"first", tag=1)
+                env.comm.send(1, b"second", tag=2)
+                return None
+            r1 = env.comm.irecv(0, tag=1)
+            r2 = env.comm.irecv(0, tag=2)
+            b = r2.wait(30)              # out-of-order wait
+            a = r1.wait(30)
+            return a, b
+
+        res = run_threads(2, prog, cell_size=CELL)
+        assert res[1] == (b"first", b"second")
+
+    def test_nonhead_recv_completes_from_park(self):
+        """Receives of different tags complete independently: a later
+        posted irecv whose message was parked by the head must finish
+        even while the head is still unmatched."""
+        def prog(env):
+            if env.rank == 0:
+                env.comm.send(1, b"tag2-first", tag=2)
+                env.comm.recv(1, tag=9, timeout=30)   # rb delivered?
+                env.comm.send(1, b"tag1-later", tag=1)
+                return None
+            ra = env.comm.irecv(0, tag=1)
+            rb = env.comm.irecv(0, tag=2)
+            b = rb.wait(30)              # must not starve behind ra
+            env.comm.send(0, b"", tag=9)
+            a = ra.wait(30)
+            return a, b
+
+        res = run_threads(2, prog, cell_size=CELL, timeout=60)
+        assert res[1] == (b"tag1-later", b"tag2-first")
+
+    def test_mixed_eager_thresholds_interoperate(self):
+        """Collectives stay wire-compatible when ranks disagree on the
+        eager threshold (the auto-probe is per-rank): resident and
+        fallback stages must exchange the same rounds."""
+        def prog(env):
+            # force maximal disagreement: rank 0 rendezvous-everything,
+            # rank 1 eager-everything
+            env.comm.eager_threshold = 0 if env.rank == 0 else 1 << 30
+            x = (np.arange(16384, dtype=np.float64) + 1) * (env.rank + 1)
+            a = env.comm.allreduce(x, algo="ring")
+            g = env.comm.allgather(np.full(2000, float(env.rank)))
+            b = env.comm.bcast(np.arange(9000.0) if env.rank == 0
+                               else None)
+            return a, g, b
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          timeout=120)
+        for a, g, b in res:
+            assert np.allclose(a, (np.arange(16384.0) + 1) * 3)
+            assert np.allclose(g.reshape(2, -1)[1], 1.0)
+            assert np.allclose(b, np.arange(9000.0))
+
+    def test_window_free_collective_idempotent(self):
+        """Every rank calls free(); non-root ranks may still be inside
+        an epoch — free fences first, and double-free is a no-op."""
+        def prog(env):
+            win = env.comm.win_allocate("wf", 256)
+            win.fence()
+            win.put(0, 8 * env.rank, np.float64(env.rank + 1))
+            win.free()
+            win.free()                   # idempotent
+            return True
+
+        assert all(run_threads(3, prog, pool_bytes=8 << 20))
+
+    def test_window_free_releases_objects(self):
+        def prog(env):
+            env.comm.barrier()           # no rank has created yet
+            before = env.arena.stats()["slots_used"]
+            win = env.comm.win_allocate("wf2", 128)
+            win.fence()
+            win.free()
+            env.comm.barrier()
+            return env.arena.stats()["slots_used"] - before
+
+        res = run_threads(2, prog, pool_bytes=8 << 20)
+        assert res[0] == 0 and res[1] == 0
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+class TestDeprecationShims:
+    @pytest.mark.parametrize("name", ["Communicator", "bcast", "reduce",
+                                      "allreduce", "allgather_ring",
+                                      "allgather_bruck", "alltoall",
+                                      "barrier_dissemination",
+                                      "reduce_scatter_ring"])
+    def test_old_names_warn_and_resolve(self, name):
+        import repro.core as core
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            obj = getattr(core, name)
+        assert obj is not None
+        assert any(issubclass(w.category, DeprecationWarning)
+                   for w in caught)
+
+    def test_old_free_function_path_still_works(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from repro.core import Communicator, bcast
+
+        def prog(env):
+            assert isinstance(env.comm, Communicator)   # Comm subclasses
+            return bcast(env.comm,
+                         np.arange(6.0) if env.rank == 0 else None)
+
+        for out in run_threads(2, prog, cell_size=CELL):
+            assert np.allclose(out, np.arange(6.0))
+
+    def test_unknown_attr_still_raises(self):
+        import repro.core as core
+        with pytest.raises(AttributeError):
+            core.definitely_not_an_api
