@@ -7,22 +7,31 @@ modeled : calibrated model across CXL SHM / TCP-Ethernet / TCP-CX6 for the
 measured: the real cMPI transports on this host (2 procs): one-sided =
           RMA window put/get, two-sided = SPSC queue send/recv, vs real
           localhost TCP.
-protocol: eager (queue cells) vs rendezvous (pool-resident staging /
-          PoolBuffer zero-copy sends) crossover — latency AND bytes
-          copied per message as counted by ProtocolStats, the paper's
-          copies-are-the-cost model.
+protocol: eager (queue cells) vs staged rendezvous (sender staging
+          object) vs POSTED rendezvous (receiver-posted matchbox entry,
+          one copy total) vs pool-resident-source rendezvous — latency
+          AND bytes copied per message as counted by ProtocolStats, the
+          paper's copies-are-the-cost model. Posted rendezvous must copy
+          >= 1.9x fewer bytes than staged at 1 MB (asserted).
 collective: free-function allreduce (per-round staged rendezvous) vs the
           Comm-method allreduce (persistent pool-resident round buffers,
           PoolView zero-sender-copy rounds) — copied bytes per rank on
           1 MB payloads, the Comm API v2 headline.
 
 ``--smoke`` runs a CI-sized subset: the ``eager_threshold="auto"``
-crossover micro-probe plus the collective copied-bytes comparison.
+crossover micro-probe, the per-path copied-bytes measurement (with the
+posted-vs-staged assertion) and the collective comparison — then gates
+the numbers against the checked-in budget
+(``artifacts/bench/budget_copies.json``, +-10%). ``--write-budget``
+regenerates the budget from the current measurement.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -33,6 +42,12 @@ from repro.perfmodel.interconnects import (CXL_SHM, ETHERNET_TCP,
 
 KB = 1024
 MiB = 1024 * 1024
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+BUDGET_PATH = ART / "budget_copies.json"
+SMOKE_PATH = ART / "smoke_copies.json"
+BUDGET_TOL = 0.10
+POSTED_MIN_RATIO = 1.9      # posted rendezvous vs staged, copied bytes
 
 MODEL_SIZES = [1, 8, 64, 512, 4 * KB, 16 * KB, 64 * KB, 256 * KB,
                1 * MiB, 8 * MiB]
@@ -78,17 +93,32 @@ def run_measured_rma(sizes, iters=100) -> dict[int, float]:
     return run_processes(2, prog, pool_bytes=128 << 20, timeout=600)[0]
 
 
-def run_protocols(sizes, iters=60) -> list[list]:
-    """Eager vs rendezvous: one-way stream latency + copied bytes/message.
+PROTOCOLS = ("eager", "rndv_staged", "rndv_posted", "rndv_poolsrc")
 
-    eager      forces every message through queue cells (threshold = inf);
-    rendezvous sends from a PoolBuffer (pool-resident source, zero
-               sender-side copies; receiver bulk read_acquire_into).
+
+def run_protocols(sizes, iters=60) -> tuple[list[list], dict]:
+    """Per-path one-way stream latency + copied bytes/message.
+
+    eager         every message through queue cells (threshold = inf);
+                  ~2 payload copies (user -> cell, cell -> user).
+    rndv_staged   sender stages into a fresh pool object, receiver
+                  drains it: ~2 payload copies + per-message arena
+                  metadata traffic.
+    rndv_posted   the receiver pre-posts a pool-resident destination
+                  (matchbox entry); the sender writes the payload
+                  straight into it: ONE payload copy, zero receiver-side
+                  drain, no arena churn. The receive is posted before
+                  the credit message that releases the sender, so every
+                  iteration deterministically hits the entry.
+    rndv_poolsrc  sender-side zero copy (PoolBuffer source), receiver
+                  drains once: ONE payload copy (the PR 1 headline).
+
     Copied bytes come from each rank's ProtocolStats delta across the
     loop: every physical data move through the coherence protocol,
-    framing headers and descriptors included (the PoolBuffer path does
-    no per-message arena metadata traffic, so its delta is essentially
-    pure payload + one descriptor per message).
+    framing headers and descriptors included. Returns (csv_rows,
+    {(protocol, size): (latency_s, copied_bytes_per_msg)}) and asserts
+    the posted path copies >= 1.9x fewer bytes than staged at the
+    largest size.
     """
     from repro.core.runtime import run_processes
 
@@ -96,33 +126,42 @@ def run_protocols(sizes, iters=60) -> list[list]:
         def prog(env):
             out = {}
             for s in sizes:
-                dst = bytearray(s)
-                if protocol == "rendezvous" and env.rank == 0:
+                if protocol == "rndv_poolsrc" and env.rank == 0:
                     src = env.comm.alloc_buffer(s)
                     src.view()[:] = b"\xab" * s
                 else:
                     src = b"\xab" * s
+                if protocol == "rndv_posted" and env.rank == 1:
+                    dst = env.comm.alloc_buffer(s)
+                else:
+                    dst = bytearray(s)
                 env.comm.barrier()
                 st = env.arena.view.stats
                 c0 = st.copied_bytes
                 t0 = time.perf_counter()
                 for _ in range(iters):
                     if env.rank == 0:
-                        env.comm.send(1, src, tag=1)
                         env.comm.recv(1, tag=2)      # 1-byte credit
+                        env.comm.send(1, src, tag=1)
                     else:
-                        env.comm.recv_into(0, dst, tag=1)
+                        # post the receive FIRST, then release the
+                        # sender: posted entries exist before the
+                        # sender's descriptor (matchbox contract)
+                        rreq = env.comm.irecv_into(0, dst, tag=1)
                         env.comm.send(0, b"", tag=2)
+                        rreq.wait()
                 dt = time.perf_counter() - t0
                 c1 = st.copied_bytes
                 env.comm.barrier()
-                out[s] = (dt / iters, c1 - c0)
+                hits = env.comm.posted_sends
+                out[s] = (dt / iters, c1 - c0, hits)
             return out
         return prog
 
     rows = []
     results = {}
-    for protocol, thresh in (("eager", 1 << 40), ("rendezvous", 0)):
+    for protocol in PROTOCOLS:
+        thresh = 1 << 40 if protocol == "eager" else 0
         res = run_processes(2, make_prog(protocol), pool_bytes=256 << 20,
                             cell_size=16384,
                             eager_threshold=thresh, timeout=600)
@@ -132,24 +171,32 @@ def run_protocols(sizes, iters=60) -> list[list]:
             results[(protocol, s)] = (lat, copied)
             rows.append(["measured", "protocol", f"cmpi_{protocol}", 2, s,
                          f"{lat * 1e6:.2f}", f"{copied:.0f}"])
-    # crossover + headline copy ratio
+        if protocol == "rndv_posted":
+            hits = res[0][max(sizes)][2]
+            assert hits > 0, "posted protocol never hit a matchbox entry"
+    # crossover + headline copy ratios
     cross = next((s for s in sizes
-                  if results[("rendezvous", s)][0]
+                  if results[("rndv_staged", s)][0]
                   <= results[("eager", s)][0]), None)
     print(f"eager/rendezvous latency crossover: "
           f"{cross if cross is not None else f'> {sizes[-1]}'} bytes")
     big = sizes[-1]
-    ratio = (results[("eager", big)][1]
-             / max(results[("rendezvous", big)][1], 1))
+    staged = results[("rndv_staged", big)][1]
+    posted = results[("rndv_posted", big)][1]
+    ratio = staged / max(posted, 1)
     print(f"copied bytes per {big}B message: "
-          f"eager {results[('eager', big)][1]:.0f} vs "
-          f"rendezvous {results[('rendezvous', big)][1]:.0f} "
-          f"-> {ratio:.2f}x fewer on rendezvous")
-    return rows
+          f"eager {results[('eager', big)][1]:.0f}, "
+          f"staged {staged:.0f}, posted {posted:.0f}, "
+          f"poolsrc {results[('rndv_poolsrc', big)][1]:.0f} "
+          f"-> {ratio:.2f}x fewer on posted vs staged")
+    assert ratio >= POSTED_MIN_RATIO, (
+        f"posted rendezvous must copy >= {POSTED_MIN_RATIO}x fewer bytes "
+        f"than staged at {big}B (got {ratio:.2f}x)")
+    return rows, results
 
 
 def run_collectives(nbytes: int = 1 << 20, iters: int = 4,
-                    procs: int = 2) -> list[list]:
+                    procs: int = 2) -> tuple[list[list], float, float]:
     """Copied bytes per rank for a ``nbytes`` allreduce: the deprecated
     free-function path (every ring round stages into a fresh arena
     object) vs ``comm.allreduce`` (persistent pool-resident round
@@ -188,10 +235,11 @@ def run_collectives(nbytes: int = 1 << 20, iters: int = 4,
     assert meth_b < free_b, (
         "pool-resident method collectives must copy fewer bytes than "
         "the free-function path")
-    return [["measured", "collective", "cmpi_allreduce_free", procs,
+    rows = [["measured", "collective", "cmpi_allreduce_free", procs,
              nbytes, "", f"{free_b:.0f}"],
             ["measured", "collective", "cmpi_allreduce_comm", procs,
              nbytes, "", f"{meth_b:.0f}"]]
+    return rows, free_b, meth_b
 
 
 def run_crossover_probe(procs: int = 2) -> None:
@@ -232,10 +280,11 @@ def run(quick: bool = False) -> list[list]:
                      f"{tcp_lat[s] * 1e6:.2f}", ""])
     proto_sizes = [64 * KB, 1 * MiB] if quick else \
         [16 * KB, 64 * KB, 256 * KB, 1 * MiB]
-    rows += run_protocols(proto_sizes, iters=20 if quick else 60)
+    proto_rows, _ = run_protocols(proto_sizes, iters=20 if quick else 60)
+    rows += proto_rows
     if not quick:
         # quick mode skips this: CI runs it via --smoke in the next step
-        rows += run_collectives(iters=4)
+        rows += run_collectives(iters=4)[0]
     write_csv("fig5_8_osu",
               ["kind", "sided", "fabric", "procs", "msg_bytes",
                "latency_us", "bandwidth_MiB_s_or_copied_B"], rows)
@@ -256,20 +305,105 @@ def main(quick: bool = False) -> None:
     print(f"{len(meas)} measured rows (see artifacts/bench/fig5_8_osu.csv)")
 
 
-def smoke() -> None:
+# --------------------------------------------------------------------------
+# copied-bytes regression gate (CI bench-gate job)
+# --------------------------------------------------------------------------
+
+def check_budget(measured: dict, budget: dict,
+                 tol: float = BUDGET_TOL) -> list[str]:
+    """Compare measured copied-bytes-per-message against the checked-in
+    budget. Returns human-readable violations: a REGRESSION when a path
+    copies more than budget*(1+tol), a STALE BUDGET when it copies less
+    than budget*(1-tol) (refresh with --write-budget so future
+    regressions are caught against the improved number)."""
+    problems = []
+    for key, ref in budget.items():
+        got = measured.get(key)
+        if got is None:
+            problems.append(f"MISSING: {key} not measured")
+            continue
+        if got > ref * (1 + tol):
+            problems.append(
+                f"REGRESSION: {key} copies {got:.0f}B/msg, budget "
+                f"{ref:.0f}B (+{(got / ref - 1) * 100:.1f}% > "
+                f"+{tol * 100:.0f}%)")
+        elif got < ref * (1 - tol):
+            problems.append(
+                f"STALE BUDGET: {key} copies {got:.0f}B/msg, budget "
+                f"{ref:.0f}B ({(got / ref - 1) * 100:.1f}% < "
+                f"-{tol * 100:.0f}%) — rerun with --write-budget")
+    for key in measured:
+        if key not in budget:
+            problems.append(f"UNBUDGETED: {key} measured but not in "
+                            f"budget — rerun with --write-budget")
+    return problems
+
+
+def run_budget_gate(write_budget: bool = False) -> None:
+    """Measure copied bytes/message on every protocol path plus the
+    collective pair, record the numbers (artifacts/bench/
+    smoke_copies.json), and gate them against the checked-in budget."""
+    _, proto = run_protocols([1 * MiB], iters=6)
+    rows, free_b, meth_b = run_collectives(iters=2)
+    measured = {f"pt2pt_{p}@1MiB": proto[(p, 1 * MiB)][1]
+                for p in PROTOCOLS}
+    measured["collective_allreduce_free@1MiB_2p"] = free_b
+    measured["collective_allreduce_comm@1MiB_2p"] = meth_b
+    ART.mkdir(parents=True, exist_ok=True)
+    SMOKE_PATH.write_text(json.dumps(
+        {"copied_bytes_per_message": {k: round(v, 1)
+                                      for k, v in measured.items()}},
+        indent=2) + "\n")
+    print(f"measured copied bytes/message written to {SMOKE_PATH}")
+    if write_budget:
+        BUDGET_PATH.write_text(json.dumps({
+            "_comment": ("copied-bytes-per-message budget for the CI "
+                         "bench-gate job; regenerate with "
+                         "`python -m benchmarks.fig5_8_osu --smoke "
+                         "--write-budget`"),
+            "tolerance": BUDGET_TOL,
+            "copied_bytes_per_message": {k: round(v, 1)
+                                         for k, v in measured.items()},
+        }, indent=2) + "\n")
+        print(f"budget written to {BUDGET_PATH}")
+        return
+    if not BUDGET_PATH.exists():
+        sys.exit(f"no budget at {BUDGET_PATH}; generate one with "
+                 f"`python -m benchmarks.fig5_8_osu --smoke "
+                 f"--write-budget` and commit it")
+    budget = json.loads(BUDGET_PATH.read_text())
+    tol = budget.get("tolerance", BUDGET_TOL)
+    problems = check_budget(measured,
+                            budget["copied_bytes_per_message"], tol)
+    if problems:
+        print("copied-bytes budget gate FAILED:")
+        for p in problems:
+            print(f"  {p}")
+        sys.exit(1)
+    print(f"copied-bytes budget gate OK "
+          f"({len(measured)} paths within +-{tol * 100:.0f}%)")
+
+
+def smoke(write_budget: bool = False) -> None:
     """CI-sized subset: the auto-threshold crossover probe plus the
-    pool-resident collective copied-bytes comparison."""
+    per-path copied-bytes measurement (posted-vs-staged assertion
+    included) gated against the checked-in budget."""
     run_crossover_probe()
-    run_collectives(iters=2)
+    run_budget_gate(write_budget=write_budget)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI subset: crossover probe + collective copies")
+                    help="CI subset: crossover probe + per-path copied "
+                         "bytes, gated against the checked-in budget")
+    ap.add_argument("--write-budget", action="store_true",
+                    help="with --smoke: regenerate "
+                         "artifacts/bench/budget_copies.json instead of "
+                         "gating against it")
     args = ap.parse_args()
-    if args.smoke:
-        smoke()
+    if args.smoke or args.write_budget:
+        smoke(write_budget=args.write_budget)
     else:
         main(quick=args.quick)

@@ -36,8 +36,10 @@ from repro.core.arena import Arena, ArenaFullError, ObjHandle, PAPER_ARENA
 from repro.core.coherence import CoherentView, ProtocolStats
 from repro.core.comm import Comm, PersistentRequest, startall
 from repro.core.pool import (CACHELINE, IncoherentPool, LocalPool, Pool,
-                             RankCache, SharedMemoryPool, as_u8)
-from repro.core.pt2pt import ANY_TAG, PoolBuffer, PoolView, Request
+                             RankCache, Registration, SharedMemoryPool,
+                             as_u8)
+from repro.core.pt2pt import (ANY_TAG, DEFAULT_MB_SLOTS, Matchbox,
+                              PoolBuffer, PoolView, Request)
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
                                   QueueMatrix, SPSCQueue)
 from repro.core.rma import Window

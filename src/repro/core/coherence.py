@@ -59,6 +59,12 @@ class ProtocolStats:
     # words are counted separately as nt_ops
     copies: int = 0
     copied_bytes: int = 0
+    # attribution overlay: PAYLOAD bytes of the copies above, broken down
+    # by the pt2pt data-plane path that moved them (the messaging layers
+    # report via count_path). Not additive to copied_bytes — framing,
+    # descriptors and arena metadata stay unattributed.
+    path_copied_bytes: dict = field(default_factory=lambda: {
+        "eager": 0, "rndv_staged": 0, "rndv_posted": 0})
 
     def lines(self, n: int) -> int:
         return (n + CACHELINE - 1) // CACHELINE
@@ -93,6 +99,11 @@ class CoherentView:
         outside the view (staging memcpys in the messaging layers)."""
         self.stats.copies += k
         self.stats.copied_bytes += k * nbytes
+
+    def count_path(self, path: str, nbytes: int) -> None:
+        """Attribute ``nbytes`` of already-counted payload movement to a
+        pt2pt data-plane path (eager / rndv_staged / rndv_posted)."""
+        self.stats.path_copied_bytes[path] += nbytes
 
     def write_release(self, off: int, data) -> None:
         """store; flush; sfence — makes the write globally visible.

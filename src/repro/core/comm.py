@@ -51,9 +51,9 @@ import numpy as np
 from repro.core import collectives as _coll
 from repro.core.arena import Arena, _hash_name
 from repro.core.collectives import _is_pow2, shards_to_chunk_order
-from repro.core.pool import as_u8
-from repro.core.pt2pt import (ANY_TAG, Communicator, PoolBuffer, PoolView,
-                              Request, _RNDV_CTRL)
+from repro.core.pool import Registration, as_u8
+from repro.core.pt2pt import (ANY_TAG, DEFAULT_MB_SLOTS, Communicator,
+                              PoolBuffer, PoolView, Request, _RNDV_CTRL)
 from repro.core.ringqueue import DEFAULT_CELL_SIZE
 
 _T = 0x7F000000          # collectives tag space (shared with collectives.py)
@@ -151,6 +151,7 @@ class PersistentRequest:
         self.started = 0
         self._active: Optional[Request] = None
         self._stager: Optional[PoolBuffer] = None
+        self._reg: Optional[Registration] = None
         if kind == "send":
             if isinstance(buf, (PoolBuffer, PoolView)):
                 self._mode = "pool"
@@ -164,9 +165,25 @@ class PersistentRequest:
                 else:
                     self._mode = "eager"
         else:
-            self._mv = as_u8(buf)
-            if self._mv.readonly:
-                raise ValueError("recv_init needs a writable buffer")
+            if isinstance(buf, (PoolBuffer, PoolView, Registration)):
+                # pool-addressable destination: every start() re-arms a
+                # matchbox entry pointing straight at it
+                self._dest = buf
+                self._mv = None
+            else:
+                self._mv = as_u8(buf)
+                if self._mv.readonly:
+                    raise ValueError("recv_init needs a writable buffer")
+                if len(self._mv) > comm.eager_threshold \
+                        and comm._mb is not None:
+                    # pre-post pinning: register the user buffer ONCE so
+                    # each start() re-arms the same shadow-backed entry —
+                    # flat arena footprint, one receiver-side copy
+                    # (shadow -> user) per iteration
+                    self._reg = comm.register(self._mv)
+                    self._dest = self._reg
+                else:
+                    self._dest = self._mv
             self._mode = "recv"
 
     @property
@@ -183,17 +200,19 @@ class PersistentRequest:
                 self._active = self._comm.isend(self.peer, self._payload,
                                                 self.tag)
             elif self._mode == "staged":
-                # refill the persistent stager (the one staging copy),
-                # then ship it zero-copy — no arena churn per iteration
-                self._stager.write(self._mv)
+                # claim-aware persistent plan: a matchbox hit writes the
+                # user buffer straight into the receiver's posted
+                # destination (one copy, stager untouched); a miss
+                # refills the persistent stager in place — either way,
+                # no arena churn per iteration
                 self._active = self._comm.isend(
-                    self.peer, self._stager.slice(0, len(self._mv)),
-                    self.tag)
+                    self.peer, self._mv, self.tag,
+                    _prestaged=self._stager)
             else:
                 self._active = self._comm.isend(self.peer, self._mv,
                                                 self.tag)
         else:
-            self._active = self._comm.irecv_into(self.peer, self._mv,
+            self._active = self._comm.irecv_into(self.peer, self._dest,
                                                  self.tag)
         self.started += 1
         return self
@@ -215,6 +234,9 @@ class PersistentRequest:
         if self._stager is not None:
             self._stager.free()
             self._stager = None
+        if self._reg is not None:
+            self._reg.free()
+            self._reg = None
 
 
 def startall(reqs: list[PersistentRequest]) -> list[PersistentRequest]:
@@ -230,11 +252,13 @@ class Comm(Communicator):
     def __init__(self, arena: Arena, rank: int, size: int, *,
                  cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
                  eager_threshold: int | str | None = None,
+                 mb_slots: int = DEFAULT_MB_SLOTS,
                  name: str = "world", open_timeout: float = 30.0):
         auto = eager_threshold == "auto"
         super().__init__(arena, rank, size, cell_size=cell_size,
                          n_cells=n_cells,
                          eager_threshold=None if auto else eager_threshold,
+                         mb_slots=mb_slots,
                          name=name, open_timeout=open_timeout)
         self._derived_seq = 0
         self._hier_cache: dict[int, tuple["Comm", "Comm"]] = {}
@@ -318,6 +342,7 @@ class Comm(Communicator):
         sub = Comm(self.arena, ranks.index(self.rank), len(ranks),
                    cell_size=self.cell_size, n_cells=self.n_cells,
                    eager_threshold=self.eager_threshold,
+                   mb_slots=self.mb_slots,
                    name=_derived_name(self.name, f"s{seq}.{c}"))
         sub.parent_ranks = tuple(ranks)
         return sub
@@ -331,15 +356,21 @@ class Comm(Communicator):
         sub = Comm(self.arena, self.rank, self.size,
                    cell_size=self.cell_size, n_cells=self.n_cells,
                    eager_threshold=self.eager_threshold,
+                   mb_slots=self.mb_slots,
                    name=_derived_name(self.name, f"d{seq}"))
         sub.parent_ranks = self.parent_ranks
         return sub
 
     def free(self) -> None:
-        """Release this comm's persistent round buffers, including those
-        of cached hierarchical sub-communicators (the queue matrix and
-        barrier objects stay in the arena — other ranks may still be
-        draining them; the paper's arena never frees those either)."""
+        """Collective MPI_Comm_free: every rank calls it. Frees cached
+        hierarchical sub-communicators (each a collective free over its
+        own group), releases the persistent round buffers, retracts this
+        rank's matchbox postings, fences, and finally destroys the queue
+        matrix / barrier / matchbox / publication arena objects (rank 0,
+        after the fence — no rank is still draining them). Idempotent on
+        every rank; the communicator is unusable afterwards."""
+        if self._freed:
+            return
         for intra, inter in self._hier_cache.values():
             if intra is not None:
                 intra.free()
@@ -347,6 +378,7 @@ class Comm(Communicator):
                 inter.free()
         self._hier_cache.clear()
         self._rounds.free_all()
+        super().free()
 
     # ------------------------------------------------------------------
     # persistent requests (MPI-4)
@@ -429,7 +461,7 @@ class Comm(Communicator):
             resident = has_child and self._use_resident(nbytes)
             if resident:
                 pb, buf = self._rounds.array(0, (nbytes,), np.uint8)
-                self.recv_into(parent, buf, tag=_T + 17)
+                self.recv_into(parent, pb.slice(0, nbytes), tag=_T + 17)
                 out = buf.view(dtype).reshape(shape)
             else:
                 out = np.empty(shape, dtype)
@@ -455,12 +487,15 @@ class Comm(Communicator):
         vr = (r - root) % n
         pb, acc = self._rounds.array(0, arr.shape, arr.dtype)
         np.copyto(acc, arr)
-        _, tmp = self._rounds.array(1, arr.shape, arr.dtype)
+        pb_t, tmp = self._rounds.array(1, arr.shape, arr.dtype)
         k = 1
         while k < n:
             if vr % (2 * k) == 0:
                 if vr + k < n:
-                    self.recv_into((vr + k + root) % n, tmp, tag=_T + 32)
+                    # pool-resident destination: posted rendezvous lets
+                    # the child write its partial straight into tmp
+                    self.recv_into((vr + k + root) % n,
+                                   pb_t.slice(0, arr.nbytes), tag=_T + 32)
                     acc[...] = op(acc, tmp)
             elif vr % (2 * k) == k:
                 self.send((vr - k + root) % n, pb.slice(0, arr.nbytes),
@@ -500,14 +535,18 @@ class Comm(Communicator):
             return _coll.allreduce_rd(self, arr, op)
         pb, acc = self._rounds.array(0, arr.shape, arr.dtype)
         np.copyto(acc, arr)
-        _, other = self._rounds.array(1, arr.shape, arr.dtype)
+        pb_o, other = self._rounds.array(1, arr.shape, arr.dtype)
         k = 1
         rnd = 0
         while k < n:
             peer = r ^ k
+            # pre-post the incoming block, THEN send: the peer's payload
+            # can land in ``other`` with one copy and no drain
+            rreq = self.irecv_into(peer, pb_o.slice(0, arr.nbytes),
+                                   tag=_T + 64 + rnd)
             sreq = self.isend(peer, pb.slice(0, arr.nbytes),
                               tag=_T + 64 + rnd)
-            self.recv_into(peer, other, tag=_T + 64 + rnd)
+            rreq.wait()
             sreq.wait()                 # ack: peer drained our buffer
             acc[...] = op(acc, other)
             k <<= 1
@@ -574,15 +613,17 @@ class Comm(Communicator):
         wf[:flat.size] = flat
         if per * n > flat.size:
             wf[flat.size:] = 0
-        _, inc = self._rounds.array(1, (per,), arr.dtype)
+        pb_i, inc = self._rounds.array(1, (per,), arr.dtype)
         right, left = (r + 1) % n, (r - 1) % n
         cb = per * arr.dtype.itemsize
         for step in range(n - 1):
             send_idx = (r - step) % n
             recv_idx = (r - step - 1) % n
+            rreq = self.irecv_into(left, pb_i.slice(0, cb),
+                                   tag=_T + 128 + step)
             sreq = self.isend(right, pb.slice(send_idx * cb, cb),
                               tag=_T + 128 + step)
-            self.recv_into(left, inc, tag=_T + 128 + step)
+            rreq.wait()
             sreq.wait()
             work[recv_idx] = op(work[recv_idx], inc)
         return np.array(work[(r + 1) % n])
@@ -615,10 +656,12 @@ class Comm(Communicator):
             rnd = 0
             while k < n:
                 count = min(k, n - k)
+                rreq = self.irecv_into((r + k) % n,
+                                       pb.slice(have * sb, count * sb),
+                                       tag=_T + 512 + rnd)
                 sreq = self.isend((r - k) % n, pb.slice(0, count * sb),
                                   tag=_T + 512 + rnd)
-                self.recv_into((r + k) % n, work[have:have + count],
-                               tag=_T + 512 + rnd)
+                rreq.wait()
                 sreq.wait()
                 have += count
                 k <<= 1
@@ -633,9 +676,11 @@ class Comm(Communicator):
         for step in range(n - 1):
             send_idx = (r - step) % n
             recv_idx = (r - step - 1) % n
+            rreq = self.irecv_into(left, pb.slice(recv_idx * sb, sb),
+                                   tag=_T + 256 + step)
             sreq = self.isend(right, pb.slice(send_idx * sb, sb),
                               tag=_T + 256 + step)
-            self.recv_into(left, work[recv_idx], tag=_T + 256 + step)
+            rreq.wait()
             sreq.wait()
         return np.array(work).reshape(-1)
 

@@ -44,6 +44,37 @@ def as_u8(buf) -> memoryview:
     return mv
 
 
+class Registration:
+    """A user buffer PINNED for receiver-posted rendezvous (the cMPI
+    analogue of MPI-3 memory registration; cf. foMPI registering
+    window memory so remote writes can land without target-side work).
+
+    ``Communicator.register`` pairs the user's writable view with a
+    pool-resident SHADOW region. A receive posted on a registration
+    advertises the shadow's offset in the matchbox, a claiming sender
+    writes the payload straight into the shadow, and completion drains
+    shadow -> user exactly once — no per-message staging object, flat
+    arena footprint across iterations. Non-posted deliveries (eager,
+    staged fallback) bypass the shadow and land in the user view
+    directly. Free with ``.free()`` (or ``Communicator.unregister``);
+    the pin is NOT released automatically.
+    """
+
+    __slots__ = ("mv", "nbytes", "shadow_off", "_handle", "_owner",
+                 "closed")
+
+    def __init__(self, mv: memoryview, shadow_off: int, handle, owner):
+        self.mv = mv
+        self.nbytes = len(mv)
+        self.shadow_off = shadow_off
+        self._handle = handle
+        self._owner = owner
+        self.closed = False
+
+    def free(self) -> None:
+        self._owner.unregister(self)
+
+
 class Pool:
     """Flat byte region with read/write access."""
 

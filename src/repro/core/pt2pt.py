@@ -29,6 +29,23 @@ Two data-plane protocols, selected per message by ``eager_threshold``:
               persistent round buffers so ring/Bruck rounds never
               re-stage.
 
+  POSTED      rendezvous, receiver-first (foMPI's lesson: expose the
+              DESTINATION, not the source). ``recv_into``/``irecv_into``
+              on a pool-resident (``PoolBuffer``/``PoolView``) or
+              pool-registered (``Registration``) destination publish a
+              MATCHBOX entry ``[post_id | tag | dest_off | capacity]``
+              for their (src, dst) pair before the sender's descriptor
+              exists. A sender that finds a matching entry writes the
+              payload STRAIGHT into the receiver's buffer — one copy
+              total, zero receiver-side drain — signals readiness
+              through the entry's claim word (the drain-ack byte role,
+              reversed), and ships a ``FLAG_POSTED`` descriptor naming
+              the entry so per-pair FIFO matching still happens in
+              queue order. Miss, capacity overflow, or an unregistered
+              destination fall back to the staged path above:
+              wire-compatible in both directions (old senders never see
+              entries; old receivers never post them).
+
 Non-blocking isend/irecv return Request objects driven by an explicit
 progress pump (MPI_Test/MPI_Wait semantics — paper §3.4 keeps these
 unchanged, as do we: the message path itself is what got optimized).
@@ -58,9 +75,10 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.arena import Arena, ObjHandle
-from repro.core.pool import as_u8
+from repro.core.coherence import CoherentView
+from repro.core.pool import Registration, as_u8
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, FLAG_FIRST, FLAG_LAST,
-                                  FLAG_RNDV, QueueMatrix)
+                                  FLAG_POSTED, FLAG_RNDV, QueueMatrix)
 from repro.core.rma import Window
 from repro.core.sync import SeqBarrier
 
@@ -69,6 +87,128 @@ ANY_TAG = -1
 # rendezvous staging object layout: [ctrl 64B | payload]; ctrl byte 0 is
 # the receiver-written ack ("drained, reclaim/reuse me")
 _RNDV_CTRL = 64
+
+# --------------------------------------------------------------------------
+# matchbox: receiver-posted rendezvous entries (one strip per ordered pair)
+# --------------------------------------------------------------------------
+# Entry layout (one cacheline, every field accessed non-temporally so no
+# rank ever caches another rank's control words):
+#
+#   0:8    post_id   receiver-written; 0 = empty, else a per-pair
+#                    monotonically increasing id (published LAST)
+#   8:16   tag       receiver-written; 2^64-1 = ANY_TAG wildcard
+#   16:24  dest_off  receiver-written; absolute pool offset of the
+#                    destination payload region
+#   24:32  capacity  receiver-written
+#   32:40  claim     sender-written; (post_id << 2) | state — the
+#                    drain-ack byte of the staged path, role-reversed:
+#                    the SENDER acks delivery into the receiver's buffer
+#   40:48  fill      sender-written; delivered payload bytes
+#
+# Single-writer discipline (CXL pooled memory has no cross-host atomic
+# RMW, paper §3.5): the receiver only writes the first four words, the
+# sender only the last two. The claim/retract race is resolved
+# Dekker-style: the sender publishes a PENDING claim, re-reads post_id,
+# and only then commits (after the payload write) or aborts; a receiver
+# retracting a posting waits out a PENDING claim and salvages a
+# committed one (see Communicator._mb_retract).
+_MB_ENTRY = 64
+_MB_TAG = 8
+_MB_DEST = 16
+_MB_CAP = 24
+_MB_CLAIM = 32
+_MB_FILL = 40
+_MB_ANY = (1 << 64) - 1
+_CLAIM_PENDING, _CLAIM_COMMIT, _CLAIM_ABORT = 1, 2, 3
+DEFAULT_MB_SLOTS = 4
+
+
+class Matchbox:
+    """The per-pair strips of receiver-posted entries, addressed like the
+    queue matrix: the strip for (receiver, sender) holds ``n_slots``
+    entries the receiver posts and the sender scans."""
+
+    def __init__(self, view: CoherentView, base: int, n_ranks: int,
+                 n_slots: int, *, initialize: bool = False):
+        self.view = view
+        self.base = base
+        self.n = n_ranks
+        self.n_slots = n_slots
+        if initialize:
+            # derived comms recycle dirty heap: zero every entry before
+            # the communicator's :ok publication makes them findable
+            view.write_release(
+                base, bytes(self.region_bytes(n_ranks, n_slots)))
+
+    @staticmethod
+    def region_bytes(n_ranks: int, n_slots: int) -> int:
+        return n_ranks * n_ranks * n_slots * _MB_ENTRY
+
+    def entry_off(self, recv: int, send: int, slot: int) -> int:
+        return self.base + ((recv * self.n + send) * self.n_slots
+                            + slot) * _MB_ENTRY
+
+    def post(self, recv: int, send: int, slot: int, post_id: int,
+             tag: int, dest_off: int, capacity: int) -> None:
+        v = self.view
+        off = self.entry_off(recv, send, slot)
+        v.nt_store_u64(off + _MB_TAG,
+                       _MB_ANY if tag == ANY_TAG else int(tag) & _MB_ANY)
+        v.nt_store_u64(off + _MB_DEST, dest_off)
+        v.nt_store_u64(off + _MB_CAP, capacity)
+        v.nt_store_u64(off, post_id)          # publish last
+
+
+@dataclass
+class _PostRecord:
+    """Receiver-side bookkeeping for one live matchbox posting."""
+    src: int
+    slot: int
+    post_id: int
+    tag: int                                 # the receive's criterion
+    dest: "_RecvDest"
+    owner: Any                               # the posting Request
+
+
+class _RecvDest:
+    """Resolved destination of a ``*_into`` receive: a writable sink for
+    the eager/staged delivery paths plus, when the destination is
+    pool-addressable, the coordinates a matchbox posting advertises.
+
+      plain buffer          sink = the user view; not postable
+      PoolBuffer/PoolView   sink aliases pool memory (or a bounce temp on
+                            pools without raw views); postable
+      Registration          sink = the user view (eager/staged bypass the
+                            shadow); postable at the shadow's offset,
+                            with a shadow -> user drain on posted
+                            completion
+    """
+
+    __slots__ = ("mv", "capacity", "post_off", "postable", "indirect",
+                 "reg")
+
+    def __init__(self, mv: memoryview, *, post_off: int = -1,
+                 postable: bool = False, indirect: bool = False,
+                 reg: Registration | None = None):
+        self.mv = mv
+        self.capacity = len(mv)
+        self.post_off = post_off
+        self.postable = postable
+        self.indirect = indirect
+        self.reg = reg
+
+    def flush(self, view: CoherentView, n: int) -> None:
+        """Indirect pool destination: move the bounce temp into the pool
+        through the coherence protocol (counted)."""
+        if self.indirect and n:
+            view.write_release(self.post_off, self.mv[:n])
+
+    def finish_posted(self, view: CoherentView, n: int) -> None:
+        """Posted completion landed at ``post_off``; for a registration
+        that is the shadow — drain it into the user view once."""
+        if self.reg is not None and n:
+            view.read_acquire_into(self.post_off, self.mv[:n])
+            view.count_path("rndv_posted", n)
 
 
 class PoolBuffer:
@@ -204,6 +344,7 @@ class Communicator:
     def __init__(self, arena: Arena, rank: int, size: int, *,
                  cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
                  eager_threshold: int | None = None,
+                 mb_slots: int = DEFAULT_MB_SLOTS,
                  name: str = "world", open_timeout: float = 30.0):
         self.arena = arena
         self.rank = rank
@@ -217,8 +358,13 @@ class Communicator:
                                 else eager_threshold)
         self.eager_sends = 0
         self.rndv_sends = 0
+        self.posted_sends = 0         # rendezvous sends that hit an entry
+        self.mb_slots = mb_slots      # posted entries per (src, dst); 0 off
         region = QueueMatrix.region_bytes(size, cell_size, n_cells)
         bar_bytes = SeqBarrier.region_bytes(size)
+        mb_bytes = Matchbox.region_bytes(size, mb_slots) if mb_slots else 0
+        self._mb_obj: Optional[ObjHandle] = None
+        self._ok_obj: Optional[ObjHandle] = None
         if rank == 0:
             self._mq_obj = arena.create(f"{name}:mq", region)
             self._bar_obj = arena.create(f"{name}:bar", bar_bytes)
@@ -226,18 +372,30 @@ class Communicator:
                                   cell_size, n_cells, initialize=True)
             self._barrier = SeqBarrier(arena.view, self._bar_obj.offset, size,
                                        rank, initialize=True)
+            if mb_bytes:
+                self._mb_obj = arena.create(f"{name}:mb", mb_bytes)
+                self._mb = Matchbox(arena.view, self._mb_obj.offset, size,
+                                    mb_slots, initialize=True)
+            else:
+                self._mb = None
             # publication flag LAST: arena.create makes a name findable
             # before its contents are initialized, and derived comms
             # (split/dup) recycle dirty heap — a member must never map
-            # control words rank 0 has not zeroed yet
-            arena.create(f"{name}:ok", 64)
+            # control words rank 0 has not zeroed yet. Its 64 bytes
+            # double as free()'s per-rank exit-fence flags — zero them
+            # (dirty heap) before the init barrier lets anyone proceed.
+            self._ok_obj = arena.create(f"{name}:ok", max(64, size))
+            arena.view.write_release(self._ok_obj.offset,
+                                     bytes(max(64, size)))
         else:
             t0 = time.monotonic()
             while True:
                 try:
-                    arena.open(f"{name}:ok")
+                    self._ok_obj = arena.open(f"{name}:ok")
                     self._mq_obj = arena.open(f"{name}:mq")
                     self._bar_obj = arena.open(f"{name}:bar")
+                    if mb_bytes:
+                        self._mb_obj = arena.open(f"{name}:mb")
                     break
                 except FileNotFoundError:
                     if time.monotonic() - t0 > open_timeout:
@@ -247,9 +405,23 @@ class Communicator:
                                   cell_size, n_cells)
             self._barrier = SeqBarrier(arena.view, self._bar_obj.offset, size,
                                        rank)
+            self._mb = (Matchbox(arena.view, self._mb_obj.offset, size,
+                                 mb_slots) if mb_bytes else None)
         # tag reorder buffers per src
         self._parked: dict[int, deque[tuple[bytes, int]]] = {
             s: deque() for s in range(size)}
+        # matchbox state. Receiver side: live postings by (src, slot),
+        # per-src post_id counters, and payloads salvaged out of postings
+        # that were retracted after the sender had already committed.
+        # Sender side: the last post_id claimed per (dst, slot), so a
+        # consumed-but-not-yet-recycled entry is never claimed twice.
+        self._mb_records: dict[tuple[int, int], _PostRecord] = {}
+        self._mb_next_id: dict[int, int] = {}
+        self._mb_salvage: dict[tuple[int, int, int], bytes] = {}
+        self._mb_claimed: dict[tuple[int, int], int] = {}
+        self._aliasable: Optional[bool] = None
+        self._reg_seq = 0
+        self._freed = False
         # progress engine: outstanding non-blocking sends advanced by every
         # blocking call (MPI progress rule — without it, two ranks that
         # isend to each other then recv would deadlock on full queues).
@@ -334,6 +506,255 @@ class Communicator:
         self._pbuf_seq += 1
         return PoolBuffer(self, h)
 
+    def register(self, buf) -> Registration:
+        """Pin a writable user buffer for receiver-posted rendezvous:
+        allocates its pool-resident shadow once; receives posted on the
+        registration advertise the shadow in the matchbox and drain it
+        into the user buffer on completion. Release with ``.free()``."""
+        mv = as_u8(buf)
+        if mv.readonly:
+            raise ValueError("register needs a writable buffer")
+        h = self.arena.create(f"rg:{self.name}:{self.rank}:{self._reg_seq}",
+                              max(len(mv), 1))
+        self._reg_seq += 1
+        return Registration(mv, h.offset, h, self)
+
+    def unregister(self, reg: Registration) -> None:
+        if reg.closed:
+            return
+        reg.closed = True
+        self.arena.destroy(reg._handle)
+
+    def _pool_aliasable(self) -> bool:
+        """True when the pool hands out raw memoryview windows (memory-
+        backed, hardware-coherent) — pool-resident payloads can then be
+        moved with a single protocol copy."""
+        if self._aliasable is None:
+            try:
+                self.arena.pool.memview(0, 1)
+                self._aliasable = True
+            except TypeError:
+                self._aliasable = False
+        return self._aliasable
+
+    def _resolve_dest(self, buf) -> _RecvDest:
+        """Classify a ``*_into`` destination (see _RecvDest)."""
+        if isinstance(buf, Registration):
+            if buf.closed:
+                raise ValueError("registration already freed")
+            return _RecvDest(buf.mv, post_off=buf.shadow_off,
+                             postable=self._mb is not None, reg=buf)
+        if isinstance(buf, PoolBuffer):
+            buf = PoolView(buf, 0, buf.nbytes)
+        if isinstance(buf, PoolView):
+            off = buf.buffer.offset + buf.off
+            if self._pool_aliasable():
+                mv = self.arena.pool.memview(off, buf.nbytes)
+                indirect = False
+            else:
+                mv = memoryview(bytearray(buf.nbytes))
+                indirect = True
+            return _RecvDest(mv, post_off=off,
+                             postable=self._mb is not None,
+                             indirect=indirect)
+        mv = as_u8(buf)
+        if mv.readonly:
+            raise ValueError("irecv_into needs a writable buffer")
+        return _RecvDest(mv)
+
+    # ------------------------------------------------------------------
+    # matchbox: receiver side
+    # ------------------------------------------------------------------
+    def _next_pid(self, src: int) -> int:
+        """Per-pair monotonically increasing post_id (the matchbox's
+        freshness token: claim re-checks, salvage keys and oldest-entry
+        selection all key off it)."""
+        pid = self._mb_next_id.get(src, 1)
+        self._mb_next_id[src] = pid + 1
+        return pid
+
+    def _mb_post(self, src: int, tag: int, dest: _RecvDest,
+                 req: "Request") -> Optional[_PostRecord]:
+        """Publish a posted-rendezvous entry for ``req``; None when every
+        slot of the pair is occupied (the receive simply stays on the
+        staged/eager paths until a slot frees)."""
+        for slot in range(self._mb.n_slots):
+            if (src, slot) in self._mb_records:
+                continue
+            pid = self._next_pid(src)
+            self._mb.post(self.rank, src, slot, pid, tag,
+                          dest.post_off, dest.capacity)
+            rec = _PostRecord(src, slot, pid, tag, dest, req)
+            self._mb_records[(src, slot)] = rec
+            return rec
+        return None
+
+    def _mb_retract(self, rec: _PostRecord) -> None:
+        """Withdraw a posting whose receive is completing another way
+        (eager, staged, parked, error). If the sender committed a claim
+        concurrently, the payload it delivered belongs to a LATER message
+        whose FLAG_POSTED descriptor is already in flight — salvage it
+        out of the buffer before the owner reuses it."""
+        key = (rec.src, rec.slot)
+        if self._mb_records.get(key) is not rec:
+            return                            # consumed or already gone
+        del self._mb_records[key]
+        v = self.arena.view
+        off = self._mb.entry_off(self.rank, rec.src, rec.slot)
+        v.nt_store_u64(off, 0)
+        # yield (a syscall) between our store and the claim load: a
+        # sender that read the stale post_id issued its PENDING store
+        # BEFORE that read, so after the yield any such claim is visible
+        # — closing the StoreLoad window a bare store+load would leave
+        # (on the paper's hardware the nt store is followed by sfence)
+        time.sleep(0)
+        w = v.nt_load_u64(off + _MB_CLAIM)
+        if (w >> 2) != rec.post_id:
+            return
+        t0 = time.monotonic()
+        while (w & 3) == _CLAIM_PENDING:      # sender mid-claim: wait out
+            if time.monotonic() - t0 > 10.0:
+                raise RuntimeError(
+                    "matchbox retract: peer claim stuck PENDING")
+            time.sleep(0)
+            w = v.nt_load_u64(off + _MB_CLAIM)
+        if (w & 3) == _CLAIM_COMMIT:
+            n = v.nt_load_u64(off + _MB_FILL)
+            data = bytes(v.read_acquire(rec.dest.post_off, n)) if n else b""
+            v.count_path("rndv_posted", n)
+            self._mb_salvage[(rec.src, rec.slot, rec.post_id)] = data
+
+    def _mb_consume(self, rec: _PostRecord) -> None:
+        """A posted delivery completed in place: recycle the entry."""
+        off = self._mb.entry_off(self.rank, rec.src, rec.slot)
+        self.arena.view.nt_store_u64(off, 0)
+        self._mb_records.pop((rec.src, rec.slot), None)
+
+    def _mb_repost(self, rec: _PostRecord) -> None:
+        """The sender delivered a message that MPI order routes to a
+        DIFFERENT receive: after salvaging the payload, re-arm the entry
+        for its still-pending owner (whose buffer is undefined until
+        completion, so the scribble was legal)."""
+        pid = self._next_pid(rec.src)
+        rec.post_id = pid
+        self._mb.post(self.rank, rec.src, rec.slot, pid,
+                      rec.tag, rec.dest.post_off, rec.dest.capacity)
+
+    def _mb_take(self, src: int, slot: int, pid: int, total: int,
+                 req: "Request") -> Optional[bytes]:
+        """Resolve a FLAG_POSTED descriptor. Returns None when the
+        payload was consumed IN PLACE by ``req`` (its own posting —
+        zero receiver-side copies), else the payload bytes salvaged from
+        a retracted or foreign posting."""
+        sal = self._mb_salvage.pop((src, slot, pid), None)
+        if sal is not None:
+            return sal[:total]
+        rec = self._mb_records.get((src, slot))
+        if rec is None or rec.post_id != pid:
+            raise RuntimeError(
+                f"cMPI matchbox error: FLAG_POSTED descriptor for unknown "
+                f"posting (src={src}, slot={slot}, post_id={pid})")
+        v = self.arena.view
+        if rec.owner is req:
+            rec.dest.finish_posted(v, total)
+            self._mb_consume(rec)
+            return None
+        data = bytes(v.read_acquire(rec.dest.post_off, total)) \
+            if total else b""
+        v.count_path("rndv_posted", total)
+        self._mb_repost(rec)
+        return data
+
+    # ------------------------------------------------------------------
+    # matchbox: sender side
+    # ------------------------------------------------------------------
+    def _mb_claim(self, dest: int, tag: int, nbytes: int,
+                  pool_src: bool) -> Optional[tuple[int, int, int, int]]:
+        """Scan the (dest, self) strip for the OLDEST matching posted
+        entry and claim it (PENDING -> re-check -> owned). Returns
+        (slot, post_id, dest_off, entry_off) or None on miss."""
+        mb = self._mb
+        if mb is None or (pool_src and not self._pool_aliasable()):
+            # a pool-resident source on a pool without raw views would
+            # need a bounce read+write (2 copies) — staged is cheaper
+            return None
+        v = self.arena.view
+        wtag = int(tag) & _MB_ANY
+        best = None
+        for slot in range(mb.n_slots):
+            off = mb.entry_off(dest, self.rank, slot)
+            pid = v.nt_load_u64(off)
+            if not pid or self._mb_claimed.get((dest, slot)) == pid:
+                continue
+            etag = v.nt_load_u64(off + _MB_TAG)
+            if etag != _MB_ANY and etag != wtag:
+                continue
+            if v.nt_load_u64(off + _MB_CAP) < nbytes:
+                continue
+            if best is None or pid < best[1]:
+                best = (slot, pid, off)
+        if best is None:
+            return None
+        slot, pid, off = best
+        self._mb_claimed[(dest, slot)] = pid
+        v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_PENDING)
+        if v.nt_load_u64(off) != pid:         # receiver retracted mid-claim
+            v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_ABORT)
+            return None
+        return slot, pid, v.nt_load_u64(off + _MB_DEST), off
+
+    # ------------------------------------------------------------------
+    # teardown
+    # ------------------------------------------------------------------
+    def free(self) -> None:
+        """Collective communicator teardown: every rank calls it.
+        Retracts this rank's live matchbox postings (their destination
+        buffers die with the caller), fences so no rank is still mid-
+        message, then rank 0 destroys the queue matrix, barrier,
+        matchbox and publication objects. Idempotent on every rank."""
+        if self._freed:
+            return
+        self._freed = True
+        if self._mb is not None:
+            for rec in list(self._mb_records.values()):
+                self._mb_retract(rec)
+            self._mb_salvage.clear()
+        self.barrier()
+        # every rank is out of the data plane: reclaim rendezvous
+        # stagers (acked ones were awaiting a _progress sweep that will
+        # never come; unacked ones carry messages that die with the
+        # communicator)
+        for h in self._stagers:
+            try:
+                self.arena.destroy(h)
+            except FileNotFoundError:
+                pass
+        self._stagers.clear()
+        # exit fence: SeqBarrier.wait lets fast ranks return while a
+        # laggard is still SCANNING the seq words, so destroying the
+        # barrier region right after the barrier could hang it once the
+        # heap recycles. Each rank raises its single-writer done byte in
+        # the :ok object only AFTER leaving the barrier; rank 0 destroys
+        # nothing until every byte is up.
+        v = self.arena.view
+        v.nt_store_u8(self._ok_obj.offset + self.rank, 1)
+        if self.rank == 0:
+            t0 = time.monotonic()
+            while any(not v.nt_load_u8(self._ok_obj.offset + r)
+                      for r in range(self.size)):
+                if time.monotonic() - t0 > 30.0:
+                    raise TimeoutError(
+                        "free(): peers never left the teardown fence")
+                time.sleep(0)
+            for h in (self._mq_obj, self._bar_obj, self._mb_obj,
+                      self._ok_obj):
+                if h is None:               # matchbox may be disabled
+                    continue
+                try:
+                    self.arena.destroy(h)
+                except FileNotFoundError:
+                    pass
+
     # ------------------------------------------------------------------
     # blocking pt2pt (implemented over the non-blocking path so every
     # blocking call keeps the progress engine turning)
@@ -390,7 +811,15 @@ class Communicator:
     # ------------------------------------------------------------------
     # non-blocking pt2pt
     # ------------------------------------------------------------------
-    def isend(self, dest: int, data, tag: int = 0) -> Request:
+    def isend(self, dest: int, data, tag: int = 0, *,
+              _prestaged: Optional[PoolBuffer] = None) -> Request:
+        """``_prestaged``: a persistent staging buffer (owned by a
+        ``PersistentRequest``) refilled in place on a matchbox miss —
+        the plan stays claim-aware without per-iteration arena churn."""
+        if int(tag) < 0:
+            # ANY_TAG is a receive-side wildcard; a negative wire tag
+            # would never match (fail fast on every protocol path alike)
+            raise ValueError(f"send tag must be non-negative, got {tag}")
         req = Request(kind="send", tag=tag)
         if isinstance(data, PoolBuffer):
             pview: Optional[PoolView] = PoolView(data, 0, data.nbytes)
@@ -421,21 +850,75 @@ class Communicator:
                 self._parked[self.rank].append((payload, tag))
                 return
             q = self.mq.send_queue(dest)
+            v = self.arena.view
             if pview is None and nbytes <= self.eager_threshold:
                 # ---- eager: memoryview slices through queue cells ----
                 self.eager_sends += 1
                 for parts, flags in q.plan_message(mv, tag):
                     while not q.try_enqueue_parts(parts, flags):
                         yield
+                v.count_path("eager", nbytes)
                 return
-            # ---- rendezvous: stage once, ship a descriptor ----
             self.rndv_sends += 1
-            v = self.arena.view
+            # ---- posted rendezvous: the receiver advertised its
+            # destination — write the payload straight into it (the ONE
+            # copy of the whole transfer) and name the entry in the
+            # descriptor; per-pair FIFO matching still happens in queue
+            # order on the receiver
+            claim = self._mb_claim(dest, tag, nbytes, pview is not None)
+            if claim is not None:
+                slot, pid, dst_off, eoff = claim
+                try:
+                    if nbytes:
+                        src_mv = (self.arena.pool.memview(
+                            pbuf.offset + pview.off, nbytes)
+                            if pview is not None else mv)
+                        v.write_release(dst_off, src_mv)
+                        v.count_path("rndv_posted", nbytes)
+                except BaseException:
+                    v.nt_store_u64(eoff + _MB_CLAIM,
+                                   (pid << 2) | _CLAIM_ABORT)
+                    raise
+                v.nt_store_u64(eoff + _MB_FILL, nbytes)
+                # commit AFTER the payload write: the claim word is the
+                # staged path's drain-ack byte with the roles reversed
+                v.nt_store_u64(eoff + _MB_CLAIM,
+                               (pid << 2) | _CLAIM_COMMIT)
+                self.posted_sends += 1
+                # wire: [total u64 | tag u64 | slot u64 | post_id u64]
+                desc = (nbytes.to_bytes(8, "little")
+                        + (int(tag) & _MB_ANY).to_bytes(8, "little")
+                        + slot.to_bytes(8, "little")
+                        + pid.to_bytes(8, "little"))
+                while not q.try_enqueue_parts(
+                        (desc,),
+                        FLAG_FIRST | FLAG_LAST | FLAG_RNDV | FLAG_POSTED):
+                    yield
+                if pview is not None:
+                    # the payload left the source at the write above
+                    pbuf._in_flight = False
+                return
+            # ---- staged rendezvous: stage once, ship a descriptor ----
+            sync_done = None
             if pview is not None:
                 # pool-resident source: no staging copy at all
                 ack_off = pbuf._handle.offset
                 data_off = pbuf.offset + pview.off
                 v.nt_store_u8(ack_off, 0)           # arm the ack
+
+                def sync_done():
+                    pbuf._in_flight = False
+            elif _prestaged is not None:
+                # persistent plan: refill the caller's long-lived stager
+                ack_off = _prestaged._handle.offset
+                data_off = _prestaged.offset
+                v.nt_store_u8(ack_off, 0)
+                if nbytes:
+                    v.write_release(data_off, mv)
+                    v.count_path("rndv_staged", nbytes)
+
+                def sync_done():
+                    pass
             else:
                 h = self.arena.create(
                     f"rv:{self.name}:{self.rank}:{dest}:{self._rndv_seq}",
@@ -446,20 +929,21 @@ class Communicator:
                 v.nt_store_u8(ack_off, 0)           # heap memory is dirty
                 if nbytes:
                     v.write_release(data_off, mv)
+                    v.count_path("rndv_staged", nbytes)
             # wire descriptor: [total u64 | tag u64 | ack u64 | data u64]
             desc = (nbytes.to_bytes(8, "little")
-                    + int(tag).to_bytes(8, "little")
+                    + (int(tag) & _MB_ANY).to_bytes(8, "little")
                     + ack_off.to_bytes(8, "little")
                     + data_off.to_bytes(8, "little"))
             while not q.try_enqueue_parts(
                     (desc,), FLAG_FIRST | FLAG_LAST | FLAG_RNDV):
                 yield
-            if pview is not None:
+            if sync_done is not None:
                 # synchronous-mode: complete when the receiver drained
-                # the user's buffer (it is then reusable)
+                # the staging memory (it is then reusable)
                 while not v.nt_load_u8(ack_off):
                     yield
-                pbuf._in_flight = False
+                sync_done()
             else:
                 self._stagers.append(h)             # reclaimed on ack
         req._gen = gen()
@@ -472,124 +956,201 @@ class Communicator:
         return self._irecv_impl(src, tag, None)
 
     def irecv_into(self, src: int, buf, tag: int = ANY_TAG) -> Request:
-        dst = as_u8(buf)
-        if dst.readonly:
-            raise ValueError("irecv_into needs a writable buffer")
-        return self._irecv_impl(src, tag, dst)
+        """``buf``: any writable buffer-protocol object, a PoolBuffer /
+        PoolView (pool-resident destination), or a Registration (pinned
+        user buffer). Pool-addressable destinations are PUBLISHED in the
+        matchbox so a matching sender can deliver the payload with one
+        copy and no receiver-side drain (posted rendezvous)."""
+        return self._irecv_impl(src, tag, self._resolve_dest(buf))
 
-    def _irecv_impl(self, src: int, tag: int, dst) -> Request:
+    def _irecv_impl(self, src: int, tag: int,
+                    dest: Optional[_RecvDest]) -> Request:
         req = Request(kind="recv", tag=tag, src=src)
+        dst = dest.mv if dest is not None else None
+        cap = dest.capacity if dest is not None else 0
 
-        def deliver_parked(d: bytes, t: int) -> None:
-            if dst is not None:
-                if len(d) > len(dst):
+        def deliver_bytes(d: bytes, t: int) -> None:
+            """Parked / staged-pull / salvaged payload -> destination."""
+            if dest is not None:
+                if len(d) > cap:
                     raise ValueError(
                         f"recv_into: message of {len(d)}B exceeds "
-                        f"buffer of {len(dst)}B")
+                        f"buffer of {cap}B")
                 dst[:len(d)] = d
                 self.arena.view.count_copy(len(d))
+                dest.flush(self.arena.view, len(d))
             else:
                 req.data = d
             req.nbytes, req.tag = len(d), t
 
         def gen():
-            park = self._parked[src]
-            while True:
-                for i, (d, t) in enumerate(park):
-                    if tag in (ANY_TAG, t):
-                        del park[i]
-                        deliver_parked(d, t)
-                        return
-                if src == self.rank:
-                    yield
-                    continue
-                # per-source matching is ordered: only the EFFECTIVE
-                # HEAD posted receive may drain the pair queue (it parks
-                # foreign tags; two generators interleaving one
-                # message's chunks would corrupt the framing). Non-head
-                # receives above still complete from parked messages.
-                fifo = self._recv_fifo.get(src)
-                if fifo:
-                    while fifo and (fifo[0].done
-                                    or fifo[0]._error is not None):
-                        fifo.popleft()
-                    if fifo and fifo[0] is not req:
+            rec = None               # our live matchbox posting, if any
+
+            def secure_dst():
+                """About to deliver a NON-posted payload into the
+                destination: withdraw our live posting FIRST. A sender
+                may already have committed a claim into the same buffer
+                — retracting salvages that payload before the delivery
+                below overwrites it (the salvage-before-scribble
+                ordering the matchbox protocol requires)."""
+                nonlocal rec
+                if rec is not None:
+                    self._mb_retract(rec)
+                    rec = None
+
+            try:
+                park = self._parked[src]
+                while True:
+                    for i, (d, t) in enumerate(park):
+                        if tag in (ANY_TAG, t):
+                            del park[i]
+                            secure_dst()
+                            deliver_bytes(d, t)
+                            return
+                    if src == self.rank:
                         yield
                         continue
-                q = self.mq.recv_queue(src)
-                out = q.try_dequeue()
-                if out is None:
-                    yield
-                    continue
-                payload, flags = out
-                if not flags & FLAG_FIRST:
-                    raise RuntimeError(
-                        "cMPI framing error: expected FIRST chunk")
-                total = int.from_bytes(payload[:8], "little")
-                t = int.from_bytes(payload[8:16], "little")
-                match = tag in (ANY_TAG, t)
-                v = self.arena.view
-                # an undersized dst is a truncation error (MPI_ERR_
-                # TRUNCATE): the message is still fully consumed (so the
-                # pair queue stays framed and rendezvous stagers get
-                # ack'd) and then discarded before raising
-                truncate = (match and dst is not None
-                            and total > len(dst))
-                if flags & FLAG_RNDV:
-                    # ---- rendezvous: bulk-pull from the pool-resident
-                    # source (staging object or PoolBuffer/PoolView)
-                    ack_off = int.from_bytes(payload[16:24], "little")
-                    data_off = int.from_bytes(payload[24:32], "little")
-                    if match and dst is not None and not truncate:
+                    # publish the destination BEFORE draining: a sender
+                    # arriving from now on can deliver straight into it.
+                    # (Posting is lazy-retried — all slots may be busy.)
+                    if rec is None and dest is not None and dest.postable:
+                        rec = self._mb_post(src, tag, dest, req)
+                    # per-source matching is ordered: only the EFFECTIVE
+                    # HEAD posted receive may drain the pair queue (it
+                    # parks foreign tags; two generators interleaving one
+                    # message's chunks would corrupt the framing).
+                    # Non-head receives above still complete from parked
+                    # messages.
+                    fifo = self._recv_fifo.get(src)
+                    if fifo:
+                        while fifo and (fifo[0].done
+                                        or fifo[0]._error is not None):
+                            fifo.popleft()
+                        if fifo and fifo[0] is not req:
+                            yield
+                            continue
+                    q = self.mq.recv_queue(src)
+                    out = q.try_dequeue()
+                    if out is None:
+                        yield
+                        continue
+                    payload, flags = out
+                    if not flags & FLAG_FIRST:
+                        raise RuntimeError(
+                            "cMPI framing error: expected FIRST chunk")
+                    total = int.from_bytes(payload[:8], "little")
+                    t = int.from_bytes(payload[8:16], "little")
+                    match = tag in (ANY_TAG, t)
+                    v = self.arena.view
+                    # an undersized dst is a truncation error (MPI_ERR_
+                    # TRUNCATE): the message is still fully consumed (so
+                    # the pair queue stays framed and rendezvous stagers
+                    # get ack'd) and then discarded before raising
+                    truncate = (match and dest is not None
+                                and total > cap)
+                    if flags & FLAG_POSTED:
+                        # ---- posted rendezvous: the payload already
+                        # sits in a buffer THIS rank posted
+                        slot = int.from_bytes(payload[16:24], "little")
+                        pid = int.from_bytes(payload[24:32], "little")
+                        d = self._mb_take(src, slot, pid, total, req)
+                        if d is None:
+                            # consumed in place by our own posting:
+                            # zero receiver-side copies
+                            rec = None
+                            req.nbytes, req.tag = total, t
+                            return
+                        # salvaged from a foreign/retracted posting —
+                        # route it exactly like a parked payload
+                        if match:
+                            secure_dst()
+                            deliver_bytes(d, t)
+                            return
+                        park.append((d, t))
+                        continue
+                    if flags & FLAG_RNDV:
+                        # ---- staged rendezvous: bulk-pull from the
+                        # pool-resident source (staging object or
+                        # PoolBuffer/PoolView)
+                        ack_off = int.from_bytes(payload[16:24], "little")
+                        data_off = int.from_bytes(payload[24:32], "little")
+                        if match and dest is not None and not truncate:
+                            secure_dst()
+                            if total:
+                                v.read_acquire_into(data_off, dst[:total])
+                                v.count_path("rndv_staged", total)
+                            dest.flush(v, total)
+                            v.nt_store_u8(ack_off, 1)    # ack the drain
+                            req.nbytes, req.tag = total, t
+                            return
+                        if truncate:
+                            v.nt_store_u8(ack_off, 1)  # release the sender
+                            raise ValueError(
+                                f"recv_into: message of {total}B exceeds "
+                                f"buffer of {cap}B (message discarded)")
+                        d = (bytes(v.read_acquire(data_off, total))
+                             if total else b"")
+                        v.nt_store_u8(ack_off, 1)
                         if total:
-                            v.read_acquire_into(data_off, dst[:total])
-                        v.nt_store_u8(ack_off, 1)    # ack the drain
-                        req.nbytes, req.tag = total, t
-                        return
+                            v.count_path("rndv_staged", total)
+                        if match:
+                            req.data = d
+                            req.nbytes, req.tag = total, t
+                            return
+                        park.append((d, t))
+                        continue
+                    # ---- eager: drain chunk cells straight into the sink
+                    if match and dest is not None and not truncate:
+                        secure_dst()
+                        sink = dst
+                    else:
+                        sink = memoryview(bytearray(total))
+                    k = min(len(payload) - 16, total)
+                    sink[:k] = payload[16:16 + k]
+                    v.count_copy(k)
+                    while k < total:
+                        got = q.try_dequeue_into(sink[k:total])
+                        if got is None:
+                            yield
+                            continue
+                        k += got[0]
+                    v.count_path("eager", total)
                     if truncate:
-                        v.nt_store_u8(ack_off, 1)    # release the sender
                         raise ValueError(
                             f"recv_into: message of {total}B exceeds "
-                            f"buffer of {len(dst)}B (message discarded)")
-                    d = (v.read_acquire(data_off, total)
-                         if total else b"")
-                    v.nt_store_u8(ack_off, 1)
+                            f"buffer of {cap}B (message discarded)")
+                    if match and dest is not None:
+                        dest.flush(v, total)
+                        req.nbytes, req.tag = total, t
+                        return
+                    d = bytes(sink)
                     if match:
                         req.data = d
                         req.nbytes, req.tag = total, t
                         return
                     park.append((d, t))
-                    continue
-                # ---- eager: drain chunk cells straight into the sink
-                if match and dst is not None and not truncate:
-                    sink = dst
-                else:
-                    sink = memoryview(bytearray(total))
-                k = min(len(payload) - 16, total)
-                sink[:k] = payload[16:16 + k]
-                v.count_copy(k)
-                while k < total:
-                    got = q.try_dequeue_into(sink[k:total])
-                    if got is None:
-                        yield
-                        continue
-                    k += got[0]
-                if truncate:
-                    raise ValueError(
-                        f"recv_into: message of {total}B exceeds "
-                        f"buffer of {len(dst)}B (message discarded)")
-                if match and dst is not None:
-                    req.nbytes, req.tag = total, t
-                    return
-                d = bytes(sink)
-                if match:
-                    req.data = d
-                    req.nbytes, req.tag = total, t
-                    return
-                park.append((d, t))
+            finally:
+                # completing any way other than our own posted entry
+                # (eager, staged, parked, salvage, error, abandonment)
+                # leaves that entry live — withdraw it before the user
+                # buffer changes owner
+                if rec is not None:
+                    self._mb_retract(rec)
         req._gen = gen()
         req._comm = self        # wait()/test() must pump the send engine
         self._recv_fifo.setdefault(src, deque()).append(req)
+        # prime once: a parked match completes immediately, and a
+        # postable destination is published before control returns to
+        # the caller (the matchbox contract: entries exist BEFORE the
+        # sender's descriptor does)
+        try:
+            next(req._gen)
+        except StopIteration:
+            req.done = True
+            req._unpost()
+        except BaseException as e:
+            req._error = e
+            req._unpost()
         return req
 
     def waitall(self, reqs: list[Request],

@@ -41,6 +41,8 @@ _CELLS = 128
 FLAG_FIRST = 1      # first chunk of a message (payload starts with header)
 FLAG_LAST = 2
 FLAG_RNDV = 4       # cell holds a rendezvous descriptor, not payload
+FLAG_POSTED = 8     # rendezvous payload already sits in a RECEIVER-posted
+                    # buffer (matchbox entry); descriptor names the entry
 
 DEFAULT_CELL_SIZE = 16 * 1024      # MPICH default (paper §4.3)
 OPTIMAL_CELL_SIZE = 64 * 1024      # paper's tuned value

@@ -23,7 +23,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.arena import Arena, ObjHandle
-from repro.core.pool import as_u8
+from repro.core.pool import Registration, as_u8
 from repro.core.sync import PSCW, RWLock, SeqBarrier
 
 
@@ -89,8 +89,31 @@ class Window:
 
     def get_into(self, target: int, disp: int, dst) -> int:
         """MPI_Get straight into a writable caller buffer; returns bytes
-        read. The payload moves window -> user buffer exactly once."""
-        mv = as_u8(dst)
+        read. The payload moves window -> destination exactly once.
+
+        ``dst`` accepts the same destination kinds the matchbox posting
+        path does (the pt2pt reply-path reuse): a plain writable buffer,
+        a ``PoolBuffer``/``PoolView`` (pool-resident reply buffer —
+        window -> pool in one protocol copy), or a ``Registration``
+        (pinned user buffer; the get bypasses the shadow since the
+        window is locally addressable)."""
+        from repro.core.pt2pt import PoolBuffer, PoolView  # lazy: cycle
+        if isinstance(dst, PoolBuffer):
+            dst = PoolView(dst, 0, dst.nbytes)
+        if isinstance(dst, PoolView):
+            off = dst.buffer.offset + dst.off
+            n = dst.nbytes
+            src_addr = self._addr(target, disp, n)
+            try:
+                alias = self.arena.pool.memview(off, n)
+            except TypeError:
+                # no raw views (incoherent pool): bounce once, protocol-
+                # correct on both legs
+                self.arena.view.write_release(
+                    off, self.arena.view.read_acquire(src_addr, n))
+                return n
+            return self.arena.view.read_acquire_into(src_addr, alias)
+        mv = dst.mv if isinstance(dst, Registration) else as_u8(dst)
         return self.arena.view.read_acquire_into(
             self._addr(target, disp, len(mv)), mv)
 

@@ -1,0 +1,491 @@
+"""Receiver-posted rendezvous (the matchbox): one-copy delivery into
+pre-posted pool-resident / registered destinations, the claim/retract
+race protocol, salvage of mis-claimed payloads, FIFO matching under
+mixed eager/staged/posted traffic, collective teardown, and the CI
+copied-bytes budget gate helper."""
+import numpy as np
+import pytest
+
+from repro.core import Registration, run_threads
+from repro.core.runtime import run_processes
+
+CELL = 4096
+
+
+# --------------------------------------------------------------------------
+# the one-copy path
+# --------------------------------------------------------------------------
+
+class TestPostedDelivery:
+    def test_posted_hit_poolbuffer_dest(self):
+        """Receiver posts a PoolBuffer destination before the sender
+        moves: the payload lands with ONE protocol copy (sender-side
+        write), zero receiver-side drain."""
+        size = 8 * CELL
+
+        def prog(env):
+            st = env.arena.view.stats
+            if env.rank == 0:
+                env.comm.recv(1, tag=2)          # credit: entry is live
+                c0 = st.path_copied_bytes["rndv_posted"]
+                env.comm.send(1, b"\xab" * size, tag=1)
+                return (env.comm.posted_sends,
+                        st.path_copied_bytes["rndv_posted"] - c0)
+            pb = env.comm.alloc_buffer(size)
+            rreq = env.comm.irecv_into(0, pb, tag=1)   # posts the entry
+            env.comm.send(0, b"", tag=2)
+            c0 = st.copied_bytes
+            rreq.wait(30)
+            recv_copied = st.copied_bytes - c0
+            assert rreq.nbytes == size
+            assert pb.read(0, 8) == b"\xab" * 8
+            return recv_copied
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=32 << 20, timeout=60)
+        hits, sender_posted = res[0]
+        assert hits == 1
+        assert sender_posted == size             # the one payload copy
+        # receiver side touched only the 40B descriptor cell, no payload
+        assert res[1] < 256
+
+    def test_posted_vs_staged_copy_ratio(self):
+        """The acceptance bar at test scale: posted rendezvous moves
+        >= 1.9x fewer protocol-counted bytes than the staged path."""
+        size = 256 * 1024
+        iters = 3
+
+        def make_prog(posted):
+            def prog(env):
+                st = env.arena.view.stats
+                if env.rank == 0:
+                    src = b"\xee" * size
+                    env.comm.barrier()
+                    c0 = st.copied_bytes
+                    for _ in range(iters):
+                        env.comm.recv(1, tag=2)
+                        env.comm.send(1, src, tag=1)
+                    return st.copied_bytes - c0
+                dst = env.comm.alloc_buffer(size) if posted \
+                    else bytearray(size)
+                env.comm.barrier()
+                c0 = st.copied_bytes
+                for _ in range(iters):
+                    rreq = env.comm.irecv_into(0, dst, tag=1)
+                    env.comm.send(0, b"", tag=2)
+                    rreq.wait(30)
+                return st.copied_bytes - c0
+            return prog
+
+        staged = sum(run_threads(2, make_prog(False), cell_size=CELL,
+                                 eager_threshold=0, pool_bytes=64 << 20,
+                                 timeout=120)) / iters
+        posted = sum(run_threads(2, make_prog(True), cell_size=CELL,
+                                 eager_threshold=0, pool_bytes=64 << 20,
+                                 timeout=120)) / iters
+        assert staged / posted >= 1.9
+
+    def test_registration_roundtrip(self):
+        """A registered user buffer: sender fills the shadow, completion
+        drains shadow -> user exactly once; the pin is reusable and
+        freeable."""
+        size = 5 * CELL
+
+        def prog(env):
+            peer = 1 - env.rank
+            user = bytearray(size)
+            reg = env.comm.register(user)
+            assert isinstance(reg, Registration)
+            for i in range(3):
+                rreq = env.comm.irecv_into(peer, reg, tag=4)
+                env.comm.barrier()               # both entries posted
+                env.comm.send(peer, bytes([i]) * size, tag=4)
+                rreq.wait(30)
+                assert user[0] == i and user[-1] == i
+                env.comm.barrier()
+            posted = env.comm.posted_sends
+            before = env.arena.stats()["slots_used"]
+            reg.free()
+            reg.free()                           # idempotent
+            return posted, before - env.arena.stats()["slots_used"]
+
+        for posted, released in run_threads(
+                2, prog, cell_size=CELL, eager_threshold=0,
+                pool_bytes=32 << 20, timeout=120):
+            assert posted == 3                   # every send hit the entry
+            assert released == 1
+
+    def test_fallback_when_sender_moves_first(self):
+        """No entry posted when the descriptor is enqueued -> the wire
+        falls back to the staged path; a later pool-resident receive
+        still drains it correctly (wire compatibility)."""
+        size = 6 * CELL
+
+        def prog(env):
+            if env.rank == 0:
+                env.comm.send(1, b"\xcd" * size, tag=1)  # before any post
+                env.comm.send(1, b"", tag=2)
+                return env.comm.posted_sends
+            env.comm.recv(0, tag=2)              # send already completed
+            pb = env.comm.alloc_buffer(size)
+            n, _ = env.comm.recv_into(0, pb, tag=1)
+            assert n == size and pb.read(0, 2) == b"\xcd\xcd"
+            return None
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=32 << 20, timeout=60)
+        assert res[0] == 0
+
+    def test_posted_works_across_processes(self):
+        """The matchbox protocol over REAL shared memory (the paper's
+        measurement configuration)."""
+        size = 128 * 1024
+
+        def prog(env):
+            if env.rank == 0:
+                env.comm.recv(1, tag=2)
+                env.comm.send(1, b"\x5a" * size, tag=1)
+                return env.comm.posted_sends
+            pb = env.comm.alloc_buffer(size)
+            rreq = env.comm.irecv_into(0, pb, tag=1)
+            env.comm.send(0, b"", tag=2)
+            rreq.wait(30)
+            assert pb.read(0, 4) == b"\x5a" * 4
+            return rreq.nbytes
+
+        res = run_processes(2, prog, pool_bytes=64 << 20,
+                            eager_threshold=0, timeout=120)
+        assert res[0] == 1 and res[1] == size
+
+
+# --------------------------------------------------------------------------
+# retract / salvage races
+# --------------------------------------------------------------------------
+
+class TestRetractAndSalvage:
+    def test_entry_retracted_after_eager_completion(self):
+        """A posted entry whose receive completes via the EAGER path is
+        withdrawn — a later large send must not scribble the completed
+        buffer, and the pair stays usable."""
+        def prog(env):
+            if env.rank == 0:
+                env.comm.recv(1, tag=9)                  # entry posted
+                env.comm.send(1, b"tiny", tag=1)         # eager -> retract
+                env.comm.recv(1, tag=9)
+                env.comm.send(1, b"\xbb" * (8 * CELL), tag=1)
+                return env.comm.posted_sends
+            pb = env.comm.alloc_buffer(8 * CELL)
+            rreq = env.comm.irecv_into(0, pb, tag=1)     # posts entry
+            env.comm.send(0, b"", tag=9)
+            rreq.wait(30)
+            assert rreq.nbytes == 4
+            assert pb.read(0, 4) == b"tiny"
+            assert not env.comm._mb_records               # retracted
+            frozen = pb.read(0, 4)
+            # second message goes to a FRESH posting of a new receive
+            pb2 = env.comm.alloc_buffer(8 * CELL)
+            rreq2 = env.comm.irecv_into(0, pb2, tag=1)
+            env.comm.send(0, b"", tag=9)
+            rreq2.wait(30)
+            assert pb2.read(0, 2) == b"\xbb\xbb"
+            assert pb.read(0, 4) == frozen                # untouched
+            return None
+
+        res = run_threads(2, prog, cell_size=CELL,
+                          eager_threshold=CELL, pool_bytes=32 << 20,
+                          timeout=60)
+        assert res[0] == 1                    # only the second send hit
+
+    def test_foreign_claim_salvaged_in_order(self):
+        """MPI matching order beats the sender's entry guess: an older
+        bytes-mode ANY_TAG receive wins the message even though the
+        sender delivered it into a younger posted buffer; the posted
+        receive then gets the NEXT message in place."""
+        size = 6 * CELL
+
+        def prog(env):
+            if env.rank == 0:
+                env.comm.recv(1, tag=9)
+                env.comm.send(1, b"\x11" * size, tag=5)   # claims entry
+                env.comm.recv(1, tag=9)            # salvage + re-post done
+                env.comm.send(1, b"\x22" * size, tag=5)
+                return env.comm.posted_sends
+            from repro.core.pt2pt import ANY_TAG
+            r_plain = env.comm.irecv(0, ANY_TAG)   # posted FIRST, no entry
+            pb = env.comm.alloc_buffer(size)
+            r_posted = env.comm.irecv_into(0, pb, tag=5)  # posts entry
+            env.comm.send(0, b"", tag=9)
+            a = r_plain.wait(30)                   # salvage path
+            env.comm.send(0, b"", tag=9)
+            r_posted.wait(30)
+            assert a == b"\x11" * size             # FIFO order preserved
+            assert pb.read(0, 2) == b"\x22\x22"    # next message, in place
+            return None
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=32 << 20, timeout=60)
+        # both sends found a live entry (the second via the re-post)
+        assert res[0] == 2
+
+    def test_capacity_miss_falls_back_and_truncates(self):
+        """A message larger than the posted capacity never claims the
+        entry; the staged fallback raises MPI_ERR_TRUNCATE semantics and
+        the communicator stays usable."""
+        def prog(env):
+            if env.rank == 0:
+                env.comm.recv(1, tag=9)
+                env.comm.send(1, b"\xcc" * (4 * CELL), tag=1)
+                env.comm.send(1, b"ok", tag=2)
+                return env.comm.posted_sends
+            pb = env.comm.alloc_buffer(CELL)          # too small
+            rreq = env.comm.irecv_into(0, pb, tag=1)
+            env.comm.send(0, b"", tag=9)
+            with pytest.raises(ValueError, match="exceeds"):
+                rreq.wait(30)
+            data, _ = env.comm.recv(0, tag=2)
+            assert data == b"ok"
+            assert not env.comm._mb_records
+            return None
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=32 << 20, timeout=60)
+        assert res[0] == 0
+
+
+# --------------------------------------------------------------------------
+# persistent receives pre-post
+# --------------------------------------------------------------------------
+
+class TestPersistentPrePost:
+    def test_recv_init_preposts_and_stays_flat(self):
+        """recv_init registers the user buffer ONCE; every start()
+        re-arms the same shadow-backed entry, every iteration's send
+        hits it, and the arena slot count stays flat."""
+        iters = 5
+        nelem = 3 * CELL            # bytes > threshold: rendezvous
+
+        def prog(env):
+            peer = 1 - env.rank
+            sbuf = np.zeros(nelem, np.uint8)
+            rbuf = np.zeros(nelem, np.uint8)
+            ps = env.comm.send_init(peer, sbuf, tag=7)
+            pr = env.comm.recv_init(peer, rbuf, tag=7)
+            slots = []
+            for i in range(iters):
+                sbuf[:] = i + 1
+                pr.start()
+                env.comm.barrier()          # all entries posted first
+                ps.start()
+                n = pr.wait(30)
+                ps.wait(30)
+                assert n == nelem and rbuf[0] == i + 1
+                env.comm.barrier()
+                slots.append(env.arena.stats()["slots_used"])
+            env.comm.barrier()      # all ranks done measuring
+            posted = env.comm.posted_sends
+            ps.free()
+            pr.free()
+            return posted, slots
+
+        for posted, slots in run_threads(
+                2, prog, cell_size=CELL, eager_threshold=CELL,
+                pool_bytes=32 << 20, timeout=120):
+            assert posted == iters          # deterministic hits
+            assert len(set(slots)) == 1     # flat footprint
+
+    def test_recv_init_poolbuffer_dest(self):
+        def prog(env):
+            if env.rank == 0:
+                pb = env.comm.alloc_buffer(4 * CELL)
+                pr = env.comm.recv_init(1, pb, tag=3)
+                out = []
+                for _ in range(2):
+                    pr.start()
+                    env.comm.send(1, b"", tag=9)      # entry is live
+                    pr.wait(30)
+                    out.append(pb.read(0, 1))
+                return out
+            for i in range(2):
+                env.comm.recv(0, tag=9)
+                env.comm.send(0, bytes([i + 7]) * (4 * CELL), tag=3)
+            return env.comm.posted_sends
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=32 << 20, timeout=60)
+        assert res[0] == [b"\x07", b"\x08"]
+        assert res[1] == 2
+
+
+# --------------------------------------------------------------------------
+# FIFO matching under interleaved eager / staged / posted traffic
+# --------------------------------------------------------------------------
+
+class TestInterleaveStress:
+    def test_mixed_paths_fifo_any_tag_full_queues(self):
+        """Full-duplex stress: both ranks stream 45 messages at each
+        other through deliberately TINY queues (n_cells=2) while the
+        receiver rotates bytes-mode, plain-buffer and posted
+        destinations, all ANY_TAG. Per-source FIFO must hold exactly
+        (payload sequence numbers arrive in order), no deadlock, and
+        every data-plane path must actually fire."""
+        n_msgs = 45
+        big = 3 * CELL
+
+        def prog(env):
+            from repro.core.pt2pt import ANY_TAG
+            peer = 1 - env.rank
+            rng = np.random.default_rng(17 + env.rank)
+            sizes = [int(rng.choice([64, CELL - 64, big]))
+                     for _ in range(n_msgs)]
+            # fire-and-forget the whole stream: queues (2 cells) fill
+            # immediately, so completion relies on the progress engine
+            sreqs = [env.comm.isend(
+                peer, i.to_bytes(4, "little") * (sizes[i] // 4),
+                tag=i % 7) for i in range(n_msgs)]
+            pb = env.comm.alloc_buffer(big)
+            got = []
+            for i in range(n_msgs):
+                kind = i % 3
+                if kind == 0:                        # bytes-mode
+                    data, _ = env.comm.recv(peer, ANY_TAG, timeout=60)
+                    got.append(data[:4])
+                elif kind == 1:                      # plain buffer
+                    buf = bytearray(big)
+                    n, _ = env.comm.recv_into(peer, buf, ANY_TAG,
+                                              timeout=60)
+                    got.append(bytes(buf[:4]))
+                else:                                # posted-capable
+                    n, _ = env.comm.recv_into(peer, pb, ANY_TAG,
+                                              timeout=60)
+                    got.append(pb.read(0, 4))
+            env.comm.waitall(sreqs, timeout=60)
+            order = [int.from_bytes(g, "little") for g in got]
+            assert order == list(range(n_msgs)), order     # strict FIFO
+            return (env.comm.eager_sends, env.comm.rndv_sends,
+                    env.comm.posted_sends)
+
+        res = run_threads(2, prog, cell_size=CELL, n_cells=2,
+                          eager_threshold=CELL, pool_bytes=64 << 20,
+                          timeout=300)
+        for eager, rndv, posted in res:
+            assert eager > 0 and rndv > 0
+        # posted hits are timing-dependent here; the paths must coexist
+        # without corrupting FIFO order either way
+        assert all(r[0] + r[1] == n_msgs for r in res)
+
+
+# --------------------------------------------------------------------------
+# collective teardown (Comm.free bugfix)
+# --------------------------------------------------------------------------
+
+class TestCommFree:
+    def test_free_releases_queue_matrix_and_matchbox(self):
+        """free() is collective, releases the comm's arena objects
+        (queue matrix, barrier, matchbox, publication flag) and round
+        buffers on every rank, and is idempotent."""
+        def prog(env):
+            sub = env.comm.split(0, key=env.rank)
+            x = np.arange(3 * CELL, dtype=np.float64)
+            sub.allreduce(x, algo="ring")            # round buffers live
+            name = sub.name
+            before = env.arena.stats()["slots_used"]
+            sub.free()
+            sub.free()                               # idempotent
+            env.comm.barrier()
+            gone = []
+            for suffix in (":mq", ":bar", ":mb", ":ok"):
+                try:
+                    env.arena.open(name + suffix)
+                    gone.append(False)
+                except FileNotFoundError:
+                    gone.append(True)
+            released = before - env.arena.stats()["slots_used"]
+            # world must remain fully functional
+            y = env.comm.allreduce(np.ones(8), algo="ring")
+            assert np.allclose(y, 2.0)
+            return gone, released
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          timeout=120)
+        for gone, released in res:
+            assert all(gone), gone
+            assert released > 0                      # round buffers went
+
+    def test_free_reclaims_trailing_stagers(self):
+        """A staged send completes at descriptor enqueue, before the
+        receiver's ack; with no further pt2pt ops the acked stager waits
+        for a progress sweep that never comes. free() must reclaim it
+        instead of leaking one rv:* object per comm lifecycle."""
+        def prog(env):
+            sub = env.comm.dup()
+            baseline = env.arena.stats()["slots_used"]
+            if env.rank == 0:
+                sub.send(1, b"\x71" * (4 * CELL), tag=1)  # staged, trailing
+            else:
+                dst = bytearray(4 * CELL)
+                sub.recv_into(0, dst, tag=1)
+                assert dst[0] == 0x71
+            env.comm.barrier()
+            assert sub._stagers or env.rank != 0   # leak candidate exists
+            sub.free()
+            env.comm.barrier()
+            # everything sub created (incl. the stager) is gone
+            return env.arena.stats()["slots_used"] <= baseline
+
+        assert all(run_threads(2, prog, cell_size=CELL,
+                               eager_threshold=0, pool_bytes=64 << 20,
+                               timeout=120))
+
+    def test_free_with_live_postings(self):
+        """free() retracts live matchbox postings (e.g. an abandoned
+        irecv_into) instead of leaving claimable entries behind."""
+        def prog(env):
+            sub = env.comm.dup()
+            if env.rank == 0:
+                pb = sub.alloc_buffer(4 * CELL)
+                sub.irecv_into(1, pb, tag=1)         # posted, never waited
+                assert sub._mb_records
+            env.comm.barrier()
+            sub.free()
+            assert not sub._mb_records
+            return True
+
+        assert all(run_threads(2, prog, cell_size=CELL,
+                               pool_bytes=64 << 20, timeout=120))
+
+
+# --------------------------------------------------------------------------
+# CI copied-bytes budget gate (pure helper)
+# --------------------------------------------------------------------------
+
+class TestBudgetGate:
+    BUDGET = {"pt2pt_rndv_posted@1MiB": 1_048_704.0,
+              "pt2pt_rndv_staged@1MiB": 2_098_129.0}
+
+    def test_within_tolerance_passes(self):
+        from benchmarks.fig5_8_osu import check_budget
+        measured = {k: v * 1.05 for k, v in self.BUDGET.items()}
+        assert check_budget(measured, self.BUDGET, tol=0.10) == []
+
+    def test_injected_extra_copy_fails(self):
+        """An extra payload copy on the posted path (~2x) must trip the
+        gate — the regression the CI bench-gate job exists to catch."""
+        from benchmarks.fig5_8_osu import check_budget
+        measured = dict(self.BUDGET)
+        measured["pt2pt_rndv_posted@1MiB"] *= 2.0    # injected copy
+        problems = check_budget(measured, self.BUDGET, tol=0.10)
+        assert any("REGRESSION" in p and "rndv_posted" in p
+                   for p in problems)
+
+    def test_improvement_beyond_tolerance_demands_refresh(self):
+        from benchmarks.fig5_8_osu import check_budget
+        measured = dict(self.BUDGET)
+        measured["pt2pt_rndv_staged@1MiB"] *= 0.5
+        problems = check_budget(measured, self.BUDGET, tol=0.10)
+        assert any("STALE BUDGET" in p for p in problems)
+
+    def test_missing_and_unbudgeted_keys_flagged(self):
+        from benchmarks.fig5_8_osu import check_budget
+        problems = check_budget({"new_path@1MiB": 1.0}, self.BUDGET)
+        assert any(p.startswith("MISSING") for p in problems)
+        assert any(p.startswith("UNBUDGETED") for p in problems)
