@@ -20,9 +20,18 @@
                 persistent pool-resident round buffers, split()/dup()
                 sub-communicators, MPI-4 persistent requests
                 (send_init/recv_init), eager_threshold="auto"
-  collectives — the view-based collective ALGORITHMS (recursive doubling /
-                ring / Bruck); the free-function surface is deprecated in
-                favor of Comm methods
+  sched       — collective schedule IR: Send/Recv/Reduce/Copy DAGs
+                compiled once per (op, size, topology) and cached
+  progress    — the SHARED PROGRESS CORE: one cooperative engine per
+                communicator owning pt2pt FIFOs, stager reclaim and
+                every active collective schedule; CollRequest handles
+                for comm.iallreduce/ibcast/iallgather/ireduce_scatter/
+                ibarrier and MPI-4 persistent collectives
+                (comm.allreduce_init — pre-posted matchbox rounds)
+  collectives — the collective launch layer over the schedule engine
+                (recursive doubling / fused ring / Bruck); the
+                free-function surface is deprecated in favor of Comm
+                methods but routes through the same schedules
   runtime     — thread and process runtimes for multi-rank execution
 
 Deprecated (import still works, emits DeprecationWarning): the
@@ -34,12 +43,17 @@ from importlib import import_module as _import_module
 
 from repro.core.arena import Arena, ArenaFullError, ObjHandle, PAPER_ARENA
 from repro.core.coherence import CoherentView, ProtocolStats
-from repro.core.comm import Comm, PersistentRequest, startall
+from repro.core.comm import (Comm, PersistentCollRequest, PersistentRequest,
+                             startall)
 from repro.core.pool import (CACHELINE, IncoherentPool, LocalPool, Pool,
                              RankCache, Registration, SharedMemoryPool,
                              as_u8)
-from repro.core.pt2pt import (ANY_TAG, DEFAULT_MB_SLOTS, Matchbox,
-                              PoolBuffer, PoolView, Request)
+from repro.core.progress import (CollRequest, ProgressEngine, testall,
+                                 waitall, waitany)
+from repro.core.pt2pt import (ANY_TAG, DEFAULT_MB_SLOTS, TAG_RESERVED_BASE,
+                              Matchbox, PoolBuffer, PoolView, Request)
+from repro.core.sched import (BufRef, CopyOp, RecvOp, ReduceOp, Schedule,
+                              SendOp, compile_schedule)
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
                                   QueueMatrix, SPSCQueue)
 from repro.core.rma import Window

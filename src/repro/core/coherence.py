@@ -65,6 +65,13 @@ class ProtocolStats:
     # descriptors and arena metadata stay unattributed.
     path_copied_bytes: dict = field(default_factory=lambda: {
         "eager": 0, "rndv_staged": 0, "rndv_posted": 0})
+    # receives that wanted to publish a matchbox posting but found every
+    # strip slot occupied (counted once per receive): the signal the
+    # matchbox sizing policy uses — pre-posted schedules size
+    # ``Communicator(matchbox_slots=...)`` to their schedule depth, and
+    # a non-zero miss count says the strips are too shallow for the
+    # posting pattern in flight
+    mb_capacity_misses: int = 0
 
     def lines(self, n: int) -> int:
         return (n + CACHELINE - 1) // CACHELINE
@@ -104,6 +111,11 @@ class CoherentView:
         """Attribute ``nbytes`` of already-counted payload movement to a
         pt2pt data-plane path (eager / rndv_staged / rndv_posted)."""
         self.stats.path_copied_bytes[path] += nbytes
+
+    def count_mb_miss(self) -> None:
+        """Report a matchbox capacity miss: a postable receive found its
+        (src, dst) strip full and stayed on the staged/eager paths."""
+        self.stats.mb_capacity_misses += 1
 
     def write_release(self, off: int, data) -> None:
         """store; flush; sfence — makes the write globally visible.

@@ -1,35 +1,31 @@
 """Collective ALGORITHMS built on cMPI point-to-point (paper §3.6).
 
 The paper leaves collectives as future work but notes they decompose into
-pt2pt via standard algorithms (recursive doubling [5], Bruck [20]). We
-implement that decomposition — these run the framework's HOST-side
-coordination (checkpoint manifests, data-pipeline epochs, elastic control),
-and their communication patterns are mirrored device-side in
-``distributed/schedules.py``.
+pt2pt via standard algorithms (recursive doubling [5], Bruck [20]). Since
+the schedule-DAG subsystem (``repro.core.sched`` + ``repro.core.progress``)
+landed, the algorithms live in ONE place — the schedule compilers — and
+this module is the launch layer: it binds a compiled schedule to a buffer
+backend, hands the execution to the communicator's shared progress
+engine, and returns a ``CollRequest``. The deprecated free-function
+surface (``bcast(comm, arr)``-style) is a set of blocking wrappers over
+the same launches with the plain-heap backend; the ``Comm`` method
+collectives (core/comm.py) call the identical ``icoll_*`` launchers with
+the pool-resident backend when the pool supports it. Backends are
+wire-compatible round for round (same tags, sizes, order), so ranks may
+disagree on backend choice within one collective and still interoperate.
 
-NOTE (Comm API v2): the free-function surface here (``bcast(comm, arr)``
--style) is DEPRECATED as a public API — use the method collectives on
-``repro.core.Comm`` (``comm.bcast(arr)``, ``comm.allreduce(...)``, ...),
-which additionally route large payloads through persistent pool-resident
-round buffers (zero-sender-copy PoolView rounds) and add hierarchical
-algorithms over ``comm.split()`` sub-communicators. The functions in this
-module remain as the protocol-correct view-based engine: ``Comm`` falls
-back to them for small payloads and on pools without raw memory views
-(incoherent mode), and importing them via ``repro.core`` emits a
+NOTE (Comm API v2): the free-function surface here is DEPRECATED as a
+public API — use the method collectives on ``repro.core.Comm``
+(``comm.bcast(arr)``, ``comm.allreduce(...)``, ...) and their
+non-blocking forms (``comm.iallreduce(...)`` returning a request).
+Importing the free functions via ``repro.core`` emits a
 ``DeprecationWarning`` while continuing to work.
-
-Copy-aware: every per-round exchange sends ndarray views (buffer-protocol
-sends) and receives with ``recv_into`` into preallocated ndarrays — no
-``tobytes()`` serialization and no ``frombuffer().copy()`` round trips in
-the hot loops. Large rounds ride the communicator's rendezvous path (one
-staged copy per round, vs ZERO sender-side copies on the Comm method
-path, which is the difference ``benchmarks/fig5_8_osu.py`` measures).
 
 Algorithms (n = comm size, numpy arrays):
   barrier         dissemination (log n rounds of pairwise messages)
   bcast           binomial tree
   reduce          binomial tree (op applied bottom-up)
-  allreduce       recursive doubling (pow2) | ring RS+AG (any n)
+  allreduce       recursive doubling (pow2) | fused ring RS+AG (any n)
   allgather       Bruck | ring
   reduce_scatter  ring
   alltoall        pairwise exchange
@@ -38,167 +34,276 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.progress import (CollRequest, _HeapBufs, _ResidentBufs,
+                                 _SchedExec)
 from repro.core.pt2pt import Communicator
+from repro.core.sched import Schedule, SendOp, compile_schedule
 
-_T = 0x7F000000   # tag space reserved for collectives
+_T = 0x7F000000   # legacy tag space (alltoall pairwise lanes)
+_META_BYTES = 192  # fixed-size dtype/shape descriptor for bcast
 
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
+def auto_allreduce_algo(n: int, nelem: int) -> str:
+    """The ONE rd-vs-ring cutoff, shared by every allreduce surface
+    (blocking, nonblocking, persistent, deprecated free function):
+    recursive doubling ships the full payload log2(n) times, so it only
+    wins for small payloads on power-of-two sizes."""
+    return "rd" if (_is_pow2(n) and nelem < 4096) else "ring"
+
+
 def shards_to_chunk_order(flat: np.ndarray, n: int) -> np.ndarray:
     """After a ring reduce-scatter + allgather, rank i's reduced shard is
     CHUNK (i+1) % n of the padded payload — reorder the allgathered flat
-    vector from rank order into chunk order. Shared by the free-function
-    and Comm-method allreduce compositions."""
+    vector from rank order into chunk order. (The FUSED ring allreduce
+    schedule receives chunks in place and never needs this; it remains
+    for compositions that allgather a reduce-scattered shard, e.g. the
+    hierarchical allreduce.)"""
     per = flat.size // n
     parts = [flat[i * per:(i + 1) * per] for i in range(n)]
     return np.concatenate([parts[(c - 1) % n] for c in range(n)])
 
 
+# --------------------------------------------------------------------------
+# launch layer: bind a compiled schedule to buffers, hand it to the engine
+# --------------------------------------------------------------------------
+
+def _make_bufs(comm: Communicator, sched: Schedule, resident: bool):
+    """Pool-resident round buffers (leased from the communicator's round
+    pool — ``Comm`` provides ``_lease_round_bufs``) or plain heap."""
+    if resident:
+        bufs, release = comm._lease_round_bufs(sched.slot_sizes)
+        return _ResidentBufs(bufs, release)
+    return _HeapBufs(sched.slot_sizes)
+
+
+def _launch(comm: Communicator, sched: Schedule, bufs, dtype, op,
+            finalize) -> CollRequest:
+    ex = _SchedExec(comm, sched, bufs, comm._alloc_coll_tags(),
+                    dtype=dtype, op=op, finalize=finalize)
+    comm._engine.add_coll(ex)
+    return CollRequest(comm, ex)
+
+
+def immediate(comm: Communicator, result) -> CollRequest:
+    """A pre-completed CollRequest (size-1 communicators)."""
+    ex = _SchedExec(comm, Schedule("noop", comm.size, comm.rank),
+                    _HeapBufs({}), 0, finalize=lambda b: result)
+    return CollRequest(comm, ex)
+
+
+def icoll_allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
+                    algo: str = "ring",
+                    resident: bool = False) -> CollRequest:
+    arr = np.ascontiguousarray(arr)
+    if comm.size == 1:
+        return immediate(comm, arr.copy())
+    shape, dtype, count = arr.shape, arr.dtype, arr.size
+    if algo == "rd":
+        sched = compile_schedule(comm, "allreduce_rd", arr.nbytes,
+                                 arr.dtype.itemsize)
+        fin = (lambda b: np.array(b.ndview(sched.result, dtype))
+               .reshape(shape))
+    else:
+        sched = compile_schedule(comm, "allreduce_ring", arr.nbytes,
+                                 arr.dtype.itemsize)
+        # fused RS+AG: slot 0 finishes in CHUNK order — truncate the
+        # zero padding and reshape, no reorder pass
+        fin = (lambda b: np.array(b.ndview(sched.result, dtype)[:count])
+               .reshape(shape))
+    bufs = _make_bufs(comm, sched, resident)
+    bufs.fill(0, arr, pad_to=sched.slot_sizes[0])
+    return _launch(comm, sched, bufs, dtype, op, fin)
+
+
+def icoll_reduce_scatter(comm: Communicator, arr: np.ndarray, op=np.add,
+                         resident: bool = False) -> CollRequest:
+    arr = np.ascontiguousarray(arr)
+    if comm.size == 1:
+        return immediate(comm, arr.reshape(-1).copy())
+    dtype = arr.dtype
+    sched = compile_schedule(comm, "reduce_scatter_ring", arr.nbytes,
+                             arr.dtype.itemsize)
+    bufs = _make_bufs(comm, sched, resident)
+    bufs.fill(0, arr, pad_to=sched.slot_sizes[0])
+    fin = lambda b: np.array(b.ndview(sched.result, dtype))  # noqa: E731
+    return _launch(comm, sched, bufs, dtype, op, fin)
+
+
+def icoll_allgather(comm: Communicator, shard: np.ndarray,
+                    algo: str = "ring",
+                    resident: bool = False) -> CollRequest:
+    shard = np.ascontiguousarray(shard)
+    n, rank = comm.size, comm.rank
+    if n == 1:
+        return immediate(comm, shard.reshape(-1).copy())
+    dtype, per_b = shard.dtype, shard.nbytes
+    kind = "allgather_bruck" if algo == "bruck" else "allgather_ring"
+    sched = compile_schedule(comm, kind, per_b, shard.dtype.itemsize)
+    bufs = _make_bufs(comm, sched, resident)
+    # own shard: bruck block 0, ring chunk `rank`
+    bufs.fill_at(0, 0 if algo == "bruck" else rank * per_b, shard)
+    if algo == "bruck":
+        per = shard.size
+
+        def fin(b):
+            work = np.array(b.ndview(sched.result, dtype)).reshape(n, per)
+            out = np.empty_like(work)
+            for i in range(n):           # bruck order -> rank order
+                out[(rank + i) % n] = work[i]
+            return out.reshape(-1)
+    else:
+        fin = lambda b: np.array(b.ndview(sched.result, dtype))  # noqa: E731
+    return _launch(comm, sched, bufs, dtype, None, fin)
+
+
+def icoll_bcast_known(comm: Communicator, arr: np.ndarray, root: int = 0,
+                      resident: bool = False) -> CollRequest:
+    """ibcast with the payload buffer KNOWN on every rank (MPI
+    semantics: same shape/dtype everywhere; non-root buffers are
+    overwritten in place). The heap backend aliases slot 0 to the user
+    array — leaves receive straight into it with no round-buffer
+    detour; the resident backend lands the payload once in a round
+    buffer and forwards zero-copy PoolViews."""
+    if not (isinstance(arr, np.ndarray) and arr.flags.c_contiguous):
+        # ascontiguousarray would silently detach a COPY — the caller's
+        # buffer would never see the broadcast, violating the in-place
+        # contract
+        raise ValueError("ibcast needs a C-contiguous ndarray "
+                         "(the payload is delivered in place)")
+    if comm.size == 1:
+        return immediate(comm, arr)
+    sched = compile_schedule(comm, "bcast", arr.nbytes,
+                             arr.dtype.itemsize, root=root)
+    # a leaf (no forwarding sends) gains nothing from a round buffer —
+    # it would just pay an extra pool -> user drain
+    resident = resident and any(isinstance(nd, SendOp)
+                                for nd in sched.nodes)
+    is_root = comm.rank == root
+    if resident:
+        bufs = _make_bufs(comm, sched, True)
+        if is_root:
+            bufs.fill(0, arr)
+        u8 = arr.reshape(-1).view(np.uint8)
+
+        def fin(b):
+            if not is_root:
+                u8[:] = b.ndview(sched.result, np.uint8)
+            return arr
+    else:
+        bufs = _HeapBufs({})             # slot 0 IS the user array
+        bufs.alias(0, arr)
+        fin = lambda b: arr              # noqa: E731
+    return _launch(comm, sched, bufs, arr.dtype, None, fin)
+
+
+def icoll_reduce(comm: Communicator, arr: np.ndarray, op=np.add,
+                 root: int = 0, resident: bool = False) -> CollRequest:
+    arr = np.ascontiguousarray(arr)
+    if comm.size == 1:
+        return immediate(comm, arr.copy())
+    shape, dtype = arr.shape, arr.dtype
+    sched = compile_schedule(comm, "reduce", arr.nbytes,
+                             arr.dtype.itemsize, root=root)
+    bufs = _make_bufs(comm, sched, resident)
+    bufs.fill(0, arr)
+    if comm.rank == root:
+        fin = (lambda b: np.array(b.ndview(sched.result, dtype))
+               .reshape(shape))
+    else:
+        fin = lambda b: None             # noqa: E731
+    return _launch(comm, sched, bufs, dtype, op, fin)
+
+
+def icoll_barrier(comm: Communicator) -> CollRequest:
+    if comm.size == 1:
+        return immediate(comm, None)
+    sched = compile_schedule(comm, "barrier")
+    return _launch(comm, sched, _HeapBufs(sched.slot_sizes), None, None,
+                   lambda b: None)
+
+
+# --------------------------------------------------------------------------
+# bcast metadata phase (dtype/shape travel ahead of the payload)
+# --------------------------------------------------------------------------
+
+def _bcast_impl(comm: Communicator, arr: np.ndarray | None, root: int,
+                use_resident=None) -> np.ndarray:
+    """Blocking bcast where only the root knows shape/dtype: a
+    fixed-size metadata bcast (eager, one cell) announces them, then the
+    payload rides ``icoll_bcast_known``. ``use_resident``: optional
+    ``nbytes -> bool`` predicate evaluated per rank once the payload
+    size is known (each rank picks its own path — the wire protocol is
+    self-describing per message)."""
+    if comm.size == 1:
+        return np.asarray(arr).copy()
+    meta = np.zeros(_META_BYTES, np.uint8)
+    if comm.rank == root:
+        a = np.ascontiguousarray(arr)
+        # ';' separator: dtype.str itself may contain '|' (e.g. "|u1")
+        desc = (f"{a.dtype.str};"
+                f"{','.join(map(str, a.shape))}").encode()
+        if len(desc) > _META_BYTES:
+            raise ValueError(f"bcast metadata over {_META_BYTES}B "
+                             f"(shape rank too large)")
+        meta[:len(desc)] = np.frombuffer(desc, np.uint8)
+    icoll_bcast_known(comm, meta, root).wait()
+    if comm.rank == root:
+        out = a
+    else:
+        dts, shs = bytes(meta).rstrip(b"\0").decode().split(";")
+        shape = tuple(int(x) for x in shs.split(",") if x)
+        out = np.empty(shape, np.dtype(dts))
+    resident = bool(use_resident(out.nbytes)) if use_resident else False
+    icoll_bcast_known(comm, out, root, resident=resident).wait()
+    return np.array(out) if comm.rank == root else out
+
+
+# --------------------------------------------------------------------------
+# deprecated free-function surface (blocking wrappers, heap backend)
+# --------------------------------------------------------------------------
+
 def barrier_dissemination(comm: Communicator) -> None:
-    n, r = comm.size, comm.rank
-    k = 1
-    rnd = 0
-    while k < n:
-        dst = (r + k) % n
-        src = (r - k) % n
-        sreq = comm.isend(dst, b"", tag=_T + rnd)
-        comm.recv(src, tag=_T + rnd)
-        sreq.wait()
-        k <<= 1
-        rnd += 1
+    icoll_barrier(comm).wait()
 
 
 def bcast(comm: Communicator, arr: np.ndarray | None, root: int = 0
           ) -> np.ndarray:
     """Binomial tree broadcast. Non-root ranks pass arr=None or a buffer of
     the right shape/dtype; shape/dtype metadata travels with the data."""
-    n, r = comm.size, comm.rank
-    vr = (r - root) % n          # virtual rank
-    if vr == 0:
-        payload = _pack(arr)
-    else:
-        # receive from parent: highest set bit of vr
-        k = 1
-        while k * 2 <= vr:
-            k *= 2
-        parent = (vr - k + root) % n
-        data, _ = comm.recv(parent, tag=_T + 16)
-        payload = data
-    # forward to children: vr + k for every k = 2^j > vr, within range
-    k = 1
-    while k < n:
-        if vr < k and vr + k < n:
-            comm.send((vr + k + root) % n, payload, tag=_T + 16)
-        k *= 2
-    return _unpack(payload)
+    return _bcast_impl(comm, arr, root)
 
 
 def reduce(comm: Communicator, arr: np.ndarray, op=np.add, root: int = 0
            ) -> np.ndarray | None:
-    n, r = comm.size, comm.rank
-    vr = (r - root) % n
-    acc = arr.copy()
-    k = 1
-    while k < n:
-        if vr % (2 * k) == 0:
-            src_vr = vr + k
-            if src_vr < n:
-                other = comm.recv_array((src_vr + root) % n, arr.shape,
-                                        arr.dtype, tag=_T + 32)
-                acc = op(acc, other)
-        elif vr % (2 * k) == k:
-            comm.send_array((vr - k + root) % n, acc, tag=_T + 32)
-            return None if r != root else acc
-        k *= 2
-    return acc if r == root else None
+    return icoll_reduce(comm, arr, op, root).wait()
 
 
 def allreduce_rd(comm: Communicator, arr: np.ndarray, op=np.add
                  ) -> np.ndarray:
     """Recursive doubling (pow2 sizes) — paper's cited algorithm [5]."""
-    n, r = comm.size, comm.rank
-    assert _is_pow2(n), "recursive doubling needs power-of-two size"
-    acc = np.ascontiguousarray(arr).copy()
-    other = np.empty_like(acc)
-    k = 1
-    rnd = 0
-    while k < n:
-        peer = r ^ k
-        sreq = comm.isend(peer, acc, tag=_T + 64 + rnd)
-        comm.recv_into(peer, other, tag=_T + 64 + rnd)
-        sreq.wait()
-        acc = op(acc, other)     # new array: in-flight views stay valid
-        k <<= 1
-        rnd += 1
-    return acc
+    assert _is_pow2(comm.size), \
+        "recursive doubling needs power-of-two size"
+    return icoll_allreduce(comm, arr, op, algo="rd").wait()
 
 
 def reduce_scatter_ring(comm: Communicator, arr: np.ndarray, op=np.add
                         ) -> np.ndarray:
     """Ring reduce-scatter; returns this rank's reduced shard (flat)."""
-    n, r = comm.size, comm.rank
-    flat = np.ascontiguousarray(arr).reshape(-1)
-    pad = (-len(flat)) % n
-    if pad:
-        flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
-    shards = np.split(flat.copy(), n)
-    inc = np.empty(len(flat) // n, flat.dtype)
-    right, left = (r + 1) % n, (r - 1) % n
-    for step in range(n - 1):
-        send_idx = (r - step) % n
-        recv_idx = (r - step - 1) % n
-        sreq = comm.isend(right, shards[send_idx], tag=_T + 128 + step)
-        comm.recv_into(left, inc, tag=_T + 128 + step)
-        sreq.wait()
-        shards[recv_idx] = op(shards[recv_idx], inc)
-    return shards[(r + 1) % n]
+    return icoll_reduce_scatter(comm, arr, op).wait()
 
 
 def allgather_ring(comm: Communicator, shard: np.ndarray) -> np.ndarray:
-    n, r = comm.size, comm.rank
-    shard = np.ascontiguousarray(shard)
-    shards = [np.empty(shard.shape, shard.dtype) for _ in range(n)]
-    shards[r][...] = shard
-    right, left = (r + 1) % n, (r - 1) % n
-    for step in range(n - 1):
-        send_idx = (r - step) % n
-        recv_idx = (r - step - 1) % n
-        sreq = comm.isend(right, shards[send_idx], tag=_T + 256 + step)
-        comm.recv_into(left, shards[recv_idx], tag=_T + 256 + step)
-        sreq.wait()
-    return np.concatenate([s.reshape(-1) for s in shards])
+    return icoll_allgather(comm, shard, algo="ring").wait()
 
 
 def allgather_bruck(comm: Communicator, shard: np.ndarray) -> np.ndarray:
-    """Bruck all-gather — paper's cited algorithm [20]; ceil(log2 n) rounds."""
-    n, r = comm.size, comm.rank
-    shard = np.ascontiguousarray(shard)
-    per = shard.size
-    blocks = [shard]
-    k = 1
-    rnd = 0
-    while k < n:
-        dst = (r - k) % n
-        src = (r + k) % n
-        count = min(k, n - k)
-        # the block gather is the algorithm's packing step, done once as
-        # an ndarray concat; the wire exchange itself is view-based
-        payload = np.concatenate([b.reshape(-1) for b in blocks[:count]])
-        got = np.empty(count * per, shard.dtype)
-        sreq = comm.isend(dst, payload, tag=_T + 512 + rnd)
-        comm.recv_into(src, got, tag=_T + 512 + rnd)
-        sreq.wait()
-        for i in range(count):
-            blocks.append(got[i * per:(i + 1) * per].reshape(shard.shape))
-        k <<= 1
-        rnd += 1
-    blocks = blocks[:n]
-    # blocks[i] is rank (r+i) % n's shard — rotate into rank order
-    ordered = [blocks[(i - r) % n] for i in range(n)]
-    return np.concatenate([b.reshape(-1) for b in ordered])
+    """Bruck all-gather — paper's cited algorithm [20]; ceil(log2 n)
+    rounds."""
+    return icoll_allgather(comm, shard, algo="bruck").wait()
 
 
 def allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
@@ -207,12 +312,8 @@ def allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
     if n == 1:
         return arr.copy()
     if algo == "auto":
-        algo = "rd" if (_is_pow2(n) and arr.size < 4096) else "ring"
-    if algo == "rd":
-        return allreduce_rd(comm, arr, op)
-    shard = reduce_scatter_ring(comm, arr, op)
-    flat = shards_to_chunk_order(allgather_ring(comm, shard), n)
-    return flat[:arr.size].reshape(arr.shape).astype(arr.dtype)
+        algo = auto_allreduce_algo(n, arr.size)
+    return icoll_allreduce(comm, arr, op, algo=algo).wait()
 
 
 def alltoall(comm: Communicator, blocks: list[np.ndarray]
@@ -226,24 +327,11 @@ def alltoall(comm: Communicator, blocks: list[np.ndarray]
     for off in range(1, n):
         dst = (r + off) % n
         reqs.append(comm.isend(dst, np.ascontiguousarray(blocks[dst]),
-                               tag=_T + 1024 + off))
+                               tag=_T + 1024 + off, _internal=True))
     for off in range(1, n):
         src = (r - off) % n
         out[src] = np.empty(blocks[src].shape, blocks[src].dtype)
-        comm.recv_into(src, out[src], tag=_T + 1024 + off)
+        comm.recv_into(src, out[src], tag=_T + 1024 + off,
+                       _internal=True)
     comm.waitall(reqs)
     return out
-
-
-def _pack(arr: np.ndarray) -> bytes:
-    meta = (str(arr.dtype).encode() + b"|"
-            + ",".join(map(str, arr.shape)).encode() + b"|")
-    return len(meta).to_bytes(4, "little") + meta + arr.tobytes()
-
-
-def _unpack(data: bytes) -> np.ndarray:
-    mlen = int.from_bytes(data[:4], "little")
-    meta = data[4:4 + mlen].split(b"|")
-    dtype = np.dtype(meta[0].decode())
-    shape = tuple(int(x) for x in meta[1].decode().split(",") if x)
-    return np.frombuffer(data[4 + mlen:], dtype=dtype).reshape(shape).copy()

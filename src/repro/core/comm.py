@@ -52,9 +52,12 @@ from repro.core import collectives as _coll
 from repro.core.arena import Arena, _hash_name
 from repro.core.collectives import _is_pow2, shards_to_chunk_order
 from repro.core.pool import Registration, as_u8
+from repro.core.progress import (CollRequest, _DEFAULT_TIMEOUT, _HeapBufs,
+                                 _ResidentBufs, _SchedExec)
 from repro.core.pt2pt import (ANY_TAG, DEFAULT_MB_SLOTS, Communicator,
                               PoolBuffer, PoolView, Request, _RNDV_CTRL)
 from repro.core.ringqueue import DEFAULT_CELL_SIZE
+from repro.core.sched import compile_schedule
 
 _T = 0x7F000000          # collectives tag space (shared with collectives.py)
 _NAME_BUDGET = 24        # derived comm names are hashed beyond this length
@@ -83,26 +86,41 @@ def _best_group(n: int) -> int:
 class _RoundPool:
     """Per-comm pool of persistent pool-resident round buffers.
 
-    Collectives index buffers by role (0 = working buffer, 1 = incoming
-    block, 2.. = per-peer alltoall lanes). Capacity grows to the
-    high-water mark (rounded to a power of two) and is then REUSED across
-    rounds and across collective calls — steady-state iterative workloads
-    do zero arena create/destroy work.
+    Two allocation styles share it:
+
+    * ``buf``/``array`` — role-indexed buffers (0 = working buffer,
+      1 = incoming block, 2.. = per-peer alltoall lanes), the PR 2
+      surface still used by ``alltoall``.
+    * ``lease``/``release`` — whole SLOT SETS for schedule executions:
+      a leased set maps a schedule's slot indices to PoolBuffers and is
+      returned to the free list when the execution finalizes, so
+      back-to-back collectives reuse one set (flat arena footprint)
+      while overlapping collectives (``iallreduce`` alongside an
+      ``iallgather``) each hold their own.
+
+    Capacity grows to the high-water mark (rounded to a power of two)
+    and is then REUSED — steady-state iterative workloads do zero arena
+    create/destroy work.
     """
 
     def __init__(self, comm: "Comm"):
         self._comm = comm
         self._bufs: dict[int, PoolBuffer] = {}
+        self._free_sets: list[dict[int, PoolBuffer]] = []
 
-    def buf(self, idx: int, nbytes: int) -> PoolBuffer:
-        pb = self._bufs.get(idx)
+    def _grow(self, bufs: dict[int, PoolBuffer], idx: int,
+              nbytes: int) -> PoolBuffer:
+        pb = bufs.get(idx)
         if pb is None or pb.nbytes < nbytes:
             if pb is not None:
                 pb.free()
             cap = 1 << max(6, (max(nbytes, 1) - 1).bit_length())
             pb = self._comm.alloc_buffer(cap)
-            self._bufs[idx] = pb
+            bufs[idx] = pb
         return pb
+
+    def buf(self, idx: int, nbytes: int) -> PoolBuffer:
+        return self._grow(self._bufs, idx, nbytes)
 
     def array(self, idx: int, shape, dtype) -> tuple[PoolBuffer, np.ndarray]:
         """A numpy array aliasing pool memory (coherent pools only) plus
@@ -114,13 +132,28 @@ class _RoundPool:
         arr = np.frombuffer(pb.view()[:nbytes], dtype=dtype).reshape(shape)
         return pb, arr
 
+    def lease(self, slot_sizes: dict[int, int]
+              ) -> tuple[dict[int, PoolBuffer], Any]:
+        """Borrow a slot set sized for ``slot_sizes``; returns
+        ``(bufs, release)`` where calling ``release()`` puts the set
+        back on the free list."""
+        bufs = self._free_sets.pop() if self._free_sets else {}
+        for idx, sz in slot_sizes.items():
+            self._grow(bufs, idx, sz)
+
+        def release(_b=bufs):
+            self._free_sets.append(_b)
+        return bufs, release
+
     def free_all(self) -> None:
-        for pb in self._bufs.values():
-            try:
-                pb.free()
-            except FileNotFoundError:
-                pass
-        self._bufs.clear()
+        for bufs in [self._bufs] + self._free_sets:
+            for pb in bufs.values():
+                try:
+                    pb.free()
+                except FileNotFoundError:
+                    pass
+            bufs.clear()
+        self._free_sets.clear()
 
 
 class PersistentRequest:
@@ -239,11 +272,200 @@ class PersistentRequest:
             self._reg = None
 
 
-def startall(reqs: list[PersistentRequest]) -> list[PersistentRequest]:
-    """MPI_Startall: start every persistent request in order."""
+def startall(reqs: list) -> list:
+    """MPI_Startall: start every persistent request in order (pt2pt and
+    collective persistent requests may be mixed)."""
     for r in reqs:
         r.start()
     return reqs
+
+
+class PersistentCollRequest:
+    """MPI-4 persistent collective (``comm.allreduce_init(...)``).
+
+    The schedule is compiled ONCE at init; buffers are dedicated,
+    DOUBLE-BUFFERED pool-resident sets (parity = iteration mod 2); and
+    every iteration's receives are posted one iteration AHEAD — the
+    round-synchronized pre-post handshake that turns PR 3's
+    opportunistic matchbox hits into deterministic ones:
+
+    * ``allreduce_init`` (collective) posts iteration 0's receives on
+      every rank, then barriers — entries exist before any rank can
+      ``start()``.
+    * ``start(k)`` posts iteration k+1's receives (parity-swapped
+      buffers, parity-salted tags) BEFORE issuing any iteration-k send.
+      A peer can only reach its iteration-k+1 sends after its
+      ``wait(k)`` — which requires receiving data this rank sent in
+      iteration k, i.e. after this rank's ``start(k)`` pre-posts. So
+      every rendezvous send of every iteration finds its posted entry:
+      a 100% posted-hit rate, asserted in ``fig5_8_osu --smoke``.
+
+    Cross-iteration buffer safety: an iteration-k+1 entry may only be
+    claimed by a peer already executing iteration k+1, and any send of
+    ours that SOURCES the same parity buffer completed in iteration
+    k-1 (its payload left the buffer at stage/claim time before the
+    receive that unblocked the peer completed).
+
+    Sizing: full determinism needs ``matchbox_slots >= 2 *
+    max-receives-per-peer`` (two iterations' entries coexist) —
+    exposed as ``.matchbox_demand``; shallower strips degrade
+    gracefully to staged fallback (counted in
+    ``ProtocolStats.mb_capacity_misses``).
+
+    The bound array is captured as a live view: refill it between
+    iterations, never replace it. ``wait()`` returns the reduced array.
+    """
+
+    def __init__(self, comm: "Comm", arr: np.ndarray, op=np.add,
+                 algo: str = "auto"):
+        self._comm = comm
+        if not (isinstance(arr, np.ndarray) and arr.flags.c_contiguous):
+            # a list or strided array would silently bind a one-time
+            # SNAPSHOT — the per-iteration refills the live-view
+            # contract promises would never be seen
+            raise ValueError("allreduce_init needs a C-contiguous "
+                             "ndarray (it is re-read on every start())")
+        self._arr = arr
+        self.op = op
+        if algo == "auto":
+            # same cutoff as every other allreduce surface; recursive
+            # doubling additionally doubles the dedicated buffer
+            # memory here, so large persistent payloads ride the ring
+            algo = _coll.auto_allreduce_algo(comm.size, arr.size)
+        self.algo = algo
+        self.started = 0
+        self._iter = 0
+        self._active: Optional[CollRequest] = None
+        self.matchbox_demand = 0
+        n = comm.size
+        if n == 1:
+            self._sched = None
+            return
+        kind = "allreduce_rd" if algo == "rd" else "allreduce_ring"
+        self._sched = compile_schedule(comm, kind, self._arr.nbytes,
+                                       self._arr.dtype.itemsize)
+        self.matchbox_demand = 2 * self._sched.max_recvs_per_peer()
+        self._resident = comm._resident
+        # parity-salted tag windows: both iterations' receives are
+        # posted concurrently, so their tags must differ
+        self._bases = (comm._alloc_coll_tags(persistent=True),
+                       comm._alloc_coll_tags(persistent=True))
+        # dedicated double-buffered slot sets (never shared with the
+        # round pool: they must stay stable across iterations)
+        self._sets: list[dict] = []
+        for _ in range(2):
+            if self._resident:
+                self._sets.append({
+                    i: comm.alloc_buffer(sz)
+                    for i, sz in self._sched.slot_sizes.items()})
+            else:
+                self._sets.append({
+                    i: np.zeros(sz, np.uint8)
+                    for i, sz in self._sched.slot_sizes.items()})
+        # iteration 0's receives, posted before the init barrier: every
+        # rank's entries exist before any rank can start()
+        self._next_recvs = self._post_recvs(0)
+        comm.barrier()
+
+    def _post_recvs(self, it: int) -> dict[int, Request]:
+        """Post every RecvOp of iteration ``it`` (parity buffers,
+        parity tags). Pool-resident destinations publish matchbox
+        entries immediately."""
+        p = it % 2
+        base = self._bases[p]
+        slots = self._sets[p]
+        reqs: dict[int, Request] = {}
+        for nd in self._sched.recv_nodes():
+            if self._resident:
+                dst = slots[nd.buf.slot].slice(nd.buf.off, nd.buf.nbytes)
+            else:
+                dst = slots[nd.buf.slot][nd.buf.off:
+                                         nd.buf.off + nd.buf.nbytes]
+            reqs[nd.idx] = self._comm.irecv_into(nd.peer, dst,
+                                                 tag=base + nd.round,
+                                                 _internal=True)
+        return reqs
+
+    @property
+    def active(self) -> bool:
+        """In flight: started, not finished, and not failed — an
+        errored iteration leaves the request inactive so it can be
+        restarted or freed (the failed exec already cancelled its
+        receives)."""
+        return (self._active is not None and not self._active.done
+                and self._active.error is None)
+
+    def start(self) -> "PersistentCollRequest":
+        if self.active:
+            raise RuntimeError("persistent collective already active; "
+                               "wait() before restarting")
+        comm = self._comm
+        if self._sched is None:          # size-1 communicator
+            self._active = _coll.immediate(comm, self._arr.copy())
+            self.started += 1
+            return self
+        k = self._iter
+        self._iter += 1
+        p = k % 2
+        # THE HANDSHAKE: iteration k+1's receives go up before any
+        # iteration-k send is issued (the exec below is what issues
+        # sends), so peers that finish k and race into k+1 always find
+        # posted entries
+        cur = self._next_recvs
+        self._next_recvs = self._post_recvs(k + 1)
+        slots = self._sets[p]
+        bufs = (_ResidentBufs(slots) if self._resident
+                else _HeapBufs.from_slots(slots))
+        bufs.fill(0, self._arr, pad_to=self._sched.slot_sizes[0])
+        shape, dtype = self._arr.shape, self._arr.dtype
+        count = self._arr.size
+        res = self._sched.result
+
+        def fin(b):
+            flat = b.ndview(res, dtype)[:count]
+            return np.array(flat).reshape(shape)
+
+        ex = _SchedExec(comm, self._sched, bufs, self._bases[p],
+                        dtype=dtype, op=self.op, finalize=fin,
+                        bound_recvs=cur)
+        comm._engine.add_coll(ex)
+        self._active = CollRequest(comm, ex)
+        self.started += 1
+        return self
+
+    def test(self) -> bool:
+        if self._active is None:
+            raise RuntimeError("persistent collective not started")
+        return self._active.test()
+
+    def wait(self, timeout=_DEFAULT_TIMEOUT) -> np.ndarray:
+        """Default timeout matches CollRequest: 30 s per schedule
+        round; pass ``None`` to wait forever."""
+        if self._active is None:
+            raise RuntimeError("persistent collective not started")
+        return self._active.wait(timeout)
+
+    def free(self) -> None:
+        """Cancel the pre-posted next-iteration receives (retracting
+        their matchbox entries) and release the dedicated buffers.
+        Local — but every rank should free before the communicator
+        dies."""
+        if self.active:
+            raise RuntimeError("cannot free an active persistent "
+                               "collective")
+        if self._sched is None:
+            return
+        for req in self._next_recvs.values():
+            req.cancel()
+        self._next_recvs = {}
+        if self._resident:
+            for slots in self._sets:
+                for pb in slots.values():
+                    try:
+                        pb.free()
+                    except FileNotFoundError:
+                        pass
+        self._sets = []
 
 
 class Comm(Communicator):
@@ -253,12 +475,13 @@ class Comm(Communicator):
                  cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
                  eager_threshold: int | str | None = None,
                  mb_slots: int = DEFAULT_MB_SLOTS,
+                 matchbox_slots: int | None = None,
                  name: str = "world", open_timeout: float = 30.0):
         auto = eager_threshold == "auto"
         super().__init__(arena, rank, size, cell_size=cell_size,
                          n_cells=n_cells,
                          eager_threshold=None if auto else eager_threshold,
-                         mb_slots=mb_slots,
+                         mb_slots=mb_slots, matchbox_slots=matchbox_slots,
                          name=name, open_timeout=open_timeout)
         self._derived_seq = 0
         self._hier_cache: dict[int, tuple["Comm", "Comm"]] = {}
@@ -267,19 +490,92 @@ class Comm(Communicator):
         # sub-rank -> parent-comm rank (identity for a root communicator)
         self.parent_ranks: tuple[int, ...] = tuple(range(size))
         self.probed_crossover: Optional[int] = None
+        self.probe_mode: Optional[str] = None
         if auto:
             self.eager_threshold = self._probe_eager_threshold()
 
+    def _lease_round_bufs(self, slot_sizes: dict[int, int]):
+        """Schedule-execution hook (core/collectives launch layer):
+        borrow a pool-resident slot set from the round pool."""
+        return self._rounds.lease(slot_sizes)
+
     # ------------------------------------------------------------------
-    # auto-tuned eager threshold (one-shot micro-probe)
+    # auto-tuned eager threshold (one-shot init-time micro-probe)
     # ------------------------------------------------------------------
     def _probe_eager_threshold(self, reps: int = 3) -> int:
-        """Measure the eager (per-cell chunk copies) vs rendezvous
-        (arena create + one stage + one bulk read + destroy) cost locally
-        and return the crossover: the largest probed size at which eager
-        still wins. Per-rank and one-shot; thresholds may legitimately
-        differ across ranks (the protocol is self-describing per
-        message, so asymmetric thresholds are safe)."""
+        """Measure the eager/rendezvous crossover and return the largest
+        probed size at which eager still wins.
+
+        With a real peer up (size >= 2), adjacent rank pairs (2i, 2i+1)
+        ping-pong each probe size over the ACTUAL wire paths — the eager
+        cell walk against the posted-rendezvous matchbox path — so the
+        crossover reflects end-to-end cost (descriptor round trip, entry
+        scan, claim) rather than the local staging model. The odd rank
+        of an odd-sized communicator, and size-1 communicators, fall
+        back to the local model. Per-rank and one-shot; thresholds may
+        legitimately differ across ranks (the protocol is
+        self-describing per message, so asymmetric thresholds are
+        safe)."""
+        if self.size >= 2 and self.rank < self.size - (self.size % 2):
+            self.probe_mode = "peer"
+            return self._probe_threshold_peer(reps)
+        self.probe_mode = "local"
+        return self._probe_threshold_local(reps)
+
+    def _probe_threshold_peer(self, reps: int) -> int:
+        """Real-peer probe: for each size, time an eager exchange and a
+        posted-rendezvous exchange with the pair partner. The receive is
+        posted (pool-resident destination, matchbox entry) BEFORE the
+        zero-byte credit that releases the partner's send, so the
+        rendezvous leg deterministically measures the posted path when
+        the matchbox is enabled."""
+        peer = self.rank ^ 1
+        cell = self.cell_size
+        sizes = [max(64, cell // 4), cell, 2 * cell, 4 * cell, 8 * cell]
+        saved = self.eager_threshold
+        scratch = memoryview(bytearray(sizes[-1]))
+        dst = self.alloc_buffer(sizes[-1]) if self._pool_aliasable() \
+            else bytearray(sizes[-1])
+        _PRB = _T + 0x4000           # reserved probe tag window
+
+        def exchange(s: int) -> None:
+            rreq = self.irecv_into(peer, dst, tag=_PRB + 1,
+                                   _internal=True)
+            self.send(peer, b"", tag=_PRB + 2, _internal=True)  # credit
+            self.recv(peer, tag=_PRB + 2, _internal=True)
+            sreq = self.isend(peer, scratch[:s], tag=_PRB + 1,
+                              _internal=True)
+            rreq.wait()
+            sreq.wait()
+
+        def timed(s: int, threshold: int) -> float:
+            self.eager_threshold = threshold
+            exchange(s)                                  # warm / sync
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                exchange(s)
+            return (time.perf_counter() - t0) / reps
+
+        try:
+            # probe EVERY size on both ranks (a rank must not stop early
+            # — its partner would hang mid-sweep), then decide locally
+            timings = [(timed(s, 1 << 40), timed(s, 0)) for s in sizes]
+        finally:
+            self.eager_threshold = saved
+            if isinstance(dst, PoolBuffer):
+                dst.free()
+        threshold = sizes[-1]            # eager everywhere probed
+        for i, (te, tr) in enumerate(timings):
+            if tr <= te:
+                self.probed_crossover = sizes[i]
+                threshold = sizes[i - 1] if i else max(64, sizes[i] // 2)
+                break
+        return threshold
+
+    def _probe_threshold_local(self, reps: int = 3) -> int:
+        """Local staging model: eager (per-cell chunk copies) vs
+        rendezvous (arena create + one stage + one bulk read + destroy)
+        against this rank's own pool view."""
         v = self.arena.view
         cell = self.cell_size
         sizes = [max(64, cell // 4), cell, 2 * cell, 4 * cell, 8 * cell]
@@ -390,6 +686,17 @@ class Comm(Communicator):
                   ) -> PersistentRequest:
         return PersistentRequest(self, "recv", src, buf, tag)
 
+    def allreduce_init(self, arr: np.ndarray, op=np.add,
+                       algo: str = "auto") -> PersistentCollRequest:
+        """MPI_Allreduce_init: a persistent allreduce over dedicated
+        double-buffered round buffers whose receives are pre-posted one
+        iteration ahead (deterministic posted-rendezvous hits — see
+        ``PersistentCollRequest``). Collective: every rank must call it,
+        in the same order relative to other collectives. For guaranteed
+        100% hits size the communicator's matchbox to the schedule:
+        ``Comm(matchbox_slots=req.matchbox_demand)``."""
+        return PersistentCollRequest(self, arr, op, algo)
+
     # ------------------------------------------------------------------
     # pool-resident collective machinery
     # ------------------------------------------------------------------
@@ -415,159 +722,79 @@ class Comm(Communicator):
             and nbytes > self.eager_threshold
 
     # ------------------------------------------------------------------
-    # method collectives
+    # method collectives: blocking = i*(...).wait() over the SAME
+    # compiled schedules (core/sched.py) the non-blocking forms use;
+    # the hand-rolled per-round loops of PR 2/3 are gone
     # ------------------------------------------------------------------
     def barrier(self) -> None:          # inherited seq-number barrier;
         super().barrier()               # restated here as part of the API
 
+    def ibarrier(self) -> CollRequest:
+        """Non-blocking dissemination barrier (zero-byte message
+        rounds through the schedule engine — the seq-number barrier
+        cannot be tested incrementally)."""
+        return _coll.icoll_barrier(self)
+
     def bcast(self, arr: np.ndarray | None, root: int = 0) -> np.ndarray:
-        """Binomial-tree broadcast; non-root ranks pass ``arr=None``.
-        Large payloads land once in a resident round buffer and are
-        forwarded to every child with zero sender-side copies."""
-        n, r = self.size, self.rank
-        if n == 1:
-            return np.asarray(arr).copy()
-        vr = (r - root) % n
-        # each rank picks its own forwarding path (the wire protocol is
-        # self-describing per message): resident ranks land the payload
-        # in a round buffer once and forward it as zero-copy PoolViews
-        if vr == 0:
-            a = np.ascontiguousarray(arr)
-            resident = self._use_resident(a.nbytes)
-            if resident:
-                pb, buf = self._rounds.array(0, (a.nbytes,), np.uint8)
-                np.copyto(buf, a.reshape(-1).view(np.uint8))
-            # ';' separator: dtype.str itself may contain '|' (e.g. "|u1")
-            meta = (f"{a.dtype.str};"
-                    f"{','.join(map(str, a.shape))}").encode()
-            out = a
-        else:
-            k = 1
-            while k * 2 <= vr:
-                k *= 2
-            parent = (vr - k + root) % n
-            meta, _ = self.recv(parent, tag=_T + 16)
-            dts, shs = meta.decode().split(";")
-            dtype = np.dtype(dts)
-            shape = tuple(int(x) for x in shs.split(",") if x)
-            nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
-            # a leaf (no children to forward to) gains nothing from
-            # landing in a round buffer — it would just pay an extra
-            # pool->user copy; receive straight into user memory instead
-            kk = 1
-            while kk <= vr:
-                kk *= 2
-            has_child = vr + kk < n
-            resident = has_child and self._use_resident(nbytes)
-            if resident:
-                pb, buf = self._rounds.array(0, (nbytes,), np.uint8)
-                self.recv_into(parent, pb.slice(0, nbytes), tag=_T + 17)
-                out = buf.view(dtype).reshape(shape)
-            else:
-                out = np.empty(shape, dtype)
-                self.recv_into(parent, out, tag=_T + 17)
-        payload = pb.slice(0, out.nbytes) if resident else out
-        k = 1
-        while k < n:
-            if vr < k and vr + k < n:
-                child = (vr + k + root) % n
-                self.send(child, meta, tag=_T + 16)
-                self.send(child, payload, tag=_T + 17)
-            k *= 2
-        return np.array(out) if (resident or vr == 0) else out
+        """Binomial-tree broadcast; non-root ranks pass ``arr=None``
+        (shape/dtype travel in a fixed-size metadata round). Large
+        payloads land once in a resident round buffer and are forwarded
+        to every child with zero sender-side copies."""
+        return _coll._bcast_impl(self, arr, root,
+                                 use_resident=self._use_resident)
+
+    def ibcast(self, arr: np.ndarray, root: int = 0) -> CollRequest:
+        """Non-blocking broadcast; ``arr`` must be a C-contiguous
+        ndarray present with the SAME shape/dtype on every rank (MPI
+        ibcast semantics) and is overwritten in place on non-roots
+        (non-contiguous buffers are rejected — a silent copy would
+        break the in-place contract). ``wait()`` returns ``arr``."""
+        return _coll.icoll_bcast_known(
+            self, arr, root,
+            resident=self._use_resident(np.asarray(arr).nbytes))
 
     def reduce(self, arr: np.ndarray, op=np.add, root: int = 0
                ) -> np.ndarray | None:
         arr = np.ascontiguousarray(arr)
-        if self.size == 1:
-            return arr.copy()
-        if not self._use_resident(arr.nbytes):
-            return _coll.reduce(self, arr, op, root)
-        n, r = self.size, self.rank
-        vr = (r - root) % n
-        pb, acc = self._rounds.array(0, arr.shape, arr.dtype)
-        np.copyto(acc, arr)
-        pb_t, tmp = self._rounds.array(1, arr.shape, arr.dtype)
-        k = 1
-        while k < n:
-            if vr % (2 * k) == 0:
-                if vr + k < n:
-                    # pool-resident destination: posted rendezvous lets
-                    # the child write its partial straight into tmp
-                    self.recv_into((vr + k + root) % n,
-                                   pb_t.slice(0, arr.nbytes), tag=_T + 32)
-                    acc[...] = op(acc, tmp)
-            elif vr % (2 * k) == k:
-                self.send((vr - k + root) % n, pb.slice(0, arr.nbytes),
-                          tag=_T + 32)
-                return None
-            k *= 2
-        return np.array(acc) if r == root else None
+        return _coll.icoll_reduce(
+            self, arr, op, root,
+            resident=self._use_resident(arr.nbytes)).wait()
 
     def allreduce(self, arr: np.ndarray, op=np.add, algo: str = "auto",
                   group_size: int | None = None) -> np.ndarray:
         """allreduce with automatic algorithm selection:
         recursive doubling (small, pow2 sizes), hierarchical (large
         payloads on composite sizes — intra-group ring + inter-group
-        recursive doubling over split() sub-communicators), ring
+        recursive doubling over split() sub-communicators), fused ring
         reduce-scatter + allgather otherwise."""
         arr = np.ascontiguousarray(arr)
         n = self.size
         if n == 1:
             return arr.copy()
         if algo == "auto":
-            if _is_pow2(n) and arr.size < 4096:
-                algo = "rd"
-            elif n >= 4 and _best_group(n) >= 2 and arr.size >= 4096:
+            if n >= 4 and _best_group(n) >= 2 and arr.size >= 4096:
                 algo = "hier"
             else:
-                algo = "ring"
+                algo = _coll.auto_allreduce_algo(n, arr.size)
         if algo == "hier":
             return self._allreduce_hier(arr, op, group_size)
-        if algo == "rd":
-            return self._allreduce_rd(arr, op)
-        return self._allreduce_ring(arr, op)
+        return self.iallreduce(arr, op, algo).wait()
 
-    def _allreduce_rd(self, arr: np.ndarray, op=np.add) -> np.ndarray:
-        n, r = self.size, self.rank
-        assert _is_pow2(n), "recursive doubling needs power-of-two size"
-        if not self._use_resident(arr.nbytes):
-            return _coll.allreduce_rd(self, arr, op)
-        pb, acc = self._rounds.array(0, arr.shape, arr.dtype)
-        np.copyto(acc, arr)
-        pb_o, other = self._rounds.array(1, arr.shape, arr.dtype)
-        k = 1
-        rnd = 0
-        while k < n:
-            peer = r ^ k
-            # pre-post the incoming block, THEN send: the peer's payload
-            # can land in ``other`` with one copy and no drain
-            rreq = self.irecv_into(peer, pb_o.slice(0, arr.nbytes),
-                                   tag=_T + 64 + rnd)
-            sreq = self.isend(peer, pb.slice(0, arr.nbytes),
-                              tag=_T + 64 + rnd)
-            rreq.wait()
-            sreq.wait()                 # ack: peer drained our buffer
-            acc[...] = op(acc, other)
-            k <<= 1
-            rnd += 1
-        return np.array(acc)
-
-    def _allreduce_ring(self, arr: np.ndarray, op=np.add) -> np.ndarray:
-        """Ring allreduce composed from reduce_scatter + allgather (the
-        same decomposition as the free-function path, chunk reorder
-        included). Each stage independently picks its resident or
-        fallback form — the two are wire-compatible (same tags, round
-        indices and sizes), so ranks whose eager thresholds or pool
-        capabilities differ still interoperate. On the resident path
-        every round ships a PoolView chunk (no staging) and pays one
-        pool->pool copy — ~2(n-1)/n of the payload per rank, half the
-        staged free-function cost."""
-        shard = self.reduce_scatter(arr, op)
-        flat = shards_to_chunk_order(self.allgather(shard, algo="ring"),
-                                     self.size)
-        return flat[:arr.size].reshape(arr.shape).astype(arr.dtype,
-                                                         copy=False)
+    def iallreduce(self, arr: np.ndarray, op=np.add,
+                   algo: str = "auto") -> CollRequest:
+        """Non-blocking allreduce: returns a ``CollRequest`` whose
+        ``wait()`` yields the reduced array. Inject compute between
+        start and wait — sprinkle ``comm.progress()`` ticks through it
+        — and the schedule engine overlaps the round exchanges with it
+        (``benchmarks/fig5_8_osu.py`` measures the overlap
+        efficiency). ``algo``: rd | ring | auto (hierarchical stays
+        blocking-only: it composes sub-communicator phases)."""
+        arr = np.ascontiguousarray(arr)
+        if algo == "auto":
+            algo = _coll.auto_allreduce_algo(self.size, arr.size)
+        return _coll.icoll_allreduce(
+            self, arr, op, algo,
+            resident=self._use_resident(arr.nbytes))
 
     def _hier_comms(self, g: int) -> tuple["Comm", "Comm"]:
         cached = self._hier_cache.get(g)
@@ -588,7 +815,7 @@ class Comm(Communicator):
         n = self.size
         g = group_size if group_size is not None else _best_group(n)
         if g < 2 or n % g != 0:
-            return self._allreduce_ring(arr, op)
+            return self.iallreduce(arr, op, algo="ring").wait()
         intra, inter = self._hier_comms(g)
         shard = intra.reduce_scatter(arr, op)
         shard = inter.allreduce(
@@ -600,89 +827,31 @@ class Comm(Communicator):
     def reduce_scatter(self, arr: np.ndarray, op=np.add) -> np.ndarray:
         """Ring reduce-scatter; returns this rank's reduced shard (chunk
         ``(rank+1) % size`` of the zero-padded flat payload)."""
+        return self.ireduce_scatter(arr, op).wait()
+
+    def ireduce_scatter(self, arr: np.ndarray, op=np.add) -> CollRequest:
+        """Non-blocking ring reduce-scatter."""
         arr = np.ascontiguousarray(arr)
-        n, r = self.size, self.rank
-        if n == 1:
-            return arr.reshape(-1).copy()
-        if not self._use_resident(arr.nbytes):
-            return _coll.reduce_scatter_ring(self, arr, op)
-        flat = arr.reshape(-1)
-        per = -(-flat.size // n)
-        pb, work = self._rounds.array(0, (n, per), arr.dtype)
-        wf = work.reshape(-1)
-        wf[:flat.size] = flat
-        if per * n > flat.size:
-            wf[flat.size:] = 0
-        pb_i, inc = self._rounds.array(1, (per,), arr.dtype)
-        right, left = (r + 1) % n, (r - 1) % n
-        cb = per * arr.dtype.itemsize
-        for step in range(n - 1):
-            send_idx = (r - step) % n
-            recv_idx = (r - step - 1) % n
-            rreq = self.irecv_into(left, pb_i.slice(0, cb),
-                                   tag=_T + 128 + step)
-            sreq = self.isend(right, pb.slice(send_idx * cb, cb),
-                              tag=_T + 128 + step)
-            rreq.wait()
-            sreq.wait()
-            work[recv_idx] = op(work[recv_idx], inc)
-        return np.array(work[(r + 1) % n])
+        return _coll.icoll_reduce_scatter(
+            self, arr, op, resident=self._use_resident(arr.nbytes))
 
     def allgather(self, shard: np.ndarray, algo: str = "auto"
                   ) -> np.ndarray:
         """All-gather; returns the flat concatenation in rank order.
         ``algo``: ring | bruck | auto (ring for few ranks, Bruck's
         ceil(log2 n) rounds beyond that)."""
+        return self.iallgather(shard, algo).wait()
+
+    def iallgather(self, shard: np.ndarray, algo: str = "auto"
+                   ) -> CollRequest:
+        """Non-blocking all-gather; ``wait()`` returns the flat
+        rank-ordered concatenation."""
         shard = np.ascontiguousarray(shard)
-        n, r = self.size, self.rank
-        if n == 1:
-            return shard.reshape(-1).copy()
         if algo == "auto":
-            algo = "bruck" if n >= 8 else "ring"
-        if not self._use_resident(shard.nbytes * n):
-            f = (_coll.allgather_bruck if algo == "bruck"
-                 else _coll.allgather_ring)
-            return f(self, shard).reshape(-1)
-        per = shard.size
-        sb = shard.nbytes
-        pb, work = self._rounds.array(0, (n, per), shard.dtype)
-        if algo == "bruck":
-            # blocks accumulate CONTIGUOUSLY in bruck order, so each
-            # round ships one PoolView over blocks[:count] — the
-            # packing concat of the non-resident path disappears
-            work[0] = shard.reshape(-1)
-            k = 1
-            have = 1
-            rnd = 0
-            while k < n:
-                count = min(k, n - k)
-                rreq = self.irecv_into((r + k) % n,
-                                       pb.slice(have * sb, count * sb),
-                                       tag=_T + 512 + rnd)
-                sreq = self.isend((r - k) % n, pb.slice(0, count * sb),
-                                  tag=_T + 512 + rnd)
-                rreq.wait()
-                sreq.wait()
-                have += count
-                k <<= 1
-                rnd += 1
-            # work[i] holds rank (r+i) % n's shard — rotate to rank order
-            out = np.empty((n, per), shard.dtype)
-            for i in range(n):
-                out[(r + i) % n] = work[i]
-            return out.reshape(-1)
-        work[r] = shard.reshape(-1)
-        right, left = (r + 1) % n, (r - 1) % n
-        for step in range(n - 1):
-            send_idx = (r - step) % n
-            recv_idx = (r - step - 1) % n
-            rreq = self.irecv_into(left, pb.slice(recv_idx * sb, sb),
-                                   tag=_T + 256 + step)
-            sreq = self.isend(right, pb.slice(send_idx * sb, sb),
-                              tag=_T + 256 + step)
-            rreq.wait()
-            sreq.wait()
-        return np.array(work).reshape(-1)
+            algo = "bruck" if self.size >= 8 else "ring"
+        return _coll.icoll_allgather(
+            self, shard, algo,
+            resident=self._use_resident(shard.nbytes * self.size))
 
     def alltoall(self, blocks: list[np.ndarray]) -> list[np.ndarray]:
         """Pairwise exchange; ``blocks[i]`` goes to rank i. Resident
@@ -706,10 +875,11 @@ class Comm(Communicator):
                                           blocks[dst].dtype)
             np.copyto(lane, blocks[dst])
             reqs.append(self.isend(dst, pb.slice(0, blocks[dst].nbytes),
-                                   tag=_T + 1024 + off))
+                                   tag=_T + 1024 + off, _internal=True))
         for off in range(1, n):
             src = (r - off) % n
             out[src] = np.empty(blocks[src].shape, blocks[src].dtype)
-            self.recv_into(src, out[src], tag=_T + 1024 + off)
+            self.recv_into(src, out[src], tag=_T + 1024 + off,
+                           _internal=True)
         self.waitall(reqs)
         return out

@@ -1,0 +1,508 @@
+"""The shared progress core: one cooperative engine per communicator.
+
+Every outstanding non-blocking operation — pt2pt sends, posted receives,
+rendezvous stager reclaim AND collective schedule executions — is owned
+by this engine, and every ``test()`` / ``wait()`` / explicit
+``comm.progress()`` turns it. That single rule is what makes the system
+composable: a rank blocked in ``recv()`` still advances its neighbour's
+``iallreduce``; compute injected between ``iallreduce`` start and
+``wait`` needs only an occasional ``comm.progress()`` tick to keep
+payloads moving (the overlap column in ``benchmarks/fig5_8_osu.py``).
+
+Layout:
+
+* ``ProgressEngine`` — the per-destination send FIFOs, per-source posted
+  receive FIFOs and stager reclaim previously embedded in
+  ``Communicator._progress``, plus the list of active schedule
+  executions. ``tick()`` is reentrancy-guarded: nodes issued mid-tick
+  (a schedule issuing ``isend``) are picked up on the next turn.
+* ``_SchedExec`` — one execution of a compiled ``repro.core.sched``
+  Schedule: dependency counts, ready queue, in-flight request map.
+  Request completion CALLBACKS (``Request._on_done``) retire nodes and
+  release their dependents; ``advance()`` issues whatever became ready.
+  Receives are issued before sends at every step so pool-resident
+  destinations publish their matchbox entries as early as possible.
+* ``CollRequest`` — the user-facing handle ``comm.iallreduce`` & friends
+  return: ``test()/wait()`` with MPI semantics, ``wait()`` yielding the
+  collective's result.
+* ``_HeapBufs`` / ``_ResidentBufs`` — the two buffer backends a
+  schedule can bind to. Wire format is identical (same tags, sizes,
+  rounds), so ranks may disagree on backend choice per collective and
+  still interoperate — the same contract the hand-rolled loops kept.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.sched import (BufRef, CopyOp, RecvOp, ReduceOp, Schedule,
+                              SendOp)
+
+__all__ = ["ProgressEngine", "CollRequest", "waitall", "waitany",
+           "testall"]
+
+
+class ProgressEngine:
+    """Cooperative progress for one communicator (no threads: progress
+    happens inside the caller's test/wait/progress calls, the explicit
+    MPI_Test/MPI_Wait model the paper keeps — §3.4)."""
+
+    def __init__(self, comm):
+        self.comm = comm
+        # one FIFO per destination: a message's chunks must occupy the
+        # pair queue CONTIGUOUSLY, so only the head request of each
+        # destination is ever pumped
+        self.send_fifo: dict[int, deque] = {}
+        # posted receives, one FIFO per source (the MPI posted-receive
+        # queue): the head drains the pair queue; non-heads may still
+        # complete from parked messages or in-place posted deliveries
+        self.recv_fifo: dict[int, deque] = {}
+        # rendezvous stagers awaiting the receiver's ack
+        self.stagers: list = []
+        # active collective schedule executions
+        self.colls: list[_SchedExec] = []
+        self._in_tick = False
+
+    # ------------------------------------------------------------------
+    def tick(self) -> None:
+        """One cooperative sweep: advance the head send of every
+        destination, pump every posted receive, reclaim acked stagers,
+        then advance every active collective execution. Reentrant calls
+        (a schedule node issuing isend mid-tick) are no-ops."""
+        if self._in_tick:
+            return
+        self._in_tick = True
+        try:
+            self._tick_sends()
+            self._tick_recvs()
+            if self.stagers:
+                self._reclaim_stagers()
+            if self.colls:
+                for ex in list(self.colls):
+                    ex.advance()
+                    if ex.finished:
+                        try:
+                            self.colls.remove(ex)
+                        except ValueError:
+                            pass
+        finally:
+            self._in_tick = False
+
+    def _tick_sends(self) -> None:
+        for fifo in list(self.send_fifo.values()):
+            while fifo:
+                head = fifo[0]
+                try:
+                    next(head._gen)
+                    break                    # blocked on queue space
+                except StopIteration:
+                    head._finish()
+                    fifo.popleft()           # next message may start
+                except BaseException as e:
+                    # a failed send (e.g. ArenaFullError while staging)
+                    # must not be reported done: record it on the
+                    # request, unblock the FIFO, surface it to the
+                    # caller that pumped progress
+                    head._error = e
+                    fifo.popleft()
+                    raise
+
+    def _tick_recvs(self) -> None:
+        for fifo in list(self.recv_fifo.values()):
+            # pump EVERY posted receive once: generators self-restrict
+            # so only the effective head drains the pair queue, while
+            # later receives may still complete from parked messages
+            # (MPI: receives of different tags complete independently)
+            for req in list(fifo):
+                if req.done or req._error is not None:
+                    continue
+                try:
+                    next(req._gen)
+                except StopIteration:
+                    req._finish()            # matched passively
+                except BaseException as e:
+                    # a failed receive (e.g. truncation) is recorded on
+                    # its own request — never surfaced to the innocent
+                    # caller that happened to pump progress
+                    req._error = e
+            while fifo and (fifo[0].done or fifo[0]._error is not None):
+                fifo.popleft()
+
+    def _reclaim_stagers(self) -> None:
+        v = self.comm.arena.view
+        still = []
+        for h in self.stagers:
+            if v.nt_load_u8(h.offset):       # receiver ack'd the drain
+                self.comm.arena.destroy(h)
+            else:
+                still.append(h)
+        self.stagers[:] = still
+
+    def add_coll(self, ex: "_SchedExec") -> None:
+        self.colls.append(ex)
+        ex.advance()                 # pre-post receives before returning
+
+
+# --------------------------------------------------------------------------
+# buffer backends
+# --------------------------------------------------------------------------
+
+class _HeapBufs:
+    """Plain process-heap slots: sends are buffer-protocol views (eager
+    or staged rendezvous on the wire), receives land via ``recv_into``.
+    ``bind`` may alias a slot to a caller-owned array (ibcast receives
+    straight into the user buffer — no round-buffer detour)."""
+
+    resident = False
+
+    def __init__(self, slot_sizes: dict[int, int]):
+        self._slots: dict[int, np.ndarray] = {
+            i: np.zeros(sz, np.uint8) for i, sz in slot_sizes.items()}
+        self._owned = True               # release() may drop the slots
+
+    @classmethod
+    def from_slots(cls, slots: dict[int, np.ndarray]) -> "_HeapBufs":
+        """Wrap CALLER-OWNED slot arrays without copying (persistent
+        collectives keep their double-buffered sets across starts) —
+        release() must leave them intact for the next iteration."""
+        self = cls({})
+        self._slots = slots
+        self._owned = False
+        return self
+
+    def alias(self, slot: int, arr: np.ndarray) -> None:
+        u8 = arr.reshape(-1).view(np.uint8)
+        self._slots[slot] = u8
+
+    def fill(self, slot: int, data: np.ndarray, pad_to: int = 0) -> None:
+        u8 = data.reshape(-1).view(np.uint8)
+        dst = self._slots[slot]
+        dst[:u8.size] = u8
+        if pad_to > u8.size:
+            dst[u8.size:pad_to] = 0
+
+    def fill_at(self, slot: int, off: int, data: np.ndarray) -> None:
+        u8 = data.reshape(-1).view(np.uint8)
+        self._slots[slot][off:off + u8.size] = u8
+
+    def release(self) -> None:
+        if self._owned:
+            self._slots = {}
+
+    def send_payload(self, ref: BufRef):
+        return self._slots[ref.slot][ref.off:ref.off + ref.nbytes]
+
+    def recv_dest(self, ref: BufRef):
+        return self._slots[ref.slot][ref.off:ref.off + ref.nbytes]
+
+    def ndview(self, ref: BufRef, dtype) -> np.ndarray:
+        return self._slots[ref.slot][ref.off:ref.off + ref.nbytes] \
+            .view(dtype)
+
+
+class _ResidentBufs:
+    """Pool-resident slots (PoolBuffers): sends are zero-copy PoolView
+    slices, receives publish matchbox entries (posted rendezvous — the
+    one-copy path). Buffers are leased from the communicator's round
+    pool and returned at release, or owned outright (persistent
+    collectives pass their own long-lived set)."""
+
+    resident = True
+
+    def __init__(self, bufs: dict[int, Any],
+                 release_cb: Optional[Callable] = None):
+        self._bufs = bufs
+        self._release_cb = release_cb
+
+    def fill(self, slot: int, data: np.ndarray, pad_to: int = 0) -> None:
+        u8 = data.reshape(-1).view(np.uint8)
+        mv = self._bufs[slot].view()
+        mv[:u8.size] = u8
+        if pad_to > u8.size:
+            mv[u8.size:pad_to] = b"\0" * (pad_to - u8.size)
+
+    def fill_at(self, slot: int, off: int, data: np.ndarray) -> None:
+        u8 = data.reshape(-1).view(np.uint8)
+        self._bufs[slot].view()[off:off + u8.size] = u8
+
+    def send_payload(self, ref: BufRef):
+        return self._bufs[ref.slot].slice(ref.off, ref.nbytes)
+
+    def recv_dest(self, ref: BufRef):
+        return self._bufs[ref.slot].slice(ref.off, ref.nbytes)
+
+    def ndview(self, ref: BufRef, dtype) -> np.ndarray:
+        pb = self._bufs[ref.slot]
+        return np.frombuffer(pb.view()[ref.off:ref.off + ref.nbytes],
+                             dtype=dtype)
+
+    def release(self) -> None:
+        if self._release_cb is not None:
+            self._release_cb()
+            self._release_cb = None
+
+
+# --------------------------------------------------------------------------
+# schedule execution
+# --------------------------------------------------------------------------
+
+class _SchedExec:
+    """One run of a compiled Schedule over a bound buffer backend.
+
+    ``bound_recvs`` (persistent mode) maps recv node idx -> an ALREADY
+    POSTED Request from the round-synchronized pre-post handshake; those
+    nodes skip issue entirely and complete when their request does.
+    ``finalize`` runs once after the last node retires and produces
+    ``result``.
+    """
+
+    def __init__(self, comm, sched: Schedule, bufs, tag_base: int,
+                 dtype=None, op=None,
+                 finalize: Optional[Callable] = None,
+                 bound_recvs: Optional[dict[int, Any]] = None):
+        self.comm = comm
+        self.sched = sched
+        self.bufs = bufs
+        self.tag_base = tag_base
+        self.dtype = dtype
+        self.op = op
+        self._finalize = finalize
+        self.finished = False
+        self.result = None
+        self.error: Optional[BaseException] = None
+        nodes = sched.nodes
+        self._n_left = len(nodes)
+        self._pending = [len(nd.deps) for nd in nodes]
+        self._dependents: list[list[int]] = [[] for _ in nodes]
+        for nd in nodes:
+            for d in nd.deps:
+                self._dependents[d].append(nd.idx)
+        self._ready: deque[int] = deque()
+        # receives first: pool-resident destinations publish their
+        # matchbox entries before any send of ours (or, symmetrically,
+        # our peer's) goes looking for them
+        for nd in nodes:
+            if self._pending[nd.idx] == 0 and isinstance(nd, RecvOp):
+                self._ready.append(nd.idx)
+        for nd in nodes:
+            if self._pending[nd.idx] == 0 and not isinstance(nd, RecvOp):
+                self._ready.append(nd.idx)
+        self._inflight: dict[int, Any] = {}
+        self._bound = bound_recvs or {}
+        for idx, req in self._bound.items():
+            self._watch(idx, req)
+        if not nodes:
+            self._complete()
+
+    # ------------------------------------------------------------------
+    def _watch(self, idx: int, req) -> None:
+        self._inflight[idx] = req
+        if req.done:
+            self._node_done(idx)
+        else:
+            req._on_done = lambda _r, i=idx: self._node_done(i)
+
+    def _node_done(self, idx: int) -> None:
+        self._inflight.pop(idx, None)
+        self._n_left -= 1
+        for j in self._dependents[idx]:
+            self._pending[j] -= 1
+            if self._pending[j] == 0:
+                self._ready.append(j)
+        if self._n_left == 0:
+            self._complete()
+
+    def _complete(self) -> None:
+        self.finished = True
+        try:
+            if self._finalize is not None:
+                self.result = self._finalize(self.bufs)
+        finally:
+            self.bufs.release()
+
+    def _abort(self, err: BaseException) -> None:
+        """A node's request failed (e.g. truncation): cancel the
+        schedule's other in-flight receives — retracting their matchbox
+        postings and unlinking them from the posted-receive FIFOs, so
+        no stale entry points into these buffers and no dead head
+        receive parks later traffic. The buffer set is NOT returned to
+        the round pool: a straggler send of the failed collective may
+        still land in it, and recycling it would hand that write to an
+        unrelated collective."""
+        self.error = err
+        for req in list(self._inflight.values()):
+            if req.kind == "recv" and not req.done:
+                req._on_done = None
+                req.cancel()
+        self._inflight.clear()
+        try:
+            self.comm._engine.colls.remove(self)
+        except ValueError:
+            pass
+
+    def advance(self) -> None:
+        """Issue every ready node. Local nodes (reduce/copy) retire
+        immediately and may ready further nodes — the loop drains until
+        quiescent. In-flight requests are checked for recorded errors
+        so a truncated receive fails the collective, not a bystander."""
+        if self.finished or self.error is not None:
+            return
+        for req in list(self._inflight.values()):
+            if req._error is not None:
+                self._abort(req._error)
+                return
+        while self._ready:
+            idx = self._ready.popleft()
+            nd = self.sched.nodes[idx]
+            if idx in self._bound:
+                continue                     # pre-posted: completes via
+            if isinstance(nd, RecvOp):       # its request callback
+                req = self.comm.irecv_into(
+                    nd.peer, self.bufs.recv_dest(nd.buf),
+                    tag=self.tag_base + nd.round, _internal=True)
+                self._watch(idx, req)
+            elif isinstance(nd, SendOp):
+                req = self.comm.isend(nd.peer,
+                                      self.bufs.send_payload(nd.buf),
+                                      tag=self.tag_base + nd.round,
+                                      _internal=True)
+                self._watch(idx, req)
+            elif isinstance(nd, ReduceOp):
+                dst = self.bufs.ndview(nd.dst, self.dtype)
+                src = self.bufs.ndview(nd.src, self.dtype)
+                dst[...] = self.op(dst, src)
+                self._node_done(idx)
+            elif isinstance(nd, CopyOp):
+                dst = self.bufs.ndview(nd.dst, np.uint8)
+                src = self.bufs.ndview(nd.src, np.uint8)
+                dst[...] = src
+                self._node_done(idx)
+
+
+_DEFAULT_TIMEOUT = object()       # sentinel: scale with schedule depth
+
+
+class CollRequest:
+    """Handle for a non-blocking collective (``comm.iallreduce`` and
+    friends). ``test()`` pumps the shared progress engine; ``wait()``
+    blocks until completion and returns the collective's result (the
+    reduced array, the gathered flat array, ``None`` for ibarrier).
+    The default ``wait`` timeout scales with the schedule's round
+    count (30 s per round, the per-round budget the pre-engine
+    blocking loops had); pass ``timeout=None`` to wait forever."""
+
+    kind = "coll"
+
+    def __init__(self, comm, ex: _SchedExec):
+        self._comm = comm
+        self._ex = ex
+
+    @property
+    def done(self) -> bool:
+        return self._ex.finished
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._ex.error
+
+    @property
+    def result(self):
+        return self._ex.result
+
+    def test(self) -> bool:
+        if self._ex.error is not None:
+            raise self._ex.error
+        if self._ex.finished:
+            return True
+        self._comm._progress()
+        if self._ex.error is not None:
+            raise self._ex.error
+        return self._ex.finished
+
+    def wait(self, timeout=_DEFAULT_TIMEOUT):
+        if timeout is _DEFAULT_TIMEOUT:
+            timeout = 30.0 * max(1, self._ex.sched.rounds)
+        t0 = time.monotonic()
+        while not self.test():
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"collective {self._ex.sched.kind} timed out")
+            time.sleep(0)
+        return self._ex.result
+
+
+# --------------------------------------------------------------------------
+# fair multi-request completion helpers (pt2pt, persistent, collective)
+# --------------------------------------------------------------------------
+
+def _tick_engines(reqs: list) -> None:
+    """One tick per DISTINCT engine among the requests (mixed-comm
+    request lists are legal): the engine completes every request kind
+    in one sweep, so the per-request polls below never need to pump."""
+    seen: list = []
+    for r in reqs:
+        eng = getattr(getattr(r, "_comm", None), "_engine", None)
+        if eng is not None and all(eng is not e for e in seen):
+            seen.append(eng)
+            eng.tick()
+
+
+def _req_done(r) -> bool:
+    """Non-pumping completion poll (the engines were already ticked
+    this sweep). Raises the request's recorded error, if any. Falls
+    back to ``test()`` for request types without a ``done`` state
+    (persistent requests delegate their error surfacing to it too)."""
+    err = getattr(r, "error", None)
+    if err is None:
+        err = getattr(r, "_error", None)
+    if err is not None:
+        raise err
+    done = getattr(r, "done", None)
+    if done is None:
+        return r.test()
+    return bool(done)
+
+
+def waitall(reqs: list, timeout: float | None = 60.0) -> None:
+    """Complete every request, pumping the shared engine fairly: each
+    sweep ticks each involved engine ONCE, then checks every
+    still-pending request (mixed pt2pt / persistent / collective
+    requests welcome) — no request starves behind an earlier one and
+    no sweep re-pumps the engine per request."""
+    t0 = time.monotonic()
+    pending = list(reqs)
+    while pending:
+        _tick_engines(pending)
+        pending = [r for r in pending if not _req_done(r)]
+        if pending and timeout is not None \
+                and time.monotonic() - t0 > timeout:
+            raise TimeoutError(f"waitall: {len(pending)} pending")
+        if pending:
+            time.sleep(0)
+
+
+def waitany(reqs: list, timeout: float | None = 60.0) -> tuple[int, Any]:
+    """Block until ANY request completes; returns ``(index, request)``.
+    Sweeps the whole list each turn — no request starves behind an
+    earlier-listed laggard."""
+    if not reqs:
+        raise ValueError("waitany of an empty request list")
+    t0 = time.monotonic()
+    while True:
+        _tick_engines(reqs)
+        for i, r in enumerate(reqs):
+            if _req_done(r):
+                return i, r
+        if timeout is not None and time.monotonic() - t0 > timeout:
+            raise TimeoutError("waitany: no request completed")
+        time.sleep(0)
+
+
+def testall(reqs: list) -> bool:
+    """One fair sweep: each involved engine ticks once, then every
+    request is polled; True iff all have completed."""
+    _tick_engines(reqs)
+    return all([_req_done(r) for r in reqs])

@@ -77,12 +77,40 @@ import numpy as np
 from repro.core.arena import Arena, ObjHandle
 from repro.core.coherence import CoherentView
 from repro.core.pool import Registration, as_u8
+from repro.core.progress import ProgressEngine
+from repro.core.progress import testall as _testall
+from repro.core.progress import waitall as _waitall
+from repro.core.progress import waitany as _waitany
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, FLAG_FIRST, FLAG_LAST,
                                   FLAG_POSTED, FLAG_RNDV, QueueMatrix)
 from repro.core.rma import Window
 from repro.core.sync import SeqBarrier
 
 ANY_TAG = -1
+
+# tags at or above this value are RESERVED for internal traffic
+# (collective schedule rounds live at 0x7E??????, the legacy collective
+# tag space at 0x7F000000+). ANY_TAG receives — and ANY_TAG matchbox
+# wildcards — never match reserved tags, so in-flight user wildcard
+# receives cannot steal a collective round (MPI's separate communication
+# contexts, enforced through tag-space partitioning).
+TAG_RESERVED_BASE = 0x7E000000
+# per-launch tag window for collective schedules (see Communicator.
+# _alloc_coll_tags): sequence-numbered windows of MAX_ROUNDS tags
+_TAG_SCHED_BASE = 0x7E000000
+_TAG_SCHED_SEQS = 2048
+# persistent collectives lease windows from a separate, longer-lived
+# sequence space so a long-lived allreduce_init never collides with the
+# wrapping transient windows
+_TAG_PERSIST_BASE = 0x7E800000
+
+
+def _tag_match(want: int, got: int) -> bool:
+    """Receive-side tag matching: exact, or ANY_TAG against any USER
+    tag (reserved internal tags are never wildcard-matched)."""
+    if want == ANY_TAG:
+        return got < TAG_RESERVED_BASE
+    return want == got
 
 # rendezvous staging object layout: [ctrl 64B | payload]; ctrl byte 0 is
 # the receiver-written ack ("drained, reclaim/reuse me")
@@ -281,6 +309,7 @@ class PoolView:
 class Request:
     kind: str                        # send | recv
     done: bool = False
+    cancelled: bool = False          # done via cancel(): no data arrived
     data: Optional[bytes] = None     # recv result (bytes-mode receives)
     nbytes: int = 0                  # payload size delivered/accepted
     tag: int = 0
@@ -288,6 +317,50 @@ class Request:
     _gen: Any = field(default=None, repr=False)
     _comm: Any = field(default=None, repr=False)
     _error: Optional[BaseException] = field(default=None, repr=False)
+    # True while the receive generator is suspended MID-MESSAGE (eager
+    # multi-chunk drain): closing it there would strand the message's
+    # tail chunks in the pair queue and corrupt framing
+    _draining: bool = field(default=False, repr=False)
+    # completion callback feeding the shared progress engine: schedule
+    # executions hang a node-retirement hook here so a finishing pt2pt
+    # request immediately readies its dependents (core/progress.py)
+    _on_done: Any = field(default=None, repr=False)
+
+    def _finish(self) -> None:
+        """Mark complete exactly once and fire the completion callback."""
+        if self.done:
+            return
+        self.done = True
+        cb = self._on_done
+        if cb is not None:
+            self._on_done = None
+            cb(self)
+
+    def cancel(self) -> None:
+        """Withdraw a pending receive (MPI_Cancel, receives only):
+        closes the generator — which retracts any live matchbox posting
+        — and unlinks it from the posted-receive FIFO. A no-op on
+        completed requests. On success the request reports done with
+        ``cancelled=True`` (the MPI_Test_cancelled observable): no data
+        arrived, and any completion callback is dropped, never fired.
+        BEST-EFFORT, per MPI: a receive already draining a multi-chunk
+        eager message cannot be cancelled (closing it mid-message would
+        strand tail chunks in the pair queue and corrupt framing) — it
+        is left to complete normally, ``cancelled`` stays False."""
+        if self.done or self.kind != "recv" or self._draining:
+            return
+        if self._gen is not None:
+            self._gen.close()
+        self.cancelled = True
+        self._on_done = None
+        self.done = True
+        fifo = self._comm._recv_fifo.get(self.src) \
+            if self._comm is not None else None
+        if fifo is not None:
+            try:
+                fifo.remove(self)
+            except ValueError:
+                pass
 
     def test(self) -> bool:
         if self._error is not None:
@@ -315,7 +388,7 @@ class Request:
         try:
             next(self._gen)
         except StopIteration:
-            self.done = True
+            self._finish()
             self._unpost()
         except BaseException:
             self._unpost()               # keep the FIFO draining
@@ -345,6 +418,7 @@ class Communicator:
                  cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,
                  eager_threshold: int | None = None,
                  mb_slots: int = DEFAULT_MB_SLOTS,
+                 matchbox_slots: int | None = None,
                  name: str = "world", open_timeout: float = 30.0):
         self.arena = arena
         self.rank = rank
@@ -359,6 +433,12 @@ class Communicator:
         self.eager_sends = 0
         self.rndv_sends = 0
         self.posted_sends = 0         # rendezvous sends that hit an entry
+        if matchbox_slots is not None:
+            # preferred spelling; ``mb_slots`` stays as the historical
+            # alias. Pre-posted schedules size this to schedule depth
+            # (2x the deepest per-peer receive count for persistent
+            # collectives — two iterations' entries coexist).
+            mb_slots = matchbox_slots
         self.mb_slots = mb_slots      # posted entries per (src, dst); 0 off
         region = QueueMatrix.region_bytes(size, cell_size, n_cells)
         bar_bytes = SeqBarrier.region_bytes(size)
@@ -422,79 +502,66 @@ class Communicator:
         self._aliasable: Optional[bool] = None
         self._reg_seq = 0
         self._freed = False
-        # progress engine: outstanding non-blocking sends advanced by every
-        # blocking call (MPI progress rule — without it, two ranks that
-        # isend to each other then recv would deadlock on full queues).
-        # One FIFO per destination: a message's chunks must occupy the
-        # pair queue CONTIGUOUSLY, so only the head request of each
-        # destination is ever pumped.
-        self._send_fifo: dict[int, deque[Request]] = {}
-        # posted receives, one FIFO per source (the MPI posted-receive
-        # queue): the progress engine matches the HEAD of each source so
-        # a synchronous send can complete even if its peer waits other
-        # requests first; only the head ever drains the pair queue, so
-        # two receive generators never interleave one message's chunks
-        self._recv_fifo: dict[int, deque[Request]] = {}
-        # rendezvous stagers awaiting the receiver's ack (then destroyed)
-        self._stagers: list[ObjHandle] = []
+        # the SHARED PROGRESS CORE (core/progress.py): owns the send/
+        # recv FIFOs, the stager reclaim list AND every active
+        # collective schedule execution; every blocking call and every
+        # test()/wait() turns it (MPI progress rule — without it, two
+        # ranks that isend to each other then recv would deadlock on
+        # full queues, and an iallreduce would never advance)
+        self._engine = ProgressEngine(self)
+        # collective-schedule state: compiled-DAG cache (one entry per
+        # (op, size, topology)) and the launch sequence counters that
+        # hand each collective a disjoint tag window
+        self._sched_cache: dict = {}
+        self._coll_seq = 0
+        self._persist_seq = 0
         self._rndv_seq = 0
         self._pbuf_seq = 0
         # init barrier (paper §3.4: creation of shared queues synchronized
         # by the seq-number barrier)
         self.barrier()
 
-    def _progress(self) -> None:
-        """Advance the head send of every destination FIFO and the head
-        posted receive of every source FIFO, then reclaim any rendezvous
-        stagers the receivers have drained."""
-        for fifo in self._send_fifo.values():
-            while fifo:
-                head = fifo[0]
-                try:
-                    next(head._gen)
-                    break                    # blocked on queue space
-                except StopIteration:
-                    head.done = True
-                    fifo.popleft()           # next message may start
-                except BaseException as e:
-                    # a failed send (e.g. ArenaFullError while staging)
-                    # must not be reported done: record it on the
-                    # request, unblock the FIFO, surface it to the
-                    # caller that pumped progress
-                    head._error = e
-                    fifo.popleft()
-                    raise
-        for fifo in self._recv_fifo.values():
-            # pump EVERY posted receive once: generators self-restrict
-            # so only the effective head drains the pair queue, while
-            # later receives may still complete from parked messages
-            # (MPI: receives of different tags complete independently)
-            for req in list(fifo):
-                if req.done or req._error is not None:
-                    continue
-                try:
-                    next(req._gen)
-                except StopIteration:
-                    req.done = True          # matched passively
-                except BaseException as e:
-                    # a failed receive (e.g. truncation) is recorded on
-                    # its own request — never surfaced to the innocent
-                    # caller that happened to pump progress
-                    req._error = e
-            while fifo and (fifo[0].done or fifo[0]._error is not None):
-                fifo.popleft()
-        if self._stagers:
-            self._reclaim_stagers()
+    # engine-owned state, re-exposed under the historical names
+    @property
+    def _send_fifo(self) -> dict[int, deque]:
+        return self._engine.send_fifo
 
-    def _reclaim_stagers(self) -> None:
-        v = self.arena.view
-        still = []
-        for h in self._stagers:
-            if v.nt_load_u8(h.offset):       # receiver ack'd the drain
-                self.arena.destroy(h)
-            else:
-                still.append(h)
-        self._stagers = still
+    @property
+    def _recv_fifo(self) -> dict[int, deque]:
+        return self._engine.recv_fifo
+
+    @property
+    def _stagers(self) -> list:
+        return self._engine.stagers
+
+    def _progress(self) -> None:
+        """One tick of the shared progress engine."""
+        self._engine.tick()
+
+    def progress(self) -> None:
+        """Explicit progress tick: advances outstanding sends, posted
+        receives, stager reclaim and every active collective schedule.
+        Call this from compute loops between ``iallreduce`` start and
+        ``wait`` to keep payloads moving — the engine is cooperative,
+        there is no progress thread."""
+        self._engine.tick()
+
+    def _alloc_coll_tags(self, persistent: bool = False) -> int:
+        """A per-launch window of ``sched.MAX_ROUNDS`` reserved tags.
+        The sequence counters advance identically on every rank
+        (collectives are issued in the same order everywhere — the MPI
+        calling convention), so windows agree without communication.
+        Persistent collectives draw from a separate sequence: their
+        windows live as long as the request does and must not collide
+        with the wrapping transient ones."""
+        from repro.core.sched import MAX_ROUNDS
+        if persistent:
+            seq = self._persist_seq
+            self._persist_seq += 1
+            return _TAG_PERSIST_BASE + (seq % _TAG_SCHED_SEQS) * MAX_ROUNDS
+        seq = self._coll_seq
+        self._coll_seq += 1
+        return _TAG_SCHED_BASE + (seq % _TAG_SCHED_SEQS) * MAX_ROUNDS
 
     # ------------------------------------------------------------------
     # pool-resident buffers (zero-copy sends)
@@ -687,7 +754,12 @@ class Communicator:
             if not pid or self._mb_claimed.get((dest, slot)) == pid:
                 continue
             etag = v.nt_load_u64(off + _MB_TAG)
-            if etag != _MB_ANY and etag != wtag:
+            if etag == _MB_ANY:
+                # a wildcard posting belongs to a USER receive — it must
+                # never swallow reserved-tag traffic (collective rounds)
+                if int(tag) >= TAG_RESERVED_BASE:
+                    continue
+            elif etag != wtag:
                 continue
             if v.nt_load_u64(off + _MB_CAP) < nbytes:
                 continue
@@ -715,6 +787,7 @@ class Communicator:
         if self._freed:
             return
         self._freed = True
+        self._engine.colls.clear()     # abandoned schedule executions
         if self._mb is not None:
             for rec in list(self._mb_records.values()):
                 self._mb_retract(rec)
@@ -760,9 +833,10 @@ class Communicator:
     # blocking call keeps the progress engine turning)
     # ------------------------------------------------------------------
     def send(self, dest: int, data, tag: int = 0,
-             timeout: float | None = 30.0) -> None:
+             timeout: float | None = 30.0, *,
+             _internal: bool = False) -> None:
         """``data``: any buffer-protocol object or a PoolBuffer."""
-        req = self.isend(dest, data, tag)
+        req = self.isend(dest, data, tag, _internal=_internal)
         t0 = time.monotonic()
         while not req.test():           # test() runs the progress sweep
             if timeout is not None and time.monotonic() - t0 > timeout:
@@ -770,8 +844,9 @@ class Communicator:
             time.sleep(0)
 
     def recv(self, src: int, tag: int = ANY_TAG,
-             timeout: float | None = 30.0) -> tuple[bytes, int]:
-        req = self.irecv(src, tag)
+             timeout: float | None = 30.0, *,
+             _internal: bool = False) -> tuple[bytes, int]:
+        req = self.irecv(src, tag, _internal=_internal)
         t0 = time.monotonic()
         while not req.test():           # test() runs the progress sweep
             if timeout is not None and time.monotonic() - t0 > timeout:
@@ -780,13 +855,14 @@ class Communicator:
         return req.data, req.tag
 
     def recv_into(self, src: int, buf, tag: int = ANY_TAG,
-                  timeout: float | None = 30.0) -> tuple[int, int]:
+                  timeout: float | None = 30.0, *,
+                  _internal: bool = False) -> tuple[int, int]:
         """Receive straight into ``buf`` (writable buffer-protocol object,
         numpy arrays included); returns (nbytes, tag). If the arriving
         message exceeds ``buf`` it is consumed and DISCARDED, and a
         ValueError raised (MPI truncation semantics) — the communicator
         stays usable."""
-        req = self.irecv_into(src, buf, tag)
+        req = self.irecv_into(src, buf, tag, _internal=_internal)
         t0 = time.monotonic()
         while not req.test():           # test() runs the progress sweep
             if timeout is not None and time.monotonic() - t0 > timeout:
@@ -812,14 +888,24 @@ class Communicator:
     # non-blocking pt2pt
     # ------------------------------------------------------------------
     def isend(self, dest: int, data, tag: int = 0, *,
-              _prestaged: Optional[PoolBuffer] = None) -> Request:
+              _prestaged: Optional[PoolBuffer] = None,
+              _internal: bool = False) -> Request:
         """``_prestaged``: a persistent staging buffer (owned by a
         ``PersistentRequest``) refilled in place on a matchbox miss —
-        the plan stays claim-aware without per-iteration arena churn."""
+        the plan stays claim-aware without per-iteration arena churn.
+        ``_internal``: schedule/probe traffic may use the reserved tag
+        space user code is fenced out of."""
         if int(tag) < 0:
             # ANY_TAG is a receive-side wildcard; a negative wire tag
             # would never match (fail fast on every protocol path alike)
             raise ValueError(f"send tag must be non-negative, got {tag}")
+        if int(tag) >= TAG_RESERVED_BASE and not _internal:
+            # reserved for collective schedules / probes: ANY_TAG
+            # receives skip these tags, so a user send here would park
+            # forever against a wildcard receive — reject at the source
+            raise ValueError(
+                f"tag {tag:#x} is in the reserved internal tag space "
+                f"(>= {TAG_RESERVED_BASE:#x})")
         req = Request(kind="send", tag=tag)
         if isinstance(data, PoolBuffer):
             pview: Optional[PoolView] = PoolView(data, 0, data.nbytes)
@@ -952,19 +1038,30 @@ class Communicator:
         self._progress()                         # start eagerly (in order)
         return req
 
-    def irecv(self, src: int, tag: int = ANY_TAG) -> Request:
-        return self._irecv_impl(src, tag, None)
+    def irecv(self, src: int, tag: int = ANY_TAG, *,
+              _internal: bool = False) -> Request:
+        return self._irecv_impl(src, tag, None, _internal=_internal)
 
-    def irecv_into(self, src: int, buf, tag: int = ANY_TAG) -> Request:
+    def irecv_into(self, src: int, buf, tag: int = ANY_TAG, *,
+                   _internal: bool = False) -> Request:
         """``buf``: any writable buffer-protocol object, a PoolBuffer /
         PoolView (pool-resident destination), or a Registration (pinned
         user buffer). Pool-addressable destinations are PUBLISHED in the
         matchbox so a matching sender can deliver the payload with one
         copy and no receiver-side drain (posted rendezvous)."""
-        return self._irecv_impl(src, tag, self._resolve_dest(buf))
+        return self._irecv_impl(src, tag, self._resolve_dest(buf),
+                                _internal=_internal)
 
     def _irecv_impl(self, src: int, tag: int,
-                    dest: Optional[_RecvDest]) -> Request:
+                    dest: Optional[_RecvDest], *,
+                    _internal: bool = False) -> Request:
+        if tag != ANY_TAG and int(tag) >= TAG_RESERVED_BASE \
+                and not _internal:
+            # mirror of the isend fence: a user receive on a reserved
+            # tag could steal a collective schedule round
+            raise ValueError(
+                f"tag {tag:#x} is in the reserved internal tag space "
+                f"(>= {TAG_RESERVED_BASE:#x})")
         req = Request(kind="recv", tag=tag, src=src)
         dst = dest.mv if dest is not None else None
         cap = dest.capacity if dest is not None else 0
@@ -985,6 +1082,7 @@ class Communicator:
 
         def gen():
             rec = None               # our live matchbox posting, if any
+            missed = [False]         # counted a strip-full miss already?
 
             def secure_dst():
                 """About to deliver a NON-posted payload into the
@@ -1002,7 +1100,7 @@ class Communicator:
                 park = self._parked[src]
                 while True:
                     for i, (d, t) in enumerate(park):
-                        if tag in (ANY_TAG, t):
+                        if _tag_match(tag, t):
                             del park[i]
                             secure_dst()
                             deliver_bytes(d, t)
@@ -1015,6 +1113,13 @@ class Communicator:
                     # (Posting is lazy-retried — all slots may be busy.)
                     if rec is None and dest is not None and dest.postable:
                         rec = self._mb_post(src, tag, dest, req)
+                        if rec is None and not missed[0]:
+                            # every strip slot occupied: counted ONCE per
+                            # receive so schedules can size strips to
+                            # their pre-post depth (matchbox sizing
+                            # policy — ProtocolStats.mb_capacity_misses)
+                            missed[0] = True
+                            self.arena.view.count_mb_miss()
                     # per-source matching is ordered: only the EFFECTIVE
                     # HEAD posted receive may drain the pair queue (it
                     # parks foreign tags; two generators interleaving one
@@ -1040,7 +1145,7 @@ class Communicator:
                             "cMPI framing error: expected FIRST chunk")
                     total = int.from_bytes(payload[:8], "little")
                     t = int.from_bytes(payload[8:16], "little")
-                    match = tag in (ANY_TAG, t)
+                    match = _tag_match(tag, t)
                     v = self.arena.view
                     # an undersized dst is a truncation error (MPI_ERR_
                     # TRUNCATE): the message is still fully consumed (so
@@ -1108,12 +1213,14 @@ class Communicator:
                     k = min(len(payload) - 16, total)
                     sink[:k] = payload[16:16 + k]
                     v.count_copy(k)
+                    req._draining = True     # mid-message: not cancellable
                     while k < total:
                         got = q.try_dequeue_into(sink[k:total])
                         if got is None:
                             yield
                             continue
                         k += got[0]
+                    req._draining = False
                     v.count_path("eager", total)
                     if truncate:
                         raise ValueError(
@@ -1146,24 +1253,30 @@ class Communicator:
         try:
             next(req._gen)
         except StopIteration:
-            req.done = True
+            req._finish()
             req._unpost()
         except BaseException as e:
             req._error = e
             req._unpost()
         return req
 
-    def waitall(self, reqs: list[Request],
-                timeout: float | None = 30.0) -> None:
-        t0 = time.monotonic()
-        pending = list(reqs)
-        while pending:                  # test() runs the progress sweep
-            pending = [r for r in pending if not r.test()]
-            if pending and timeout is not None \
-                    and time.monotonic() - t0 > timeout:
-                raise TimeoutError(f"waitall: {len(pending)} pending")
-            if pending:
-                time.sleep(0)
+    def waitall(self, reqs: list, timeout: float | None = 30.0) -> None:
+        """Complete every request — plain pt2pt ``Request``s, persistent
+        requests and ``CollRequest``s may be mixed freely. Each sweep
+        pumps the SHARED progress engine through every still-pending
+        request once, so no request starves behind an earlier one."""
+        _waitall(reqs, timeout)
+
+    def waitany(self, reqs: list,
+                timeout: float | None = 30.0) -> tuple[int, Any]:
+        """Block until ANY of the (mixed-kind) requests completes;
+        returns ``(index, request)``."""
+        return _waitany(reqs, timeout)
+
+    def testall(self, reqs: list) -> bool:
+        """One fair engine sweep across the (mixed-kind) requests;
+        True iff all have completed."""
+        return _testall(reqs)
 
     # ------------------------------------------------------------------
     def barrier(self) -> None:

@@ -55,9 +55,11 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
                 cell_size: int = 4096, n_cells: int = 8,
                 eager_threshold: int | str | None = None,
                 arena_kw: dict | None = None,
+                comm_kw: dict | None = None,
                 timeout: float = 60.0) -> list[Any]:
     pool = LocalPool(pool_bytes)
     arena_kw = arena_kw or {}
+    comm_kw = comm_kw or {}
     results: list[Any] = [None] * size
     errors: list[tuple[int, BaseException, str]] = []
     gate = threading.Barrier(size)
@@ -72,7 +74,7 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
         try:
             comm = Comm(arenas[rank], rank, size,
                         cell_size=cell_size, n_cells=n_cells,
-                        eager_threshold=eager_threshold)
+                        eager_threshold=eager_threshold, **comm_kw)
             gate.wait(timeout)
             results[rank] = fn(RankEnv(rank, size, arenas[rank], comm))
         except BaseException as e:  # noqa: BLE001 — reported to the caller
@@ -100,13 +102,14 @@ def run_threads(size: int, fn: Callable[[RankEnv], Any], *,
 
 def _proc_entry(shm_name: str, rank: int, size: int, fn, cell_size: int,
                 n_cells: int, eager_threshold: int | str | None,
-                arena_kw: dict, q: mp.Queue):
+                arena_kw: dict, comm_kw: dict, q: mp.Queue):
     try:
         pool = SharedMemoryPool(0, name=shm_name, create=False)
         arena = Arena(pool, rank, mode="coherent", initialize=False,
                       **arena_kw)
         comm = Comm(arena, rank, size, cell_size=cell_size,
-                    n_cells=n_cells, eager_threshold=eager_threshold)
+                    n_cells=n_cells, eager_threshold=eager_threshold,
+                    **comm_kw)
         out = fn(RankEnv(rank, size, arena, comm))
         q.put((rank, "ok", out))
         pool.close()
@@ -119,8 +122,10 @@ def run_processes(size: int, fn: Callable[[RankEnv], Any], *,
                   cell_size: int = 16384, n_cells: int = 8,
                   eager_threshold: int | str | None = None,
                   arena_kw: dict | None = None,
+                  comm_kw: dict | None = None,
                   timeout: float = 120.0) -> list[Any]:
     arena_kw = arena_kw or {}
+    comm_kw = comm_kw or {}
     pool = SharedMemoryPool(pool_bytes, create=True)
     try:
         # rank 0's arena initialization happens in the parent so children
@@ -130,7 +135,8 @@ def run_processes(size: int, fn: Callable[[RankEnv], Any], *,
         q: mp.Queue = ctx.Queue()
         procs = [ctx.Process(target=_proc_entry,
                              args=(pool.name, r, size, fn, cell_size,
-                                   n_cells, eager_threshold, arena_kw, q),
+                                   n_cells, eager_threshold, arena_kw,
+                                   comm_kw, q),
                              daemon=True)
                  for r in range(size)]
         for p in procs:

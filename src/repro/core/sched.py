@@ -1,0 +1,433 @@
+"""Collective schedules: a DAG IR compiled once per (op, size, topology).
+
+The blocking collectives of PR 2/3 were hand-rolled round loops — each
+round did ``irecv_into; isend; wait; wait; reduce`` and the CPU idled at
+every ``wait``. This module factors the ALGORITHM out of the execution:
+a collective is compiled into a small dependency DAG of four node kinds
+
+  SendOp    ship a buffer region to a peer (one message, one round tag)
+  RecvOp    receive a peer's message into a buffer region
+  ReduceOp  dst[...] = op(dst, src) over two regions (local compute)
+  CopyOp    dst[...] = src (local data movement)
+
+over SYMBOLIC buffer slots (``BufRef``): the IR names `(slot, offset,
+nbytes)` regions, never concrete memory, so one compiled schedule serves
+the pool-resident backend (PoolBuffer round buffers, posted-rendezvous
+receives), the plain-heap backend (numpy scratch, eager/staged wire) and
+the persistent double-buffered backend alike. Compilation is pure —
+``compile_schedule`` depends only on (kind, algo, n, rank, nbytes,
+itemsize, root) — and cached per communicator, so iterative workloads
+pay the DAG construction once.
+
+Execution lives in ``repro.core.progress``: the shared progress engine
+issues every node whose dependencies have completed, which is what turns
+``comm.iallreduce(x)`` + user compute + ``wait()`` into actual
+communication/computation overlap, and what lets MPI-4 persistent
+collectives pre-post every round's matchbox entry before any sender
+needs it (the round-synchronized pre-post handshake).
+
+Dependency discipline (why each edge exists):
+
+* a SendOp sourcing region R depends on the node that produced R's
+  final-for-this-send value (a ReduceOp, RecvOp or the initial fill);
+* consecutive SendOps from the same slot are chained — a ``PoolBuffer``
+  has ONE drain-ack word, so at most one send per underlying buffer may
+  be in flight (the heap backend keeps the same order for wire parity);
+* a ReduceOp that writes the accumulator depends on the SendOp that
+  last sourced it (a staged-rendezvous peer reads our memory until it
+  acks — mutating the region earlier would corrupt the wire);
+* RecvOps into private regions carry NO deps: the engine pre-posts them
+  all at start, which is what primes the matchbox.
+
+Tags: every node carries a ROUND index; the executor adds a per-launch
+``tag_base`` from the communicator's collective sequence number, so
+concurrent collectives (an ``iallreduce`` overlapping an ``ibarrier``)
+never cross-match. Ranks must issue collectives in the same order —
+the MPI calling convention — for the sequence numbers to agree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["BufRef", "SendOp", "RecvOp", "ReduceOp", "CopyOp",
+           "Schedule", "compile_schedule", "MAX_ROUNDS"]
+
+# rounds per schedule are capped so per-launch tag windows stay disjoint
+MAX_ROUNDS = 256
+
+
+@dataclass(frozen=True)
+class BufRef:
+    """A symbolic buffer region: ``nbytes`` at ``off`` inside slot
+    ``slot``. Slot 0 is the working/accumulator buffer by convention;
+    higher slots hold per-round incoming blocks."""
+    slot: int
+    off: int
+    nbytes: int
+
+
+@dataclass
+class _Node:
+    idx: int = field(init=False, default=-1)
+    deps: tuple[int, ...] = ()
+
+
+@dataclass
+class SendOp(_Node):
+    peer: int = -1
+    buf: BufRef = None
+    round: int = 0
+
+
+@dataclass
+class RecvOp(_Node):
+    peer: int = -1
+    buf: BufRef = None
+    round: int = 0
+
+
+@dataclass
+class ReduceOp(_Node):
+    dst: BufRef = None
+    src: BufRef = None
+
+
+@dataclass
+class CopyOp(_Node):
+    dst: BufRef = None
+    src: BufRef = None
+
+
+@dataclass
+class Schedule:
+    """A compiled collective for ONE rank of an n-rank communicator."""
+    kind: str
+    n: int
+    rank: int
+    nodes: list = field(default_factory=list)
+    slot_sizes: dict = field(default_factory=dict)   # slot -> bytes
+    rounds: int = 0                                  # tag span
+    result: BufRef | None = None
+
+    def _add(self, node) -> int:
+        node.idx = len(self.nodes)
+        self.nodes.append(node)
+        for s in self._refs(node):
+            need = s.off + s.nbytes
+            if need > self.slot_sizes.setdefault(s.slot, 0):
+                self.slot_sizes[s.slot] = need
+        return node.idx
+
+    @staticmethod
+    def _refs(node):
+        if isinstance(node, (SendOp, RecvOp)):
+            return (node.buf,)
+        return (node.dst, node.src)
+
+    # ------------------------------------------------------------------
+    # derived metadata
+    # ------------------------------------------------------------------
+    def recv_nodes(self) -> list[RecvOp]:
+        return [nd for nd in self.nodes if isinstance(nd, RecvOp)]
+
+    def max_recvs_per_peer(self) -> int:
+        """Largest number of receives this schedule posts toward one
+        peer — the matchbox depth a FULLY pre-posted execution needs
+        (persistent mode needs twice this: two iterations' entries
+        coexist)."""
+        per: dict[int, int] = {}
+        for nd in self.recv_nodes():
+            per[nd.peer] = per.get(nd.peer, 0) + 1
+        return max(per.values(), default=0)
+
+    def validate(self) -> None:
+        """Compile-time sanity: deps in range and strictly backward
+        (construction order is a topological order), rounds in span."""
+        for nd in self.nodes:
+            assert all(0 <= d < nd.idx for d in nd.deps), \
+                f"node {nd.idx}: forward/self dep {nd.deps}"
+            if isinstance(nd, (SendOp, RecvOp)):
+                assert 0 <= nd.round < self.rounds, \
+                    f"node {nd.idx}: round {nd.round} outside " \
+                    f"{self.rounds}"
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+# --------------------------------------------------------------------------
+# compilers (one per collective kind; pure functions of the key)
+# --------------------------------------------------------------------------
+
+def _compile_allreduce_rd(n: int, rank: int, nbytes: int) -> Schedule:
+    """Recursive doubling: log2(n) rounds, whole-payload exchanges.
+    Round r peers with rank^2^r; each round's incoming block lands in
+    its OWN slot so every receive pre-posts at start."""
+    assert _is_pow2(n), "recursive doubling needs power-of-two size"
+    s = Schedule("allreduce_rd", n, rank)
+    acc = BufRef(0, 0, nbytes)
+    prev_send = prev_red = None
+    r = 0
+    k = 1
+    while k < n:
+        peer = rank ^ k
+        inc = BufRef(1 + r, 0, nbytes)
+        recv = s._add(RecvOp(deps=(), peer=peer, buf=inc, round=r))
+        sdeps = tuple(d for d in (prev_red, prev_send) if d is not None)
+        send = s._add(SendOp(deps=sdeps, peer=peer, buf=acc, round=r))
+        rdeps = (recv, send) + ((prev_red,) if prev_red is not None
+                                else ())
+        prev_red = s._add(ReduceOp(deps=rdeps, dst=acc, src=inc))
+        prev_send = send
+        k <<= 1
+        r += 1
+    s.rounds = r
+    s.result = acc
+    s.validate()
+    return s
+
+
+def _compile_allreduce_ring(n: int, rank: int, nbytes: int,
+                            itemsize: int) -> Schedule:
+    """Fused ring reduce-scatter + allgather in ONE working buffer of n
+    chunks: RS rounds reduce incoming blocks into their chunks, AG
+    rounds receive final chunks IN PLACE (no re-pack, no reorder pass —
+    at completion slot 0 holds the reduced payload in chunk order)."""
+    count = nbytes // itemsize
+    per = -(-count // n)
+    per_b = per * itemsize
+    s = Schedule("allreduce_ring", n, rank)
+    right, left = (rank + 1) % n, (rank - 1) % n
+    chunk = lambda c: BufRef(0, (c % n) * per_b, per_b)   # noqa: E731
+    rs_send: list[int] = []
+    rs_red: list[int] = []
+    prev_send = None
+    for st in range(n - 1):
+        inc = BufRef(1 + st, 0, per_b)
+        recv = s._add(RecvOp(deps=(), peer=left, buf=inc, round=st))
+        sdeps = tuple(d for d in ((rs_red[-1] if st else None),
+                                  prev_send) if d is not None)
+        send = s._add(SendOp(deps=sdeps, peer=right,
+                             buf=chunk(rank - st), round=st))
+        red = s._add(ReduceOp(deps=(recv,), dst=chunk(rank - st - 1),
+                              src=inc))
+        rs_send.append(send)
+        rs_red.append(red)
+        prev_send = send
+    prev_recv = None
+    for st in range(n - 1):
+        rnd = (n - 1) + st
+        # the chunk being received was last SOURCED by RS send `st`
+        recv = s._add(RecvOp(deps=(rs_send[st],), peer=left,
+                             buf=chunk(rank - st), round=rnd))
+        sdeps = ((rs_red[-1], prev_send) if st == 0
+                 else (prev_recv, prev_send))
+        send = s._add(SendOp(deps=tuple(sdeps), peer=right,
+                             buf=chunk(rank + 1 - st), round=rnd))
+        prev_recv, prev_send = recv, send
+    s.rounds = 2 * (n - 1)
+    s.result = BufRef(0, 0, n * per_b)
+    s.validate()
+    return s
+
+
+def _compile_reduce_scatter_ring(n: int, rank: int, nbytes: int,
+                                 itemsize: int) -> Schedule:
+    """The RS phase alone; the result is this rank's reduced shard,
+    chunk ``(rank+1) % n`` of the zero-padded payload."""
+    count = nbytes // itemsize
+    per = -(-count // n)
+    per_b = per * itemsize
+    s = Schedule("reduce_scatter_ring", n, rank)
+    right, left = (rank + 1) % n, (rank - 1) % n
+    chunk = lambda c: BufRef(0, (c % n) * per_b, per_b)   # noqa: E731
+    prev_send = prev_red = None
+    for st in range(n - 1):
+        inc = BufRef(1 + st, 0, per_b)
+        recv = s._add(RecvOp(deps=(), peer=left, buf=inc, round=st))
+        sdeps = tuple(d for d in (prev_red, prev_send) if d is not None)
+        send = s._add(SendOp(deps=sdeps, peer=right,
+                             buf=chunk(rank - st), round=st))
+        prev_red = s._add(ReduceOp(deps=(recv,),
+                                   dst=chunk(rank - st - 1), src=inc))
+        prev_send = send
+    s.rounds = max(n - 1, 1)
+    s.result = chunk(rank + 1)
+    s.validate()
+    return s
+
+
+def _compile_allgather_ring(n: int, rank: int, per_b: int) -> Schedule:
+    """Ring allgather straight into the rank-ordered output buffer;
+    every receive targets a private chunk, so ALL of them pre-post."""
+    s = Schedule("allgather_ring", n, rank)
+    right, left = (rank + 1) % n, (rank - 1) % n
+    chunk = lambda c: BufRef(0, (c % n) * per_b, per_b)   # noqa: E731
+    prev_send = prev_recv = None
+    for st in range(n - 1):
+        recv = s._add(RecvOp(deps=(), peer=left,
+                             buf=chunk(rank - st - 1), round=st))
+        sdeps = tuple(d for d in (prev_recv, prev_send) if d is not None)
+        s._add(SendOp(deps=sdeps, peer=right, buf=chunk(rank - st),
+                      round=st))
+        prev_send = s.nodes[-1].idx
+        prev_recv = recv
+    s.rounds = max(n - 1, 1)
+    s.result = BufRef(0, 0, n * per_b)
+    s.validate()
+    return s
+
+
+def _compile_allgather_bruck(n: int, rank: int, per_b: int) -> Schedule:
+    """Bruck allgather: ceil(log2 n) rounds, blocks accumulate
+    contiguously in bruck order (the executor's finalizer rotates to
+    rank order). Receives land in fresh regions — all pre-postable."""
+    s = Schedule("allgather_bruck", n, rank)
+    prev_send = prev_recv = None
+    k = 1
+    have = 1
+    rnd = 0
+    while k < n:
+        count = min(k, n - k)
+        recv = s._add(RecvOp(deps=(), peer=(rank + k) % n,
+                             buf=BufRef(0, have * per_b, count * per_b),
+                             round=rnd))
+        sdeps = tuple(d for d in (prev_recv, prev_send) if d is not None)
+        s._add(SendOp(deps=sdeps, peer=(rank - k) % n,
+                      buf=BufRef(0, 0, count * per_b), round=rnd))
+        prev_send = s.nodes[-1].idx
+        prev_recv = recv
+        have += count
+        k <<= 1
+        rnd += 1
+    s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), n * per_b)
+    s.rounds = max(rnd, 1)
+    s.result = BufRef(0, 0, n * per_b)
+    s.validate()
+    return s
+
+
+def _compile_bcast(n: int, rank: int, root: int, nbytes: int) -> Schedule:
+    """Binomial tree: one receive from the parent, then forwards to
+    every child (chained — one ack slot per buffer)."""
+    s = Schedule("bcast", n, rank)
+    buf = BufRef(0, 0, nbytes)
+    vr = (rank - root) % n
+    recv = None
+    if vr:
+        k = 1
+        while k * 2 <= vr:
+            k *= 2
+        recv = s._add(RecvOp(deps=(), peer=(vr - k + root) % n,
+                             buf=buf, round=0))
+    prev_send = None
+    k = 1
+    while k < n:
+        if vr < k and vr + k < n:
+            deps = tuple(d for d in (recv, prev_send) if d is not None)
+            prev_send = s._add(SendOp(deps=deps,
+                                      peer=(vr + k + root) % n,
+                                      buf=buf, round=0))
+        k *= 2
+    s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), nbytes)
+    s.rounds = 1
+    s.result = buf
+    s.validate()
+    return s
+
+
+def _compile_reduce(n: int, rank: int, root: int, nbytes: int) -> Schedule:
+    """Binomial tree, op applied bottom-up; each incoming partial gets
+    its own slot so the receives pre-post."""
+    s = Schedule("reduce", n, rank)
+    acc = BufRef(0, 0, nbytes)
+    vr = (rank - root) % n
+    prev_red = None
+    j = 0
+    k = 1
+    r = 0
+    while k < n:
+        if vr % (2 * k) == 0:
+            if vr + k < n:
+                inc = BufRef(1 + j, 0, nbytes)
+                recv = s._add(RecvOp(deps=(), peer=(vr + k + root) % n,
+                                     buf=inc, round=r))
+                rdeps = (recv,) + ((prev_red,) if prev_red is not None
+                                   else ())
+                prev_red = s._add(ReduceOp(deps=rdeps, dst=acc, src=inc))
+                j += 1
+        elif vr % (2 * k) == k:
+            deps = (prev_red,) if prev_red is not None else ()
+            s._add(SendOp(deps=deps, peer=(vr - k + root) % n, buf=acc,
+                          round=r))
+            break
+        k *= 2
+        r += 1
+    s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), nbytes)
+    s.rounds = max(r + 1, 1)
+    s.result = acc if rank == root else None
+    s.validate()
+    return s
+
+
+def _compile_barrier(n: int, rank: int) -> Schedule:
+    """Dissemination barrier as zero-byte messages: round r talks to
+    ranks +-2^r; a round's send waits for the previous round's recv."""
+    s = Schedule("barrier", n, rank)
+    empty = BufRef(0, 0, 0)
+    prev_recv = None
+    r = 0
+    k = 1
+    while k < n:
+        deps = (prev_recv,) if prev_recv is not None else ()
+        s._add(SendOp(deps=deps, peer=(rank + k) % n, buf=empty,
+                      round=r))
+        prev_recv = s._add(RecvOp(deps=(), peer=(rank - k) % n,
+                                  buf=empty, round=r))
+        k <<= 1
+        r += 1
+    s.rounds = max(r, 1)
+    s.result = None
+    s.validate()
+    return s
+
+
+_COMPILERS = {
+    "allreduce_rd": lambda n, rank, nbytes, itemsize, root:
+        _compile_allreduce_rd(n, rank, nbytes),
+    "allreduce_ring": lambda n, rank, nbytes, itemsize, root:
+        _compile_allreduce_ring(n, rank, nbytes, itemsize),
+    "reduce_scatter_ring": lambda n, rank, nbytes, itemsize, root:
+        _compile_reduce_scatter_ring(n, rank, nbytes, itemsize),
+    "allgather_ring": lambda n, rank, nbytes, itemsize, root:
+        _compile_allgather_ring(n, rank, nbytes),
+    "allgather_bruck": lambda n, rank, nbytes, itemsize, root:
+        _compile_allgather_bruck(n, rank, nbytes),
+    "bcast": lambda n, rank, nbytes, itemsize, root:
+        _compile_bcast(n, rank, root, nbytes),
+    "reduce": lambda n, rank, nbytes, itemsize, root:
+        _compile_reduce(n, rank, root, nbytes),
+    "barrier": lambda n, rank, nbytes, itemsize, root:
+        _compile_barrier(n, rank),
+}
+
+
+def compile_schedule(comm, kind: str, nbytes: int = 0, itemsize: int = 1,
+                     root: int = 0) -> Schedule:
+    """Compile (or fetch from the communicator's cache) the schedule for
+    ``kind`` at this (size, rank, payload) — the once-per-(op, size,
+    topology) contract. ``nbytes`` is the slot-0 payload for whole-
+    buffer ops, the per-shard size for allgather kinds."""
+    key = (kind, nbytes, itemsize, root)
+    cache = comm._sched_cache
+    sched = cache.get(key)
+    if sched is None:
+        sched = _COMPILERS[kind](comm.size, comm.rank, nbytes, itemsize,
+                                 root)
+        if sched.rounds > MAX_ROUNDS:
+            raise ValueError(
+                f"{kind} at size {comm.size} needs {sched.rounds} rounds"
+                f" > MAX_ROUNDS={MAX_ROUNDS}")
+        cache[key] = sched
+    return sched

@@ -1,0 +1,424 @@
+"""Schedule-DAG collectives: the IR + compile cache, the shared
+progress engine (nonblocking i* collectives, mixed-request wait
+helpers), MPI-4 persistent collectives with round-synchronized
+pre-posting, matchbox sizing/capacity-miss accounting, tag-space
+isolation of collectives from ANY_TAG traffic, and the real-peer
+eager-threshold probe."""
+import numpy as np
+import pytest
+
+from repro.core import run_threads
+from repro.core.sched import (RecvOp, ReduceOp, SendOp, compile_schedule)
+
+CELL = 4096
+
+
+class _StubComm:
+    """compile_schedule needs only (size, rank, _sched_cache)."""
+
+    def __init__(self, n, rank):
+        self.size = n
+        self.rank = rank
+        self._sched_cache = {}
+
+
+# --------------------------------------------------------------------------
+# IR + compiler
+# --------------------------------------------------------------------------
+
+class TestScheduleIR:
+    @pytest.mark.parametrize("kind,nbytes", [
+        ("allreduce_rd", 4096), ("allreduce_ring", 4096),
+        ("reduce_scatter_ring", 4096), ("allgather_ring", 512),
+        ("allgather_bruck", 512), ("bcast", 4096), ("reduce", 4096),
+        ("barrier", 0)])
+    def test_compiles_valid_dags_all_ranks(self, kind, nbytes):
+        for n in (2, 3, 4, 5, 8):
+            if kind == "allreduce_rd" and n & (n - 1):
+                continue
+            for rank in range(n):
+                s = compile_schedule(_StubComm(n, rank), kind, nbytes, 8)
+                s.validate()     # deps strictly backward, rounds in span
+                # every send and recv names a peer inside the comm
+                for nd in s.nodes:
+                    if isinstance(nd, (SendOp, RecvOp)):
+                        assert 0 <= nd.peer < n and nd.peer != rank
+
+    def test_compile_cached_per_key(self):
+        c = _StubComm(4, 1)
+        a = compile_schedule(c, "allreduce_ring", 4096, 8)
+        b = compile_schedule(c, "allreduce_ring", 4096, 8)
+        assert a is b                        # one compile per key
+        assert compile_schedule(c, "allreduce_ring", 8192, 8) is not a
+
+    def test_rd_recvs_preposted(self):
+        """Every recursive-doubling receive is dependency-free (own
+        slot per round), so the engine pre-posts all of them at start —
+        the matchbox-priming property persistent collectives rely on."""
+        s = compile_schedule(_StubComm(8, 3), "allreduce_rd", 1024, 8)
+        recvs = s.recv_nodes()
+        assert len(recvs) == 3
+        assert all(not nd.deps for nd in recvs)
+        assert s.max_recvs_per_peer() == 1   # one round per peer
+
+    def test_ring_ag_recvs_wait_for_rs_sends(self):
+        """The fused ring's allgather receives target chunks the RS
+        phase sourced — they must carry the anti-hazard dependency."""
+        s = compile_schedule(_StubComm(4, 0), "allreduce_ring", 4096, 8)
+        rs = [nd for nd in s.nodes if isinstance(nd, RecvOp)
+              and nd.round < 3]
+        ag = [nd for nd in s.nodes if isinstance(nd, RecvOp)
+              and nd.round >= 3]
+        assert all(not nd.deps for nd in rs)
+        assert all(nd.deps for nd in ag)
+        assert s.max_recvs_per_peer() == 6   # all from `left`
+
+    def test_reduce_sum_of_reduceops_covers_children(self):
+        s = compile_schedule(_StubComm(7, 0), "reduce", 512, 8, root=0)
+        # root of 7 ranks folds in children 1, 2, 4 -> three ReduceOps
+        assert sum(isinstance(nd, ReduceOp) for nd in s.nodes) == 3
+
+
+# --------------------------------------------------------------------------
+# nonblocking collectives over the shared progress engine
+# --------------------------------------------------------------------------
+
+class TestNonblockingCollectives:
+    @pytest.mark.parametrize("n,nelem,algo", [(2, 31, "rd"),
+                                              (3, 4000, "ring"),
+                                              (4, 4000, "rd")])
+    def test_iallreduce_with_injected_compute(self, n, nelem, algo):
+        """Compute between start and wait, ticking comm.progress() —
+        the overlap usage pattern — still reduces correctly."""
+        def prog(env):
+            x = (np.arange(nelem, dtype=np.float64) + 1) * (env.rank + 1)
+            req = env.comm.iallreduce(x, algo=algo)
+            acc = np.zeros(64)
+            for i in range(50):              # injected compute
+                acc += np.sin(acc + i)
+                env.comm.progress()
+            out = req.wait(60)
+            return out, acc
+
+        exp = (np.arange(nelem, dtype=np.float64) + 1) * sum(
+            range(1, n + 1))
+        for out, _ in run_threads(n, prog, cell_size=CELL,
+                                  pool_bytes=32 << 20, timeout=120):
+            assert np.allclose(out, exp)
+
+    def test_ibcast_in_place(self):
+        def prog(env):
+            buf = (np.arange(5000.0) if env.rank == 1
+                   else np.zeros(5000))
+            out = env.comm.ibcast(buf, root=1).wait(60)
+            assert out is buf                # in-place MPI semantics
+            return buf
+
+        for out in run_threads(3, prog, cell_size=CELL,
+                               pool_bytes=32 << 20, timeout=120):
+            assert np.allclose(out, np.arange(5000.0))
+
+    def test_iallgather_ireduce_scatter_ibarrier(self):
+        n = 4
+
+        def prog(env):
+            c = env.comm
+            g = c.iallgather(np.full(700, float(env.rank))).wait(60)
+            rs = c.ireduce_scatter(np.arange(8.0) + env.rank).wait(60)
+            c.ibarrier().wait(60)
+            return g, rs
+
+        res = run_threads(n, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          timeout=120)
+        full = sum(np.arange(8.0) + r for r in range(n))
+        for r, (g, rs) in enumerate(res):
+            assert np.allclose(g.reshape(n, -1)[2], 2.0)
+            k = 2 * ((r + 1) % n)
+            assert np.allclose(rs, full[k:k + 2])
+
+    def test_concurrent_collectives_disjoint_tags(self):
+        """Three collectives in flight at once on one communicator:
+        per-launch tag windows keep their rounds apart."""
+        def prog(env):
+            c = env.comm
+            r1 = c.iallreduce(np.full(3000, float(env.rank + 1)))
+            r2 = c.iallgather(np.array([env.rank * 7.0]))
+            r3 = c.ibarrier()
+            c.waitall([r1, r2, r3], timeout=60)
+            return r1.result, r2.result
+
+        for a, g in run_threads(3, prog, cell_size=CELL,
+                                pool_bytes=32 << 20, timeout=120):
+            assert np.allclose(a, 6.0)
+            assert np.allclose(g, [0.0, 7.0, 14.0])
+
+    def test_collectives_isolated_from_any_tag_recv(self):
+        """An outstanding ANY_TAG user receive must not swallow
+        collective rounds: reserved tags are excluded from wildcard
+        matching (both queue matching and matchbox wildcard entries)."""
+        def prog(env):
+            c = env.comm
+            peer = 1 - env.rank
+            ur = c.irecv(peer, tag=-1)       # ANY_TAG, posted FIRST
+            a = c.iallreduce(np.full(4000, float(env.rank + 1)))
+            c.ibarrier().wait(60)
+            out = a.wait(60)
+            c.send(peer, b"user-payload", tag=3)
+            data = ur.wait(60)
+            return out[0], data
+
+        for s, data in run_threads(2, prog, cell_size=CELL,
+                                   pool_bytes=32 << 20, timeout=120):
+            assert s == 3.0
+            assert data == b"user-payload"
+
+    def test_free_function_shims_match_methods(self):
+        """The deprecated free functions route through the SAME
+        schedules (heap backend) and agree with the method results."""
+        from repro.core import collectives as coll
+
+        def prog(env):
+            x = np.arange(600.0) * (env.rank + 1)
+            a = coll.allreduce(env.comm, x, algo="ring")
+            b = env.comm.allreduce(x, algo="ring")
+            return np.allclose(a, b)
+
+        assert all(run_threads(3, prog, cell_size=CELL,
+                               pool_bytes=32 << 20, timeout=120))
+
+
+# --------------------------------------------------------------------------
+# persistent collectives: round-synchronized pre-post
+# --------------------------------------------------------------------------
+
+class TestPersistentCollectives:
+    @pytest.mark.parametrize("n,algo", [(2, "rd"), (3, "ring"),
+                                        (4, "rd")])
+    def test_allreduce_init_iterations(self, n, algo):
+        iters = 5
+
+        def prog(env):
+            c = env.comm
+            x = np.zeros(3000)
+            req = c.allreduce_init(x, algo=algo)
+            h0, r0 = c.posted_sends, c.rndv_sends
+            vals = []
+            slots = []
+            for i in range(iters):
+                x[:] = float(i * (env.rank + 1))
+                vals.append(float(req.start().wait(60)[0]))
+                c.barrier()
+                slots.append(env.arena.stats()["slots_used"])
+            hits, rndv = c.posted_sends - h0, c.rndv_sends - r0
+            c.barrier()      # peers may still be reading slot counts
+            req.free()
+            return vals, hits, rndv, slots
+
+        res = run_threads(n, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          comm_kw={"matchbox_slots": 16}, timeout=120)
+        exp = [i * sum(range(1, n + 1)) for i in range(iters)]
+        for vals, hits, rndv, slots in res:
+            assert vals == [float(v) for v in exp]
+            # deterministic 100% posted-hit rate (matchbox sized to
+            # 2x schedule depth), flat arena footprint across rounds
+            assert hits == rndv and rndv >= iters
+            assert len(set(slots)) == 1
+
+    def test_heap_persistent_survives_restarts(self):
+        """Non-resident pools (incoherent mode) run persistent
+        collectives on heap slot sets; release() after an iteration
+        must leave the caller-owned double buffers intact for the
+        next start()."""
+        def prog(env):
+            assert not env.comm._resident
+            x = np.zeros(2000)
+            req = env.comm.allreduce_init(x, algo="rd")
+            vals = []
+            for i in range(3):
+                x[:] = float(i * (env.rank + 1))
+                vals.append(float(req.start().wait(60)[0]))
+            env.comm.barrier()
+            req.free()
+            return vals
+
+        res = run_threads(2, prog, coherent=False, cell_size=CELL,
+                          pool_bytes=32 << 20, timeout=120)
+        assert res[0] == res[1] == [0.0, 3.0, 6.0]
+
+    def test_matchbox_demand_and_free(self):
+        def prog(env):
+            c = env.comm
+            before = env.arena.stats()["slots_used"]
+            c.barrier()
+            req = c.allreduce_init(np.zeros(2000), algo="rd")
+            assert req.matchbox_demand == 2   # rd: 1 recv/peer, 2 parities
+            req.start().wait(60)
+            req.free()
+            c.barrier()
+            return env.arena.stats()["slots_used"] - before
+
+        assert all(d == 0 for d in run_threads(2, prog, cell_size=CELL,
+                                               pool_bytes=32 << 20,
+                                               timeout=120))
+
+    def test_capacity_misses_counted(self):
+        """matchbox_slots=1: the second postable receive from one
+        source finds the strip full — counted in ProtocolStats so the
+        sizing policy has a signal."""
+        def prog(env):
+            c = env.comm
+            if env.rank == 1:
+                d1, d2 = c.alloc_buffer(8000), c.alloc_buffer(8000)
+                r1 = c.irecv_into(0, d1, tag=1)
+                r2 = c.irecv_into(0, d2, tag=2)   # strip already full
+                misses = env.arena.view.stats.mb_capacity_misses
+                c.send(0, b"", tag=9)
+                r1.wait(60)
+                r2.wait(60)
+                return misses
+            c.recv(1, tag=9)
+            c.send(1, bytes(8000), tag=1)
+            c.send(1, bytes(8000), tag=2)
+            return 0
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          comm_kw={"matchbox_slots": 1}, timeout=120)
+        assert res[1] >= 1
+
+    def test_matchbox_slots_param_reaches_strips(self):
+        def prog(env):
+            assert env.comm.mb_slots == 7
+            assert env.comm._mb.n_slots == 7
+            env.comm.barrier()
+            return True
+
+        assert all(run_threads(2, prog, cell_size=CELL,
+                               comm_kw={"matchbox_slots": 7}))
+
+
+# --------------------------------------------------------------------------
+# mixed-request wait helpers
+# --------------------------------------------------------------------------
+
+class TestWaitHelpers:
+    def test_waitall_mixed_kinds(self):
+        def prog(env):
+            c = env.comm
+            peer = 1 - env.rank
+            sreq = c.isend(peer, np.full(2000, float(env.rank)), tag=5)
+            rbuf = np.zeros(2000)
+            rreq = c.irecv_into(peer, rbuf, tag=5)
+            coll = c.iallreduce(np.full(100, 1.0))
+            ps = c.send_init(peer, np.full(50, 2.0), tag=6).start()
+            pr_buf = np.zeros(50)
+            pr = c.recv_init(peer, pr_buf, tag=6).start()
+            c.waitall([sreq, rreq, coll, ps, pr], timeout=60)
+            return float(rbuf[0]), float(coll.result[0]), float(pr_buf[0])
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          timeout=120)
+        assert res[0] == (1.0, 2.0, 2.0)
+        assert res[1] == (0.0, 2.0, 2.0)
+
+    def test_waitany_returns_first_completed(self):
+        def prog(env):
+            c = env.comm
+            if env.rank == 0:
+                late = c.irecv(1, tag=42)    # unsendable until go-ahead
+                bar = c.ibarrier()
+                i, req = c.waitany([late, bar], timeout=60)
+                assert i == 1 and req is bar
+                c.send(1, b"go", tag=43)
+                return late.wait(60)
+            c.ibarrier().wait(60)
+            go, _ = c.recv(0, tag=43)
+            c.send(0, b"late", tag=42)
+            return go
+
+        res = run_threads(2, prog, cell_size=CELL, timeout=120)
+        assert res[0] == b"late" and res[1] == b"go"
+
+    def test_testall(self):
+        def prog(env):
+            c = env.comm
+            reqs = [c.ibarrier(), c.iallreduce(np.ones(10))]
+            while not c.testall(reqs):
+                pass
+            return float(reqs[1].result[0])
+
+        assert run_threads(2, prog, cell_size=CELL) == [2.0, 2.0]
+
+
+# --------------------------------------------------------------------------
+# real-peer eager-threshold probe
+# --------------------------------------------------------------------------
+
+class TestRealPeerProbe:
+    def test_pairs_probe_against_peer(self):
+        def prog(env):
+            c = env.comm
+            assert isinstance(c.eager_threshold, int)
+            assert c.eager_threshold >= 64
+            # the wire still works after probing
+            peer = 1 - env.rank
+            c.send(peer, b"y" * (CELL * 2), tag=1)
+            data, _ = c.recv(peer, tag=1)
+            return c.probe_mode, len(data)
+
+        res = run_threads(2, prog, cell_size=CELL,
+                          eager_threshold="auto", pool_bytes=32 << 20,
+                          timeout=120)
+        assert all(m == "peer" for m, _ in res)
+        assert all(ln == CELL * 2 for _, ln in res)
+
+    def test_odd_rank_falls_back_to_local(self):
+        def prog(env):
+            env.comm.barrier()
+            return env.comm.probe_mode
+
+        res = run_threads(3, prog, cell_size=CELL,
+                          eager_threshold="auto", pool_bytes=32 << 20,
+                          timeout=120)
+        assert res[0] == "peer" and res[1] == "peer"
+        assert res[2] == "local"
+
+
+# --------------------------------------------------------------------------
+# reserved tag space + cancel semantics (review regressions)
+# --------------------------------------------------------------------------
+
+class TestReservedTagFence:
+    def test_user_tags_in_reserved_space_rejected(self):
+        def prog(env):
+            with pytest.raises(ValueError, match="reserved"):
+                env.comm.isend(1 - env.rank, b"x", tag=0x7E000001)
+            with pytest.raises(ValueError, match="reserved"):
+                env.comm.irecv(1 - env.rank, tag=0x7F000010)
+            env.comm.barrier()
+            return True
+
+        assert all(run_threads(2, prog, cell_size=CELL))
+
+    def test_cancel_is_observable(self):
+        def prog(env):
+            if env.rank == 0:
+                req = env.comm.irecv(1, tag=9)
+                req.cancel()
+                assert req.done and req.cancelled
+                assert req.data is None
+                env.comm.barrier()
+                return True
+            env.comm.barrier()
+            return True
+
+        assert all(run_threads(2, prog, cell_size=CELL))
+
+    def test_ibcast_rejects_noncontiguous(self):
+        def prog(env):
+            a = np.zeros((8, 8))[:, :4]          # non-C-contiguous
+            with pytest.raises(ValueError, match="contiguous"):
+                env.comm.ibcast(a, root=0)
+            env.comm.barrier()
+            return True
+
+        assert all(run_threads(2, prog, cell_size=CELL))

@@ -158,3 +158,41 @@ class TestRMA:
             return True
 
         assert all(run_threads(2, prog, pool_bytes=8 << 20))
+
+
+class TestAccumulateUnderSharedLock:
+    def test_accumulate_excluded_by_shared_holders(self):
+        """MPI_Accumulate takes the window lock EXCLUSIVELY; concurrent
+        lock(shared=True) holders must see the two accumulated cells
+        move in lockstep — a reader holding the shared lock can never
+        observe a half-applied accumulate (get+op+put torn in the
+        middle), and the final totals are exact."""
+        iters = 20
+
+        def prog(env):
+            win = env.comm.win_allocate("wacc", 64)
+            win.fence()
+            if env.rank == 0:
+                win.put(0, 0, np.zeros(2).tobytes())
+            win.fence()
+            if env.rank in (0, 1):           # accumulators
+                for _ in range(iters):
+                    win.accumulate(0, 0, np.array([1.0, 1.0]))
+                win.fence()
+                return None
+            tears = 0                        # concurrent shared readers
+            for _ in range(iters * 3):
+                win.lock(shared=True)
+                pair = np.frombuffer(win.get(0, 0, 16))
+                win.unlock(shared=True)
+                if pair[0] != pair[1]:
+                    tears += 1
+            win.fence()
+            final = np.frombuffer(win.get(0, 0, 16))
+            return tears, final.copy()
+
+        res = run_threads(4, prog, pool_bytes=8 << 20, timeout=120)
+        for out in res[2:]:
+            tears, final = out
+            assert tears == 0                # no torn accumulate seen
+            assert np.allclose(final, [2.0 * iters, 2.0 * iters])
