@@ -65,12 +65,18 @@ class ProtocolStats:
     # descriptors and arena metadata stay unattributed.
     path_copied_bytes: dict = field(default_factory=lambda: {
         "eager": 0, "rndv_staged": 0, "rndv_posted": 0})
-    # receives that wanted to publish a matchbox posting but found every
-    # strip slot occupied (counted once per receive): the signal the
-    # matchbox sizing policy uses — pre-posted schedules size
-    # ``Communicator(matchbox_slots=...)`` to their schedule depth, and
-    # a non-zero miss count says the strips are too shallow for the
-    # posting pattern in flight
+    # postable receives whose matchbox posting was still waiting in the
+    # per-pair OVERFLOW list when a fallback (eager/staged/parked)
+    # delivery completed them — i.e. capacity cost the receive its
+    # one-copy path. Postings that spill but get PROMOTED before their
+    # payload arrives are not misses (chunked pre-post bursts through
+    # shallow strips legitimately measure 0): a non-zero count says the
+    # strips are too shallow for the posting pattern in flight. This is
+    # a RECEIVER-side signal; a sender that raced past a not-yet-
+    # promoted entry and fell back to staged shows up in the sender's
+    # ``posted_sends``/``rndv_sends`` hit ratio instead (the complement
+    # the benchmarks gate on) — read both when sizing
+    # ``Communicator(matchbox_slots=...)``.
     mb_capacity_misses: int = 0
 
     def lines(self, n: int) -> int:
@@ -113,8 +119,9 @@ class CoherentView:
         self.stats.path_copied_bytes[path] += nbytes
 
     def count_mb_miss(self) -> None:
-        """Report a matchbox capacity miss: a postable receive found its
-        (src, dst) strip full and stayed on the staged/eager paths."""
+        """Report a matchbox capacity miss: a postable receive's spilled
+        posting never reached the strip before a fallback delivery
+        completed it (the strips are too shallow for the pattern)."""
         self.stats.mb_capacity_misses += 1
 
     def write_release(self, off: int, data) -> None:

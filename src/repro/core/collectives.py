@@ -55,13 +55,67 @@ def auto_allreduce_algo(n: int, nelem: int) -> str:
     return "rd" if (_is_pow2(n) and nelem < 4096) else "ring"
 
 
+def auto_chunk_bytes(comm, nbytes: int) -> int | None:
+    """The ``chunk_bytes="auto"`` policy. Two forces bound the chunk:
+
+    * FLOOR — 8x the probed eager/posted crossover (64 KiB minimum):
+      every sub-message must sit well inside one-copy rendezvous
+      territory, where the descriptor + matchbox round-trip amortizes
+      (measured: 128 KiB chunks at 8 MiB run as slow as unchunked —
+      per-message overhead eats the pipeline).
+    * DEPTH CAP — nbytes/8: at most ~8 chunks per payload. Pipelining
+      saturates at a handful of in-flight chunks; beyond that, extra
+      sub-messages only add posting/claim traffic.
+
+    Payloads under two chunks have nothing to pipeline — None keeps
+    them message-granular.
+
+    The probe basis must be RANK-AGREED: chunk counts become sub-round
+    wire tags, and per-rank probes (``eager_threshold="auto"``) may
+    measure different crossovers. ``Comm`` exposes the agreed maximum
+    (``_chunk_probe_base``, a one-time collective); bare communicators
+    fall back to the local value (their thresholds are constructor
+    arguments, identical on every rank by construction)."""
+    if nbytes <= 2 * 64 * 1024:
+        # the 64 KiB floor alone forces None here — decide before the
+        # (blocking, collective) probe agreement below, which would
+        # stall a nonblocking call for a provably-None answer. Exact
+        # and rank-uniform: nbytes agrees across ranks by MPI contract.
+        return None
+    agree = getattr(comm, "_chunk_probe_base", None)
+    if agree is not None:
+        base = agree()
+    else:
+        base = (getattr(comm, "probed_crossover", None)
+                or comm.eager_threshold)
+    cb = max(64 * 1024, 8 * int(base), nbytes // 8)
+    return cb if nbytes > 2 * cb else None
+
+
+def _resolve_chunk(comm, chunk_bytes, nbytes: int) -> int | None:
+    return (auto_chunk_bytes(comm, nbytes) if chunk_bytes == "auto"
+            else chunk_bytes)
+
+
+def bruck_to_rank_order(work: np.ndarray, rank: int, n: int
+                        ) -> np.ndarray:
+    """Bruck allgather accumulates blocks contiguously in BRUCK order
+    (own block first, then +k neighbours): rotate ``work`` (n rows, one
+    per block) back to rank order. Shared by the one-shot launcher and
+    the persistent init — one definition of the block layout."""
+    out = np.empty_like(work)
+    for i in range(n):
+        out[(rank + i) % n] = work[i]
+    return out.reshape(-1)
+
+
 def shards_to_chunk_order(flat: np.ndarray, n: int) -> np.ndarray:
     """After a ring reduce-scatter + allgather, rank i's reduced shard is
     CHUNK (i+1) % n of the padded payload — reorder the allgathered flat
-    vector from rank order into chunk order. (The FUSED ring allreduce
-    schedule receives chunks in place and never needs this; it remains
-    for compositions that allgather a reduce-scattered shard, e.g. the
-    hierarchical allreduce.)"""
+    vector from rank order into chunk order. (The FUSED ring and fused
+    hierarchical allreduce schedules receive chunks in place and never
+    need this; it remains a utility for hand-rolled RS+AG
+    compositions.)"""
     per = flat.size // n
     parts = [flat[i * per:(i + 1) * per] for i in range(n)]
     return np.concatenate([parts[(c - 1) % n] for c in range(n)])
@@ -96,20 +150,21 @@ def immediate(comm: Communicator, result) -> CollRequest:
 
 
 def icoll_allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
-                    algo: str = "ring",
-                    resident: bool = False) -> CollRequest:
+                    algo: str = "ring", resident: bool = False,
+                    chunk_bytes=None) -> CollRequest:
     arr = np.ascontiguousarray(arr)
     if comm.size == 1:
         return immediate(comm, arr.copy())
+    cb = _resolve_chunk(comm, chunk_bytes, arr.nbytes)
     shape, dtype, count = arr.shape, arr.dtype, arr.size
     if algo == "rd":
         sched = compile_schedule(comm, "allreduce_rd", arr.nbytes,
-                                 arr.dtype.itemsize)
+                                 arr.dtype.itemsize, chunk_bytes=cb)
         fin = (lambda b: np.array(b.ndview(sched.result, dtype))
                .reshape(shape))
     else:
         sched = compile_schedule(comm, "allreduce_ring", arr.nbytes,
-                                 arr.dtype.itemsize)
+                                 arr.dtype.itemsize, chunk_bytes=cb)
         # fused RS+AG: slot 0 finishes in CHUNK order — truncate the
         # zero padding and reshape, no reorder pass
         fin = (lambda b: np.array(b.ndview(sched.result, dtype)[:count])
@@ -119,14 +174,38 @@ def icoll_allreduce(comm: Communicator, arr: np.ndarray, op=np.add,
     return _launch(comm, sched, bufs, dtype, op, fin)
 
 
+def icoll_allreduce_hier(comm: Communicator, arr: np.ndarray, op=np.add,
+                         group: int = 2, resident: bool = False,
+                         chunk_bytes=None) -> CollRequest:
+    """Nonblocking hierarchical allreduce: ONE fused schedule (intra
+    ring RS -> inter recursive doubling -> intra ring AG) over the
+    parent communicator — no sub-communicators, no phase barriers."""
+    arr = np.ascontiguousarray(arr)
+    if comm.size == 1:
+        return immediate(comm, arr.copy())
+    cb = _resolve_chunk(comm, chunk_bytes, arr.nbytes)
+    shape, dtype, count = arr.shape, arr.dtype, arr.size
+    sched = compile_schedule(comm, "allreduce_hier", arr.nbytes,
+                             arr.dtype.itemsize, group=group,
+                             chunk_bytes=cb)
+    fin = (lambda b: np.array(b.ndview(sched.result, dtype)[:count])
+           .reshape(shape))
+    bufs = _make_bufs(comm, sched, resident)
+    bufs.fill(0, arr, pad_to=sched.slot_sizes[0])
+    return _launch(comm, sched, bufs, dtype, op, fin)
+
+
 def icoll_reduce_scatter(comm: Communicator, arr: np.ndarray, op=np.add,
-                         resident: bool = False) -> CollRequest:
+                         resident: bool = False,
+                         chunk_bytes=None) -> CollRequest:
     arr = np.ascontiguousarray(arr)
     if comm.size == 1:
         return immediate(comm, arr.reshape(-1).copy())
     dtype = arr.dtype
     sched = compile_schedule(comm, "reduce_scatter_ring", arr.nbytes,
-                             arr.dtype.itemsize)
+                             arr.dtype.itemsize,
+                             chunk_bytes=_resolve_chunk(
+                                 comm, chunk_bytes, arr.nbytes))
     bufs = _make_bufs(comm, sched, resident)
     bufs.fill(0, arr, pad_to=sched.slot_sizes[0])
     fin = lambda b: np.array(b.ndview(sched.result, dtype))  # noqa: E731
@@ -134,15 +213,17 @@ def icoll_reduce_scatter(comm: Communicator, arr: np.ndarray, op=np.add,
 
 
 def icoll_allgather(comm: Communicator, shard: np.ndarray,
-                    algo: str = "ring",
-                    resident: bool = False) -> CollRequest:
+                    algo: str = "ring", resident: bool = False,
+                    chunk_bytes=None) -> CollRequest:
     shard = np.ascontiguousarray(shard)
     n, rank = comm.size, comm.rank
     if n == 1:
         return immediate(comm, shard.reshape(-1).copy())
     dtype, per_b = shard.dtype, shard.nbytes
     kind = "allgather_bruck" if algo == "bruck" else "allgather_ring"
-    sched = compile_schedule(comm, kind, per_b, shard.dtype.itemsize)
+    sched = compile_schedule(comm, kind, per_b, shard.dtype.itemsize,
+                             chunk_bytes=_resolve_chunk(
+                                 comm, chunk_bytes, per_b))
     bufs = _make_bufs(comm, sched, resident)
     # own shard: bruck block 0, ring chunk `rank`
     bufs.fill_at(0, 0 if algo == "bruck" else rank * per_b, shard)
@@ -151,17 +232,15 @@ def icoll_allgather(comm: Communicator, shard: np.ndarray,
 
         def fin(b):
             work = np.array(b.ndview(sched.result, dtype)).reshape(n, per)
-            out = np.empty_like(work)
-            for i in range(n):           # bruck order -> rank order
-                out[(rank + i) % n] = work[i]
-            return out.reshape(-1)
+            return bruck_to_rank_order(work, rank, n)
     else:
         fin = lambda b: np.array(b.ndview(sched.result, dtype))  # noqa: E731
     return _launch(comm, sched, bufs, dtype, None, fin)
 
 
 def icoll_bcast_known(comm: Communicator, arr: np.ndarray, root: int = 0,
-                      resident: bool = False) -> CollRequest:
+                      resident: bool = False,
+                      chunk_bytes=None) -> CollRequest:
     """ibcast with the payload buffer KNOWN on every rank (MPI
     semantics: same shape/dtype everywhere; non-root buffers are
     overwritten in place). The heap backend aliases slot 0 to the user
@@ -176,8 +255,12 @@ def icoll_bcast_known(comm: Communicator, arr: np.ndarray, root: int = 0,
                          "(the payload is delivered in place)")
     if comm.size == 1:
         return immediate(comm, arr)
+    # a chunked bcast PIPELINES the binomial tree: an interior rank
+    # forwards chunk c to its children the moment chunk c lands
     sched = compile_schedule(comm, "bcast", arr.nbytes,
-                             arr.dtype.itemsize, root=root)
+                             arr.dtype.itemsize, root=root,
+                             chunk_bytes=_resolve_chunk(
+                                 comm, chunk_bytes, arr.nbytes))
     # a leaf (no forwarding sends) gains nothing from a round buffer —
     # it would just pay an extra pool -> user drain
     resident = resident and any(isinstance(nd, SendOp)

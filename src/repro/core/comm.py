@@ -20,11 +20,15 @@ communicator object:
   derive new communicators over the SAME arena with namespaced queue
   matrices and remapped ranks (``sub.parent_ranks`` maps sub-rank ->
   parent rank). Tag spaces are disjoint by construction: each derived
-  comm owns its own SPSC queue matrix. This enables the hierarchical
-  allreduce (``algo="hier"``): intra-group ring reduce-scatter,
-  inter-group recursive doubling on the shards, intra-group ring
-  allgather — selected automatically for large payloads on composite
-  communicator sizes.
+  comm owns its own SPSC queue matrix.
+
+* **Hierarchical allreduce** — ``comm.ihier_allreduce`` compiles
+  intra-group ring reduce-scatter -> inter-group recursive doubling ->
+  intra-group ring allgather into ONE fused schedule over the parent
+  communicator (no sub-comm phase barriers), auto-selected by
+  ``allreduce``/``iallreduce`` for large payloads on hier-shaped
+  sizes. ``chunk_bytes`` (int or ``"auto"``) additionally pipelines
+  every large round at chunk granularity — see ``core/sched.py``.
 
 * **Persistent requests** (MPI-4 style) — ``comm.send_init`` /
   ``comm.recv_init`` return a ``PersistentRequest`` whose
@@ -44,13 +48,14 @@ name) remains importable from ``repro.core`` as deprecation shims.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from repro.core import collectives as _coll
 from repro.core.arena import Arena, _hash_name
-from repro.core.collectives import _is_pow2, shards_to_chunk_order
+from repro.core.collectives import _is_pow2
 from repro.core.pool import Registration, as_u8
 from repro.core.progress import (CollRequest, _DEFAULT_TIMEOUT, _HeapBufs,
                                  _ResidentBufs, _SchedExec)
@@ -72,15 +77,23 @@ def _derived_name(parent: str, suffix: str) -> str:
     return name
 
 
-def _best_group(n: int) -> int:
-    """Largest divisor of n no larger than sqrt(n) (1 if n is prime)."""
-    g = 1
-    d = 2
-    while d * d <= n:
-        if n % d == 0:
-            g = d
-        d += 1
-    return g
+def _hier_group(n: int, group_size: int | None = None) -> int | None:
+    """Group size for the FUSED hierarchical allreduce schedule: must
+    divide n with a power-of-two group COUNT (the inter phase is
+    recursive doubling), 2 <= g < n. Auto picks the valid divisor
+    closest to sqrt(n). None when no valid grouping exists (primes,
+    odd composites without a power-of-two cofactor, or an explicit
+    ``group_size`` the fused schedule cannot honor) — those cases run
+    single-level."""
+    if group_size is not None:
+        g = int(group_size)
+        if g < 2 or g >= n or n % g or not _is_pow2(n // g):
+            return None
+        return g
+    cands = [g for g in range(2, n) if n % g == 0 and _is_pow2(n // g)]
+    if not cands:
+        return None
+    return min(cands, key=lambda g: abs(g - n ** 0.5))
 
 
 class _RoundPool:
@@ -281,7 +294,8 @@ def startall(reqs: list) -> list:
 
 
 class PersistentCollRequest:
-    """MPI-4 persistent collective (``comm.allreduce_init(...)``).
+    """MPI-4 persistent collective (``comm.allreduce_init(...)``,
+    ``comm.bcast_init(...)``, ``comm.allgather_init(...)``).
 
     The schedule is compiled ONCE at init; buffers are dedicated,
     DOUBLE-BUFFERED pool-resident sets (parity = iteration mod 2); and
@@ -289,16 +303,22 @@ class PersistentCollRequest:
     round-synchronized pre-post handshake that turns PR 3's
     opportunistic matchbox hits into deterministic ones:
 
-    * ``allreduce_init`` (collective) posts iteration 0's receives on
-      every rank, then barriers — entries exist before any rank can
+    * ``*_init`` (collective) posts iteration 0's receives on every
+      rank, then barriers — entries exist before any rank can
       ``start()``.
     * ``start(k)`` posts iteration k+1's receives (parity-swapped
       buffers, parity-salted tags) BEFORE issuing any iteration-k send.
-      A peer can only reach its iteration-k+1 sends after its
-      ``wait(k)`` — which requires receiving data this rank sent in
-      iteration k, i.e. after this rank's ``start(k)`` pre-posts. So
-      every rendezvous send of every iteration finds its posted entry:
-      a 100% posted-hit rate, asserted in ``fig5_8_osu --smoke``.
+
+    For CYCLIC schedules — allreduce, ring allgather — a peer can only
+    reach its iteration-k+1 sends after its ``wait(k)``, which requires
+    receiving data this rank sent in iteration k, i.e. after this
+    rank's ``start(k)`` pre-posts. So every rendezvous send of every
+    iteration finds its posted entry: a 100% posted-hit rate, asserted
+    in ``fig5_8_osu --smoke``. A persistent BCAST has no such cycle
+    (the root never receives, so it can outrun a slow subtree by more
+    than one iteration); its pre-posting is best-effort — correctness
+    is untouched (per-pair FIFO keeps iterations ordered; overruns fall
+    back to the staged path), only the hit rate is opportunistic.
 
     Cross-iteration buffer safety: an iteration-k+1 entry may only be
     claimed by a peer already executing iteration k+1, and any send of
@@ -308,43 +328,96 @@ class PersistentCollRequest:
 
     Sizing: full determinism needs ``matchbox_slots >= 2 *
     max-receives-per-peer`` (two iterations' entries coexist) —
-    exposed as ``.matchbox_demand``; shallower strips degrade
-    gracefully to staged fallback (counted in
+    exposed as ``.matchbox_demand``; shallower strips spill postings to
+    the per-pair overflow list and promote them FIFO (misses only when
+    a payload outruns its promotion, counted in
     ``ProtocolStats.mb_capacity_misses``).
 
     The bound array is captured as a live view: refill it between
-    iterations, never replace it. ``wait()`` returns the reduced array.
+    iterations, never replace it. ``wait()`` returns the collective's
+    result (the reduced array / ``arr`` / the flat gathered payload).
     """
 
     def __init__(self, comm: "Comm", arr: np.ndarray, op=np.add,
-                 algo: str = "auto"):
+                 algo: str = "auto", *, kind: str = "allreduce",
+                 root: int = 0, chunk_bytes=None):
         self._comm = comm
         if not (isinstance(arr, np.ndarray) and arr.flags.c_contiguous):
             # a list or strided array would silently bind a one-time
             # SNAPSHOT — the per-iteration refills the live-view
             # contract promises would never be seen
-            raise ValueError("allreduce_init needs a C-contiguous "
+            raise ValueError(f"{kind}_init needs a C-contiguous "
                              "ndarray (it is re-read on every start())")
         self._arr = arr
+        self.kind = kind
         self.op = op
-        if algo == "auto":
-            # same cutoff as every other allreduce surface; recursive
-            # doubling additionally doubles the dedicated buffer
-            # memory here, so large persistent payloads ride the ring
-            algo = _coll.auto_allreduce_algo(comm.size, arr.size)
+        self.root = root
+        n = comm.size
+        rank = comm.rank
+        if kind == "allreduce":
+            if algo == "auto":
+                # same cutoff as every other allreduce surface;
+                # recursive doubling additionally doubles the dedicated
+                # buffer memory here, so large persistent payloads ride
+                # the ring
+                algo = _coll.auto_allreduce_algo(n, arr.size)
+            sched_kind = ("allreduce_rd" if algo == "rd"
+                          else "allreduce_ring")
+        elif kind == "allgather":
+            if algo == "auto":
+                algo = "bruck" if n >= 8 else "ring"
+            sched_kind = ("allgather_bruck" if algo == "bruck"
+                          else "allgather_ring")
+        elif kind == "bcast":
+            algo = "binomial"
+            sched_kind = "bcast"
+        else:
+            raise ValueError(f"unknown persistent collective: {kind}")
         self.algo = algo
         self.started = 0
         self._iter = 0
         self._active: Optional[CollRequest] = None
         self.matchbox_demand = 0
-        n = comm.size
         if n == 1:
             self._sched = None
             return
-        kind = "allreduce_rd" if algo == "rd" else "allreduce_ring"
-        self._sched = compile_schedule(comm, kind, self._arr.nbytes,
-                                       self._arr.dtype.itemsize)
+        self._sched = compile_schedule(
+            comm, sched_kind, arr.nbytes, arr.dtype.itemsize, root=root,
+            chunk_bytes=_coll._resolve_chunk(comm, chunk_bytes,
+                                             arr.nbytes))
         self.matchbox_demand = 2 * self._sched.max_recvs_per_peer()
+        # per-iteration fill + finalize, fixed at init like the wire plan
+        sched = self._sched
+        shape, dtype, count = arr.shape, arr.dtype, arr.size
+        if kind == "allreduce":
+            self._fill = lambda b: b.fill(0, arr,
+                                          pad_to=sched.slot_sizes[0])
+
+            def fin(b):
+                flat = b.ndview(sched.result, dtype)[:count]
+                return np.array(flat).reshape(shape)
+        elif kind == "allgather":
+            per_b = arr.nbytes
+            off = 0 if algo == "bruck" else rank * per_b
+            self._fill = lambda b: b.fill_at(0, off, arr)
+            if algo == "bruck":
+                def fin(b):
+                    work = np.array(b.ndview(sched.result, dtype)) \
+                        .reshape(n, count)
+                    return _coll.bruck_to_rank_order(work, rank, n)
+            else:
+                fin = lambda b: np.array(          # noqa: E731
+                    b.ndview(sched.result, dtype))
+        else:                                # bcast
+            u8 = arr.reshape(-1).view(np.uint8)
+            self._fill = ((lambda b: b.fill(0, arr)) if rank == root
+                          else (lambda b: None))
+
+            def fin(b):
+                if rank != root:
+                    u8[:] = b.ndview(sched.result, np.uint8)
+                return arr
+        self._fin = fin
         self._resident = comm._resident
         # parity-salted tag windows: both iterations' receives are
         # posted concurrently, so their tags must differ
@@ -401,7 +474,10 @@ class PersistentCollRequest:
                                "wait() before restarting")
         comm = self._comm
         if self._sched is None:          # size-1 communicator
-            self._active = _coll.immediate(comm, self._arr.copy())
+            result = (self._arr if self.kind == "bcast"
+                      else self._arr.reshape(-1).copy()
+                      if self.kind == "allgather" else self._arr.copy())
+            self._active = _coll.immediate(comm, result)
             self.started += 1
             return self
         k = self._iter
@@ -416,18 +492,10 @@ class PersistentCollRequest:
         slots = self._sets[p]
         bufs = (_ResidentBufs(slots) if self._resident
                 else _HeapBufs.from_slots(slots))
-        bufs.fill(0, self._arr, pad_to=self._sched.slot_sizes[0])
-        shape, dtype = self._arr.shape, self._arr.dtype
-        count = self._arr.size
-        res = self._sched.result
-
-        def fin(b):
-            flat = b.ndview(res, dtype)[:count]
-            return np.array(flat).reshape(shape)
-
+        self._fill(bufs)
         ex = _SchedExec(comm, self._sched, bufs, self._bases[p],
-                        dtype=dtype, op=self.op, finalize=fin,
-                        bound_recvs=cur)
+                        dtype=self._arr.dtype, op=self.op,
+                        finalize=self._fin, bound_recvs=cur)
         comm._engine.add_coll(ex)
         self._active = CollRequest(comm, ex)
         self.started += 1
@@ -484,9 +552,9 @@ class Comm(Communicator):
                          mb_slots=mb_slots, matchbox_slots=matchbox_slots,
                          name=name, open_timeout=open_timeout)
         self._derived_seq = 0
-        self._hier_cache: dict[int, tuple["Comm", "Comm"]] = {}
         self._rounds = _RoundPool(self)
         self._resident_ok: Optional[bool] = None
+        self._chunk_base: Optional[int] = None
         # sub-rank -> parent-comm rank (identity for a root communicator)
         self.parent_ranks: tuple[int, ...] = tuple(range(size))
         self.probed_crossover: Optional[int] = None
@@ -498,6 +566,26 @@ class Comm(Communicator):
         """Schedule-execution hook (core/collectives launch layer):
         borrow a pool-resident slot set from the round pool."""
         return self._rounds.lease(slot_sizes)
+
+    def _chunk_probe_base(self) -> int:
+        """Rank-AGREED basis for ``chunk_bytes="auto"``: the communicator
+        maximum of each rank's probed crossover (or eager threshold).
+        Per-rank probes may measure different crossovers, but chunk
+        counts become sub-round wire tags, so every rank must derive
+        the SAME chunk size. Resolved by a tiny max-allreduce the first
+        time any collective resolves "auto" — a collective call itself,
+        so every rank reaches it together (the MPI calling convention)
+        — then cached for the communicator's lifetime."""
+        if self._chunk_base is None:
+            mine = float(self.probed_crossover or self.eager_threshold)
+            if self.size == 1:
+                self._chunk_base = int(mine)
+            else:
+                agreed = _coll.icoll_allreduce(
+                    self, np.array([mine]), op=np.maximum,
+                    algo="ring").wait()
+                self._chunk_base = int(agreed[0])
+        return self._chunk_base
 
     # ------------------------------------------------------------------
     # auto-tuned eager threshold (one-shot init-time micro-probe)
@@ -658,21 +746,15 @@ class Comm(Communicator):
         return sub
 
     def free(self) -> None:
-        """Collective MPI_Comm_free: every rank calls it. Frees cached
-        hierarchical sub-communicators (each a collective free over its
-        own group), releases the persistent round buffers, retracts this
-        rank's matchbox postings, fences, and finally destroys the queue
-        matrix / barrier / matchbox / publication arena objects (rank 0,
-        after the fence — no rank is still draining them). Idempotent on
-        every rank; the communicator is unusable afterwards."""
+        """Collective MPI_Comm_free: every rank calls it. Releases the
+        persistent round buffers, retracts this rank's matchbox postings
+        (spilled ones are unlinked first), fences, and finally destroys
+        the queue matrix / barrier / matchbox / publication arena
+        objects (rank 0, after the fence — no rank is still draining
+        them). Idempotent on every rank; the communicator is unusable
+        afterwards."""
         if self._freed:
             return
-        for intra, inter in self._hier_cache.values():
-            if intra is not None:
-                intra.free()
-            if inter is not None:
-                inter.free()
-        self._hier_cache.clear()
         self._rounds.free_all()
         super().free()
 
@@ -687,15 +769,43 @@ class Comm(Communicator):
         return PersistentRequest(self, "recv", src, buf, tag)
 
     def allreduce_init(self, arr: np.ndarray, op=np.add,
-                       algo: str = "auto") -> PersistentCollRequest:
+                       algo: str = "auto",
+                       chunk_bytes=None) -> PersistentCollRequest:
         """MPI_Allreduce_init: a persistent allreduce over dedicated
         double-buffered round buffers whose receives are pre-posted one
         iteration ahead (deterministic posted-rendezvous hits — see
-        ``PersistentCollRequest``). Collective: every rank must call it,
-        in the same order relative to other collectives. For guaranteed
-        100% hits size the communicator's matchbox to the schedule:
+        ``PersistentCollRequest``). ``chunk_bytes`` (int or "auto")
+        pipelines each round at chunk granularity; with the pre-posted
+        entries, chunk sends stay on the one-copy path even when a peer
+        is late — the receiver reduces each chunk as it lands instead
+        of idling until the whole payload arrived. Collective: every
+        rank must call it, in the same order relative to other
+        collectives. For guaranteed 100% hits size the communicator's
+        matchbox to the schedule:
         ``Comm(matchbox_slots=req.matchbox_demand)``."""
-        return PersistentCollRequest(self, arr, op, algo)
+        return PersistentCollRequest(self, arr, op, algo,
+                                     chunk_bytes=chunk_bytes)
+
+    def bcast_init(self, arr: np.ndarray, root: int = 0
+                   ) -> PersistentCollRequest:
+        """MPI_Bcast_init: persistent binomial-tree broadcast over the
+        same double-buffered pre-posting machinery as
+        ``allreduce_init``. ``arr`` must be a C-contiguous ndarray of
+        identical shape/dtype on every rank; the root refills it
+        between iterations, non-roots receive into it in place
+        (``wait()`` returns it). Collective."""
+        return PersistentCollRequest(self, arr, kind="bcast", root=root)
+
+    def allgather_init(self, shard: np.ndarray, algo: str = "auto"
+                       ) -> PersistentCollRequest:
+        """MPI_Allgather_init: persistent all-gather (``algo``: ring |
+        bruck | auto). Refill ``shard`` between iterations; ``wait()``
+        returns the flat rank-ordered concatenation. The ring flavour
+        is cyclic, so its one-iteration-ahead pre-posting gives the
+        same deterministic posted-hit rate as ``allreduce_init``.
+        Collective."""
+        return PersistentCollRequest(self, shard, algo=algo,
+                                     kind="allgather")
 
     # ------------------------------------------------------------------
     # pool-resident collective machinery
@@ -743,15 +853,19 @@ class Comm(Communicator):
         return _coll._bcast_impl(self, arr, root,
                                  use_resident=self._use_resident)
 
-    def ibcast(self, arr: np.ndarray, root: int = 0) -> CollRequest:
+    def ibcast(self, arr: np.ndarray, root: int = 0,
+               chunk_bytes=None) -> CollRequest:
         """Non-blocking broadcast; ``arr`` must be a C-contiguous
         ndarray present with the SAME shape/dtype on every rank (MPI
         ibcast semantics) and is overwritten in place on non-roots
         (non-contiguous buffers are rejected — a silent copy would
-        break the in-place contract). ``wait()`` returns ``arr``."""
+        break the in-place contract). ``chunk_bytes`` pipelines the
+        binomial tree: interior ranks forward each chunk as it lands.
+        ``wait()`` returns ``arr``."""
         return _coll.icoll_bcast_known(
             self, arr, root,
-            resident=self._use_resident(np.asarray(arr).nbytes))
+            resident=self._use_resident(np.asarray(arr).nbytes),
+            chunk_bytes=chunk_bytes)
 
     def reduce(self, arr: np.ndarray, op=np.add, root: int = 0
                ) -> np.ndarray | None:
@@ -761,89 +875,114 @@ class Comm(Communicator):
             resident=self._use_resident(arr.nbytes)).wait()
 
     def allreduce(self, arr: np.ndarray, op=np.add, algo: str = "auto",
-                  group_size: int | None = None) -> np.ndarray:
-        """allreduce with automatic algorithm selection:
-        recursive doubling (small, pow2 sizes), hierarchical (large
-        payloads on composite sizes — intra-group ring + inter-group
-        recursive doubling over split() sub-communicators), fused ring
-        reduce-scatter + allgather otherwise."""
+                  group_size: int | None = None,
+                  chunk_bytes=None) -> np.ndarray:
+        """allreduce with automatic algorithm selection: recursive
+        doubling (small, pow2 sizes), the fused hierarchical schedule
+        (large payloads on hier-shaped sizes), fused ring reduce-scatter
+        + allgather otherwise. ``group_size`` applies to ``algo="hier"``;
+        ``chunk_bytes`` (int or "auto") pipelines large payloads at
+        chunk granularity."""
         arr = np.ascontiguousarray(arr)
-        n = self.size
-        if n == 1:
+        if self.size == 1:
             return arr.copy()
-        if algo == "auto":
-            if n >= 4 and _best_group(n) >= 2 and arr.size >= 4096:
-                algo = "hier"
-            else:
-                algo = _coll.auto_allreduce_algo(n, arr.size)
-        if algo == "hier":
-            return self._allreduce_hier(arr, op, group_size)
-        return self.iallreduce(arr, op, algo).wait()
+        if algo == "hier" or (algo == "auto" and group_size is not None):
+            # an explicit grouping is a hier request: honoring it under
+            # "auto" matches the pre-fused behavior, where auto-selected
+            # hier used the caller's group_size
+            return self.ihier_allreduce(
+                arr, op, group_size=group_size,
+                chunk_bytes=chunk_bytes).wait()
+        return self.iallreduce(arr, op, algo,
+                               chunk_bytes=chunk_bytes).wait()
 
-    def iallreduce(self, arr: np.ndarray, op=np.add,
-                   algo: str = "auto") -> CollRequest:
+    def iallreduce(self, arr: np.ndarray, op=np.add, algo: str = "auto",
+                   chunk_bytes=None) -> CollRequest:
         """Non-blocking allreduce: returns a ``CollRequest`` whose
         ``wait()`` yields the reduced array. Inject compute between
         start and wait — sprinkle ``comm.progress()`` ticks through it
         — and the schedule engine overlaps the round exchanges with it
-        (``benchmarks/fig5_8_osu.py`` measures the overlap
-        efficiency). ``algo``: rd | ring | auto (hierarchical stays
-        blocking-only: it composes sub-communicator phases)."""
+        (``benchmarks/fig5_8_osu.py`` measures the overlap efficiency).
+        ``algo``: rd | ring | hier | auto — auto selects the fused
+        hierarchical schedule on hier-shaped comms (n >= 4 with a
+        power-of-two group count available) for large payloads.
+        ``chunk_bytes`` (int or "auto") re-cuts the schedule so every
+        round's payload pipelines in chunks — "auto" derives the chunk
+        from the init-time eager/posted crossover probe."""
         arr = np.ascontiguousarray(arr)
         if algo == "auto":
-            algo = _coll.auto_allreduce_algo(self.size, arr.size)
+            if self.size >= 4 and arr.size >= 4096 \
+                    and _hier_group(self.size) is not None:
+                algo = "hier"
+            else:
+                algo = _coll.auto_allreduce_algo(self.size, arr.size)
+        if algo == "hier":
+            return self.ihier_allreduce(arr, op, chunk_bytes=chunk_bytes)
         return _coll.icoll_allreduce(
             self, arr, op, algo,
-            resident=self._use_resident(arr.nbytes))
+            resident=self._use_resident(arr.nbytes),
+            chunk_bytes=chunk_bytes)
 
-    def _hier_comms(self, g: int) -> tuple["Comm", "Comm"]:
-        cached = self._hier_cache.get(g)
-        if cached is None:
-            intra = self.split(self.rank // g, key=self.rank)
-            inter = self.split(self.rank % g, key=self.rank)
-            cached = (intra, inter)
-            self._hier_cache[g] = cached
-        return cached
+    def ihier_allreduce(self, arr: np.ndarray, op=np.add,
+                        group_size: int | None = None,
+                        chunk_bytes=None) -> CollRequest:
+        """Non-blocking HIERARCHICAL allreduce as one fused schedule:
+        intra-group ring reduce-scatter -> inter-group recursive
+        doubling on the shards -> intra-group ring allgather, all in a
+        single DAG over the parent communicator (the blocking sub-comm
+        composition of PR 2 serialized the three phases; here a rank's
+        allgather rounds overlap its neighbours' inter-group rounds,
+        and chunking pipelines within each phase too). Groups are
+        contiguous rank blocks of ``group_size`` (auto: the divisor of
+        n closest to sqrt(n) with a power-of-two group count — the
+        recursive-doubling requirement). A ``group_size`` the fused
+        schedule cannot honor, and sizes with no valid grouping, fall
+        back to the single-level fused ring (with a warning when the
+        grouping was explicit — the pre-fused sub-comm path accepted
+        any divisor)."""
+        arr = np.ascontiguousarray(arr)
+        g = _hier_group(self.size, group_size)
+        if g is None:
+            if group_size is not None:
+                warnings.warn(
+                    f"hier group_size {group_size} needs 2 <= g < n, "
+                    f"g | n and a power-of-two group count (n="
+                    f"{self.size}); falling back to the single-level "
+                    f"fused ring", UserWarning, stacklevel=2)
+            return _coll.icoll_allreduce(
+                self, arr, op, "ring",
+                resident=self._use_resident(arr.nbytes),
+                chunk_bytes=chunk_bytes)
+        return _coll.icoll_allreduce_hier(
+            self, arr, op, group=g,
+            resident=self._use_resident(arr.nbytes),
+            chunk_bytes=chunk_bytes)
 
-    def _allreduce_hier(self, arr: np.ndarray, op=np.add,
-                        group_size: int | None = None) -> np.ndarray:
-        """Hierarchical allreduce over split() sub-communicators:
-        intra-group ring reduce-scatter -> inter-group allreduce on the
-        shards (recursive doubling when the group count is pow2) ->
-        intra-group ring allgather. Groups are contiguous rank blocks of
-        ``group_size`` (default: largest divisor <= sqrt(n))."""
-        n = self.size
-        g = group_size if group_size is not None else _best_group(n)
-        if g < 2 or n % g != 0:
-            return self.iallreduce(arr, op, algo="ring").wait()
-        intra, inter = self._hier_comms(g)
-        shard = intra.reduce_scatter(arr, op)
-        shard = inter.allreduce(
-            shard, op, algo="rd" if _is_pow2(inter.size) else "ring")
-        flat = shards_to_chunk_order(intra.allgather(shard), g)
-        return flat[:arr.size].reshape(arr.shape).astype(arr.dtype,
-                                                         copy=False)
-
-    def reduce_scatter(self, arr: np.ndarray, op=np.add) -> np.ndarray:
+    def reduce_scatter(self, arr: np.ndarray, op=np.add,
+                       chunk_bytes=None) -> np.ndarray:
         """Ring reduce-scatter; returns this rank's reduced shard (chunk
         ``(rank+1) % size`` of the zero-padded flat payload)."""
-        return self.ireduce_scatter(arr, op).wait()
+        return self.ireduce_scatter(arr, op,
+                                    chunk_bytes=chunk_bytes).wait()
 
-    def ireduce_scatter(self, arr: np.ndarray, op=np.add) -> CollRequest:
+    def ireduce_scatter(self, arr: np.ndarray, op=np.add,
+                        chunk_bytes=None) -> CollRequest:
         """Non-blocking ring reduce-scatter."""
         arr = np.ascontiguousarray(arr)
         return _coll.icoll_reduce_scatter(
-            self, arr, op, resident=self._use_resident(arr.nbytes))
+            self, arr, op, resident=self._use_resident(arr.nbytes),
+            chunk_bytes=chunk_bytes)
 
-    def allgather(self, shard: np.ndarray, algo: str = "auto"
-                  ) -> np.ndarray:
+    def allgather(self, shard: np.ndarray, algo: str = "auto",
+                  chunk_bytes=None) -> np.ndarray:
         """All-gather; returns the flat concatenation in rank order.
         ``algo``: ring | bruck | auto (ring for few ranks, Bruck's
         ceil(log2 n) rounds beyond that)."""
-        return self.iallgather(shard, algo).wait()
+        return self.iallgather(shard, algo,
+                               chunk_bytes=chunk_bytes).wait()
 
-    def iallgather(self, shard: np.ndarray, algo: str = "auto"
-                   ) -> CollRequest:
+    def iallgather(self, shard: np.ndarray, algo: str = "auto",
+                   chunk_bytes=None) -> CollRequest:
         """Non-blocking all-gather; ``wait()`` returns the flat
         rank-ordered concatenation."""
         shard = np.ascontiguousarray(shard)
@@ -851,7 +990,8 @@ class Comm(Communicator):
             algo = "bruck" if self.size >= 8 else "ring"
         return _coll.icoll_allgather(
             self, shard, algo,
-            resident=self._use_resident(shard.nbytes * self.size))
+            resident=self._use_resident(shard.nbytes * self.size),
+            chunk_bytes=chunk_bytes)
 
     def alltoall(self, blocks: list[np.ndarray]) -> list[np.ndarray]:
         """Pairwise exchange; ``blocks[i]`` goes to rank i. Resident

@@ -111,12 +111,22 @@ class ProgressEngine:
                     raise
 
     def _tick_recvs(self) -> None:
-        for fifo in list(self.recv_fifo.values()):
-            # pump EVERY posted receive once: generators self-restrict
-            # so only the effective head drains the pair queue, while
-            # later receives may still complete from parked messages
-            # (MPI: receives of different tags complete independently)
-            for req in list(fifo):
+        for src, fifo in list(self.recv_fifo.items()):
+            while fifo and (fifo[0].done or fifo[0]._error is not None):
+                fifo.popleft()
+            if not fifo:
+                continue
+            # Only the effective HEAD of a pair's FIFO can drain the
+            # pair queue; a non-head receive can complete solely from
+            # PARKED payloads (out-of-order tag matches, salvages, self
+            # sends). So the tick pumps the head always, and sweeps the
+            # rest only while parked data exists — keeping the per-tick
+            # cost O(sources), not O(posted receives). Chunk-granular
+            # schedules pre-post dozens of sub-receives per peer; a
+            # spin-wait that pumped every one of them each tick would
+            # eat the pipelining it exists to drive.
+            parked = self._parked_nonempty(src)
+            for req in list(fifo) if parked else [fifo[0]]:
                 if req.done or req._error is not None:
                     continue
                 try:
@@ -130,6 +140,13 @@ class ProgressEngine:
                     req._error = e
             while fifo and (fifo[0].done or fifo[0]._error is not None):
                 fifo.popleft()
+
+    def _parked_nonempty(self, src: int) -> bool:
+        park = getattr(self.comm, "_parked", None)
+        if park is None:
+            return True                      # unknown comm: pump all
+        q = park.get(src)
+        return bool(q)
 
     def _reclaim_stagers(self) -> None:
         v = self.comm.arena.view
@@ -392,13 +409,23 @@ class CollRequest:
     reduced array, the gathered flat array, ``None`` for ibarrier).
     The default ``wait`` timeout scales with the schedule's round
     count (30 s per round, the per-round budget the pre-engine
-    blocking loops had); pass ``timeout=None`` to wait forever."""
+    blocking loops had). ``Schedule.rounds`` counts SUB-rounds on a
+    chunked schedule, so a round that chunking turned into N chunk
+    sub-rounds gets N budgets, not one — a multi-GB pipelined
+    collective is no longer capped at the message-granular budget.
+    Pass ``timeout=None`` to wait forever."""
 
     kind = "coll"
 
     def __init__(self, comm, ex: _SchedExec):
         self._comm = comm
         self._ex = ex
+
+    @property
+    def default_timeout(self) -> float:
+        """30 s per (sub-)round — ``sched.rounds`` is the tag span, which
+        chunking expands to the real message count."""
+        return 30.0 * max(1, self._ex.sched.rounds)
 
     @property
     def done(self) -> bool:
@@ -424,7 +451,7 @@ class CollRequest:
 
     def wait(self, timeout=_DEFAULT_TIMEOUT):
         if timeout is _DEFAULT_TIMEOUT:
-            timeout = 30.0 * max(1, self._ex.sched.rounds)
+            timeout = self.default_timeout
         t0 = time.monotonic()
         while not self.test():
             if timeout is not None and time.monotonic() - t0 > timeout:

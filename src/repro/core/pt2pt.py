@@ -41,10 +41,14 @@ Two data-plane protocols, selected per message by ``eager_threshold``:
               through the entry's claim word (the drain-ack byte role,
               reversed), and ships a ``FLAG_POSTED`` descriptor naming
               the entry so per-pair FIFO matching still happens in
-              queue order. Miss, capacity overflow, or an unregistered
-              destination fall back to the staged path above:
-              wire-compatible in both directions (old senders never see
-              entries; old receivers never post them).
+              queue order. A posting that finds its strip full SPILLS
+              to a per-pair overflow list and is promoted (FIFO) as
+              entries retire, so deep pre-post bursts (chunked
+              schedules) never lose their postings. A sender-side miss
+              or an unregistered destination fall back to the staged
+              path above: wire-compatible in both directions (old
+              senders never see entries; old receivers never post
+              them).
 
 Non-blocking isend/irecv return Request objects driven by an explicit
 progress pump (MPI_Test/MPI_Wait semantics — paper §3.4 keeps these
@@ -196,6 +200,22 @@ class _PostRecord:
     tag: int                                 # the receive's criterion
     dest: "_RecvDest"
     owner: Any                               # the posting Request
+
+
+@dataclass
+class _PendingPost:
+    """A postable receive's matchbox intent, live from irecv to
+    completion. ``rec`` is None while the posting waits in the per-pair
+    OVERFLOW list (every strip slot occupied); consuming or retracting
+    an entry promotes the oldest overflow posting into the freed slot,
+    so postings reach the matchbox in FIFO order no matter how deep a
+    chunked pre-post burst runs — no lazy retry, no capacity miss."""
+    src: int
+    tag: int
+    dest: "_RecvDest"
+    owner: Any                               # the posting Request
+    rec: Optional[_PostRecord] = None
+    closed: bool = False
 
 
 class _RecvDest:
@@ -487,8 +507,12 @@ class Communicator:
                                        rank)
             self._mb = (Matchbox(arena.view, self._mb_obj.offset, size,
                                  mb_slots) if mb_bytes else None)
-        # tag reorder buffers per src
-        self._parked: dict[int, deque[tuple[bytes, int]]] = {
+        # tag reorder buffers per src: (payload, tag, rndv) — rndv
+        # records whether the payload arrived via a rendezvous path
+        # (the capacity-miss accounting needs the DELIVERY path, not a
+        # size heuristic: pool-resident sends are rendezvous at any
+        # size)
+        self._parked: dict[int, deque[tuple[bytes, int, bool]]] = {
             s: deque() for s in range(size)}
         # matchbox state. Receiver side: live postings by (src, slot),
         # per-src post_id counters, and payloads salvaged out of postings
@@ -496,6 +520,9 @@ class Communicator:
         # Sender side: the last post_id claimed per (dst, slot), so a
         # consumed-but-not-yet-recycled entry is never claimed twice.
         self._mb_records: dict[tuple[int, int], _PostRecord] = {}
+        # per-source FIFO of postings that found every strip slot
+        # occupied; promoted (oldest first) whenever a slot frees
+        self._mb_overflow: dict[int, deque[_PendingPost]] = {}
         self._mb_next_id: dict[int, int] = {}
         self._mb_salvage: dict[tuple[int, int, int], bytes] = {}
         self._mb_claimed: dict[tuple[int, int], int] = {}
@@ -643,8 +670,7 @@ class Communicator:
     def _mb_post(self, src: int, tag: int, dest: _RecvDest,
                  req: "Request") -> Optional[_PostRecord]:
         """Publish a posted-rendezvous entry for ``req``; None when every
-        slot of the pair is occupied (the receive simply stays on the
-        staged/eager paths until a slot frees)."""
+        slot of the pair is occupied."""
         for slot in range(self._mb.n_slots):
             if (src, slot) in self._mb_records:
                 continue
@@ -656,6 +682,61 @@ class Communicator:
             return rec
         return None
 
+    def _mb_post_or_spill(self, src: int, tag: int, dest: _RecvDest,
+                          req: "Request") -> _PendingPost:
+        """Publish an entry, or SPILL the posting to the pair's overflow
+        list when the strip is full (promoted FIFO as slots free). A
+        posting behind a non-empty overflow spills too — it must not
+        overtake earlier receives in the matchbox."""
+        pend = _PendingPost(src, tag, dest, req)
+        ovf = self._mb_overflow.get(src)
+        if not ovf:
+            pend.rec = self._mb_post(src, tag, dest, req)
+            if pend.rec is not None:
+                return pend
+        self._mb_overflow.setdefault(src, deque()).append(pend)
+        return pend
+
+    def _mb_promote(self, src: int) -> None:
+        """A (src -> us) slot freed: move the oldest spilled posting of
+        that pair into the matchbox."""
+        ovf = self._mb_overflow.get(src)
+        while ovf:
+            pend = ovf[0]
+            if pend.closed:
+                ovf.popleft()
+                continue
+            rec = self._mb_post(src, pend.tag, pend.dest, pend.owner)
+            if rec is None:
+                return
+            pend.rec = rec
+            ovf.popleft()
+
+    def _mb_withdraw(self, pend: Optional[_PendingPost], *,
+                     fallback_delivery: bool = False) -> None:
+        """The receive behind ``pend`` is completing some way other than
+        its own posted entry: retract a live posting (salvaging any
+        committed claim) or unlink a still-spilled one. A fallback
+        DELIVERY that finds the posting still spilled is the one true
+        capacity miss left — the strip was too shallow for the posting
+        to reach the matchbox in time — and is what
+        ``ProtocolStats.mb_capacity_misses`` now counts."""
+        if pend is None or pend.closed:
+            return
+        pend.closed = True
+        if pend.rec is not None:
+            self._mb_retract(pend.rec)
+            pend.rec = None
+            return
+        ovf = self._mb_overflow.get(pend.src)
+        if ovf:
+            try:
+                ovf.remove(pend)
+            except ValueError:
+                pass
+        if fallback_delivery:
+            self.arena.view.count_mb_miss()
+
     def _mb_retract(self, rec: _PostRecord) -> None:
         """Withdraw a posting whose receive is completing another way
         (eager, staged, parked, error). If the sender committed a claim
@@ -666,36 +747,43 @@ class Communicator:
         if self._mb_records.get(key) is not rec:
             return                            # consumed or already gone
         del self._mb_records[key]
-        v = self.arena.view
-        off = self._mb.entry_off(self.rank, rec.src, rec.slot)
-        v.nt_store_u64(off, 0)
-        # yield (a syscall) between our store and the claim load: a
-        # sender that read the stale post_id issued its PENDING store
-        # BEFORE that read, so after the yield any such claim is visible
-        # — closing the StoreLoad window a bare store+load would leave
-        # (on the paper's hardware the nt store is followed by sfence)
-        time.sleep(0)
-        w = v.nt_load_u64(off + _MB_CLAIM)
-        if (w >> 2) != rec.post_id:
-            return
-        t0 = time.monotonic()
-        while (w & 3) == _CLAIM_PENDING:      # sender mid-claim: wait out
-            if time.monotonic() - t0 > 10.0:
-                raise RuntimeError(
-                    "matchbox retract: peer claim stuck PENDING")
+        try:
+            v = self.arena.view
+            off = self._mb.entry_off(self.rank, rec.src, rec.slot)
+            v.nt_store_u64(off, 0)
+            # yield (a syscall) between our store and the claim load: a
+            # sender that read the stale post_id issued its PENDING store
+            # BEFORE that read, so after the yield any such claim is
+            # visible — closing the StoreLoad window a bare store+load
+            # would leave (on the paper's hardware the nt store is
+            # followed by sfence)
             time.sleep(0)
             w = v.nt_load_u64(off + _MB_CLAIM)
-        if (w & 3) == _CLAIM_COMMIT:
-            n = v.nt_load_u64(off + _MB_FILL)
-            data = bytes(v.read_acquire(rec.dest.post_off, n)) if n else b""
-            v.count_path("rndv_posted", n)
-            self._mb_salvage[(rec.src, rec.slot, rec.post_id)] = data
+            if (w >> 2) != rec.post_id:
+                return
+            t0 = time.monotonic()
+            while (w & 3) == _CLAIM_PENDING:  # sender mid-claim: wait out
+                if time.monotonic() - t0 > 10.0:
+                    raise RuntimeError(
+                        "matchbox retract: peer claim stuck PENDING")
+                time.sleep(0)
+                w = v.nt_load_u64(off + _MB_CLAIM)
+            if (w & 3) == _CLAIM_COMMIT:
+                n = v.nt_load_u64(off + _MB_FILL)
+                data = bytes(v.read_acquire(rec.dest.post_off, n)) \
+                    if n else b""
+                v.count_path("rndv_posted", n)
+                self._mb_salvage[(rec.src, rec.slot, rec.post_id)] = data
+        finally:
+            self._mb_promote(rec.src)         # the slot is free again
 
     def _mb_consume(self, rec: _PostRecord) -> None:
-        """A posted delivery completed in place: recycle the entry."""
+        """A posted delivery completed in place: recycle the entry and
+        promote the pair's oldest spilled posting into the slot."""
         off = self._mb.entry_off(self.rank, rec.src, rec.slot)
         self.arena.view.nt_store_u64(off, 0)
         self._mb_records.pop((rec.src, rec.slot), None)
+        self._mb_promote(rec.src)
 
     def _mb_repost(self, rec: _PostRecord) -> None:
         """The sender delivered a message that MPI order routes to a
@@ -789,6 +877,12 @@ class Communicator:
         self._freed = True
         self._engine.colls.clear()     # abandoned schedule executions
         if self._mb is not None:
+            # close spilled postings FIRST: retraction frees slots and
+            # would otherwise promote them into a dying matchbox
+            for ovf in self._mb_overflow.values():
+                for pend in ovf:
+                    pend.closed = True
+                ovf.clear()
             for rec in list(self._mb_records.values()):
                 self._mb_retract(rec)
             self._mb_salvage.clear()
@@ -933,7 +1027,7 @@ class Communicator:
                     pbuf._in_flight = False
                 else:
                     payload = mv.tobytes()
-                self._parked[self.rank].append((payload, tag))
+                self._parked[self.rank].append((payload, tag, False))
                 return
             q = self.mq.send_queue(dest)
             v = self.arena.view
@@ -1081,28 +1175,29 @@ class Communicator:
             req.nbytes, req.tag = len(d), t
 
         def gen():
-            rec = None               # our live matchbox posting, if any
-            missed = [False]         # counted a strip-full miss already?
+            pend = None              # our matchbox intent (live/spilled)
 
-            def secure_dst():
+            def secure_dst(rndv: bool):
                 """About to deliver a NON-posted payload into the
-                destination: withdraw our live posting FIRST. A sender
-                may already have committed a claim into the same buffer
-                — retracting salvages that payload before the delivery
+                destination: withdraw our posting FIRST. A sender may
+                already have committed a claim into the same buffer —
+                retracting salvages that payload before the delivery
                 below overwrites it (the salvage-before-scribble
-                ordering the matchbox protocol requires)."""
-                nonlocal rec
-                if rec is not None:
-                    self._mb_retract(rec)
-                    rec = None
+                ordering the matchbox protocol requires). A posting
+                still in the overflow list is unlinked; that counts as
+                a capacity miss only when the payload actually RODE a
+                rendezvous path (``rndv``) — an eager delivery never
+                had a one-copy path to lose, so it must not inflate
+                the matchbox sizing signal."""
+                self._mb_withdraw(pend, fallback_delivery=rndv)
 
             try:
                 park = self._parked[src]
                 while True:
-                    for i, (d, t) in enumerate(park):
+                    for i, (d, t, rv) in enumerate(park):
                         if _tag_match(tag, t):
                             del park[i]
-                            secure_dst()
+                            secure_dst(rv)
                             deliver_bytes(d, t)
                             return
                     if src == self.rank:
@@ -1110,16 +1205,13 @@ class Communicator:
                         continue
                     # publish the destination BEFORE draining: a sender
                     # arriving from now on can deliver straight into it.
-                    # (Posting is lazy-retried — all slots may be busy.)
-                    if rec is None and dest is not None and dest.postable:
-                        rec = self._mb_post(src, tag, dest, req)
-                        if rec is None and not missed[0]:
-                            # every strip slot occupied: counted ONCE per
-                            # receive so schedules can size strips to
-                            # their pre-post depth (matchbox sizing
-                            # policy — ProtocolStats.mb_capacity_misses)
-                            missed[0] = True
-                            self.arena.view.count_mb_miss()
+                    # A full strip SPILLS the posting to the pair's
+                    # overflow list (promoted FIFO as entries retire) —
+                    # never a lazy retry, never a lost posting.
+                    if pend is None and dest is not None \
+                            and dest.postable:
+                        pend = self._mb_post_or_spill(src, tag, dest,
+                                                      req)
                     # per-source matching is ordered: only the EFFECTIVE
                     # HEAD posted receive may drain the pair queue (it
                     # parks foreign tags; two generators interleaving one
@@ -1161,17 +1253,20 @@ class Communicator:
                         d = self._mb_take(src, slot, pid, total, req)
                         if d is None:
                             # consumed in place by our own posting:
-                            # zero receiver-side copies
-                            rec = None
+                            # zero receiver-side copies (_mb_take
+                            # already recycled the entry)
+                            if pend is not None:
+                                pend.closed = True
+                                pend.rec = None
                             req.nbytes, req.tag = total, t
                             return
                         # salvaged from a foreign/retracted posting —
                         # route it exactly like a parked payload
                         if match:
-                            secure_dst()
+                            secure_dst(True)
                             deliver_bytes(d, t)
                             return
-                        park.append((d, t))
+                        park.append((d, t, True))
                         continue
                     if flags & FLAG_RNDV:
                         # ---- staged rendezvous: bulk-pull from the
@@ -1180,7 +1275,7 @@ class Communicator:
                         ack_off = int.from_bytes(payload[16:24], "little")
                         data_off = int.from_bytes(payload[24:32], "little")
                         if match and dest is not None and not truncate:
-                            secure_dst()
+                            secure_dst(True)
                             if total:
                                 v.read_acquire_into(data_off, dst[:total])
                                 v.count_path("rndv_staged", total)
@@ -1202,11 +1297,11 @@ class Communicator:
                             req.data = d
                             req.nbytes, req.tag = total, t
                             return
-                        park.append((d, t))
+                        park.append((d, t, True))
                         continue
                     # ---- eager: drain chunk cells straight into the sink
                     if match and dest is not None and not truncate:
-                        secure_dst()
+                        secure_dst(False)
                         sink = dst
                     else:
                         sink = memoryview(bytearray(total))
@@ -1235,14 +1330,13 @@ class Communicator:
                         req.data = d
                         req.nbytes, req.tag = total, t
                         return
-                    park.append((d, t))
+                    park.append((d, t, False))
             finally:
                 # completing any way other than our own posted entry
                 # (eager, staged, parked, salvage, error, abandonment)
-                # leaves that entry live — withdraw it before the user
-                # buffer changes owner
-                if rec is not None:
-                    self._mb_retract(rec)
+                # leaves that entry live (or spilled) — withdraw it
+                # before the user buffer changes owner
+                self._mb_withdraw(pend)
         req._gen = gen()
         req._comm = self        # wait()/test() must pump the send engine
         self._recv_fifo.setdefault(src, deque()).append(req)

@@ -44,13 +44,30 @@ Tags: every node carries a ROUND index; the executor adds a per-launch
 concurrent collectives (an ``iallreduce`` overlapping an ``ibarrier``)
 never cross-match. Ranks must issue collectives in the same order —
 the MPI calling convention — for the sequence numbers to agree.
+
+Chunking (``compile_schedule(..., chunk_bytes=...)``): a compiled
+schedule can be re-cut at CHUNK granularity — every Send/Recv/Reduce/
+Copy node whose payload exceeds ``chunk_bytes`` is split into a chain
+of per-chunk sub-nodes, and dependencies are mapped CHUNK-WISE wherever
+the dependency is about the same buffer region (a send of chunk c waits
+only for the reduce that produced chunk c, a pipelined bcast forwards
+chunk c the moment it arrived). That converts the engine from
+message-granular to chunk-granular progress: round k+1's receive for
+chunk c is in flight while round k is still reducing chunk c+1 — the
+intra-round overlap that takes large-payload collectives to peak
+shared-pool bandwidth (CXL-CCL's pipelining lesson). Each sub-message
+gets its own sub-round (hence its own wire tag), so ``Schedule.rounds``
+counts SUB-rounds after chunking — timeout scaling and tag windows stay
+correct automatically. ``chunk_bytes`` is widened as needed so the
+sub-round count never exceeds ``MAX_ROUNDS``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 __all__ = ["BufRef", "SendOp", "RecvOp", "ReduceOp", "CopyOp",
-           "Schedule", "compile_schedule", "MAX_ROUNDS"]
+           "Schedule", "compile_schedule", "chunk_schedule",
+           "MAX_ROUNDS"]
 
 # rounds per schedule are capped so per-launch tag windows stay disjoint
 MAX_ROUNDS = 256
@@ -106,8 +123,10 @@ class Schedule:
     rank: int
     nodes: list = field(default_factory=list)
     slot_sizes: dict = field(default_factory=dict)   # slot -> bytes
-    rounds: int = 0                                  # tag span
+    rounds: int = 0                                  # tag span (SUB-rounds
+    #                                                  once chunked)
     result: BufRef | None = None
+    chunk_bytes: int | None = None     # None = message-granular
 
     def _add(self, node) -> int:
         node.idx = len(self.nodes)
@@ -154,6 +173,114 @@ class Schedule:
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+# --------------------------------------------------------------------------
+# schedule-level chunking (post-pass over any compiled schedule)
+# --------------------------------------------------------------------------
+
+def _n_chunks(nbytes: int, chunk_bytes: int) -> int:
+    return max(1, -(-nbytes // chunk_bytes))
+
+
+def _sub_region(ref: BufRef, c: int, chunk_bytes: int) -> BufRef:
+    off = c * chunk_bytes
+    return BufRef(ref.slot, ref.off + off, min(chunk_bytes,
+                                               ref.nbytes - off))
+
+
+def chunk_schedule(base: Schedule, chunk_bytes: int) -> Schedule:
+    """Re-cut ``base`` at chunk granularity: every node whose payload
+    exceeds ``chunk_bytes`` becomes a chain of per-chunk sub-nodes.
+
+    Dependency mapping:
+
+    * CHUNK-WISE when the dep shares a buffer region with the node and
+      splits into the same number of pieces — sub-node c depends only on
+      the dep's sub-node c. This is what pipelines: the producer/anti-
+      hazard edges of the compilers above are all about one region, so
+      chunk c of a round is independent of chunk c+1 (a ring send of
+      chunk c starts while chunk c+1 is still being reduced; a binomial
+      bcast forwards chunk c the moment it landed).
+    * CONSERVATIVE otherwise (disjoint regions or different piece
+      counts, e.g. Bruck's growing blocks): every sub-node depends on
+      every piece of the dep — exactly the base schedule's semantics.
+    * SendOps sourcing the same slot are additionally chained globally
+      (one drain-ack word per underlying PoolBuffer: at most one send
+      per slot in flight), which also serializes a node's own sub-sends.
+
+    Each sub-message takes its own SUB-round — its own wire tag — so
+    per-pair matching never depends on claim-order luck and
+    ``Schedule.rounds`` (tag span, timeout scaling) counts the real
+    message count. Sub-round numbering must agree ACROSS ranks (a
+    sender's sub-round is the receiver's), but a rank only sees its own
+    nodes — and e.g. a binomial-tree leaf participates in a strict
+    subset of the rounds. So every base round gets one UNIFORM window
+    of ``ceil(max message size / chunk_bytes)`` sub-rounds: the largest
+    message size is a pure function of (kind, n, nbytes) — identical on
+    every rank for every compiler above — which makes the numbering
+    rank-independent by construction. Dependency-free receives stay
+    dependency-free per chunk: a chunked execution PRE-POSTS every
+    sub-receive (the matchbox overflow spill keeps postings FIFO
+    beyond strip capacity)."""
+    s = Schedule(base.kind, base.n, base.rank, chunk_bytes=chunk_bytes)
+    span = max((_n_chunks(nd.buf.nbytes, chunk_bytes)
+                for nd in base.nodes if isinstance(nd, (SendOp, RecvOp))),
+               default=1)
+    round_off = {r: r * span for r in range(base.rounds)}
+    acc = base.rounds * span
+    pieces: dict[int, list[int]] = {}       # base idx -> sub-node idxs
+    last_send_in_slot: dict[int, int] = {}  # slot -> last sub-SendOp idx
+
+    def refs(nd):
+        return [b for b in Schedule._refs(nd) if b is not None]
+
+    def map_deps(nd, m: int, c: int) -> tuple[int, ...]:
+        out = []
+        mine = set(refs(nd))
+        for d in nd.deps:
+            dep = base.nodes[d]
+            if len(pieces[d]) == m and mine & set(refs(dep)):
+                out.append(pieces[d][c])
+            else:
+                out.extend(pieces[d])
+        return tuple(out)
+
+    for nd in base.nodes:
+        if isinstance(nd, (SendOp, RecvOp)):
+            m = _n_chunks(nd.buf.nbytes, chunk_bytes)
+            subs = []
+            for c in range(m):
+                buf = _sub_region(nd.buf, c, chunk_bytes)
+                rnd = round_off[nd.round] + c
+                deps = map_deps(nd, m, c)
+                if isinstance(nd, SendOp):
+                    prev = last_send_in_slot.get(buf.slot)
+                    if prev is not None and prev not in deps:
+                        deps = deps + (prev,)
+                    idx = s._add(SendOp(deps=deps, peer=nd.peer,
+                                        buf=buf, round=rnd))
+                    last_send_in_slot[buf.slot] = idx
+                else:
+                    idx = s._add(RecvOp(deps=deps, peer=nd.peer,
+                                        buf=buf, round=rnd))
+                subs.append(idx)
+            pieces[nd.idx] = subs
+        else:                                # ReduceOp / CopyOp
+            m = _n_chunks(nd.dst.nbytes, chunk_bytes)
+            subs = []
+            for c in range(m):
+                dst = _sub_region(nd.dst, c, chunk_bytes)
+                src = _sub_region(nd.src, c, chunk_bytes)
+                deps = map_deps(nd, m, c)
+                cls = ReduceOp if isinstance(nd, ReduceOp) else CopyOp
+                subs.append(s._add(cls(deps=deps, dst=dst, src=src)))
+            pieces[nd.idx] = subs
+    s.slot_sizes = dict(base.slot_sizes)
+    s.rounds = max(acc, 1)
+    s.result = base.result
+    s.validate()
+    return s
 
 
 # --------------------------------------------------------------------------
@@ -228,6 +355,87 @@ def _compile_allreduce_ring(n: int, rank: int, nbytes: int,
         prev_recv, prev_send = recv, send
     s.rounds = 2 * (n - 1)
     s.result = BufRef(0, 0, n * per_b)
+    s.validate()
+    return s
+
+
+def _compile_allreduce_hier(n: int, rank: int, nbytes: int,
+                            itemsize: int, group: int) -> Schedule:
+    """Hierarchical allreduce as ONE fused schedule (no sub-comm phase
+    composition): contiguous groups of ``group`` ranks run an intra-group
+    ring reduce-scatter over ``group`` chunks, ranks holding the same
+    chunk across groups run an inter-group recursive doubling on their
+    shard, and the intra-group ring allgather lands the final chunks in
+    place. Because the three phases share one DAG, a rank's allgather
+    traffic overlaps its neighbours' inter-group rounds — the blocking
+    sub-comm version serialized the phases at every rank.
+
+    Needs ``n % group == 0`` and a power-of-two group COUNT (the
+    recursive-doubling requirement). Result: slot 0 in chunk order,
+    like the fused ring."""
+    g = group
+    m = n // g
+    assert g >= 1 and n % g == 0, "group size must divide comm size"
+    assert _is_pow2(m), "hier needs a power-of-two group count"
+    count = nbytes // itemsize
+    per = -(-count // g)
+    per_b = per * itemsize
+    s = Schedule("allreduce_hier", n, rank)
+    grp, l = divmod(rank, g)
+    right = grp * g + (l + 1) % g
+    left = grp * g + (l - 1) % g
+    chunk = lambda c: BufRef(0, (c % g) * per_b, per_b)   # noqa: E731
+    rs_send: list[int] = []
+    rs_red: list[int] = []
+    prev_send = None
+    rnd = 0
+    for st in range(g - 1):                  # intra ring reduce-scatter
+        inc = BufRef(1 + st, 0, per_b)
+        recv = s._add(RecvOp(deps=(), peer=left, buf=inc, round=rnd))
+        sdeps = tuple(d for d in ((rs_red[-1] if st else None),
+                                  prev_send) if d is not None)
+        send = s._add(SendOp(deps=sdeps, peer=right,
+                             buf=chunk(l - st), round=rnd))
+        rs_red.append(s._add(ReduceOp(deps=(recv,),
+                                      dst=chunk(l - st - 1), src=inc)))
+        rs_send.append(send)
+        prev_send = send
+        rnd += 1
+    shard = chunk(l + 1)                     # this rank's reduced shard
+    last_red = rs_red[-1] if rs_red else None
+    slot = g                                 # RS used slots 1..g-1
+    k = 1
+    while k < m:                             # inter recursive doubling
+        peer = (grp ^ k) * g + l
+        inc = BufRef(slot, 0, per_b)
+        slot += 1
+        recv = s._add(RecvOp(deps=(), peer=peer, buf=inc, round=rnd))
+        sdeps = tuple(d for d in (last_red, prev_send) if d is not None)
+        send = s._add(SendOp(deps=sdeps, peer=peer, buf=shard,
+                             round=rnd))
+        rdeps = (recv, send) + ((last_red,) if last_red is not None
+                                else ())
+        last_red = s._add(ReduceOp(deps=rdeps, dst=shard, src=inc))
+        prev_send = send
+        k <<= 1
+        rnd += 1
+    prev_recv = None
+    for st in range(g - 1):                  # intra ring allgather
+        # the chunk being received was last SOURCED by RS send `st`
+        # (the inter phase only touches this rank's own shard)
+        recv = s._add(RecvOp(deps=(rs_send[st],), peer=left,
+                             buf=chunk(l - st), round=rnd))
+        sdeps = ((last_red, prev_send) if st == 0
+                 else (prev_recv, prev_send))
+        send = s._add(SendOp(deps=tuple(d for d in sdeps
+                                        if d is not None),
+                             peer=right, buf=chunk(l + 1 - st),
+                             round=rnd))
+        prev_recv, prev_send = recv, send
+        rnd += 1
+    s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), g * per_b)
+    s.rounds = max(rnd, 1)
+    s.result = BufRef(0, 0, g * per_b)
     s.validate()
     return s
 
@@ -365,7 +573,10 @@ def _compile_reduce(n: int, rank: int, root: int, nbytes: int) -> Schedule:
         k *= 2
         r += 1
     s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), nbytes)
-    s.rounds = max(r + 1, 1)
+    # FULL tree depth on every rank (a leaf breaks out early, but
+    # rounds must be rank-UNIFORM: chunking derives its widening and
+    # sub-round layout from it, and ranks must agree on wire tags)
+    s.rounds = max((n - 1).bit_length(), 1)
     s.result = acc if rank == root else None
     s.validate()
     return s
@@ -394,40 +605,57 @@ def _compile_barrier(n: int, rank: int) -> Schedule:
 
 
 _COMPILERS = {
-    "allreduce_rd": lambda n, rank, nbytes, itemsize, root:
+    "allreduce_rd": lambda n, rank, nbytes, itemsize, root, group:
         _compile_allreduce_rd(n, rank, nbytes),
-    "allreduce_ring": lambda n, rank, nbytes, itemsize, root:
+    "allreduce_ring": lambda n, rank, nbytes, itemsize, root, group:
         _compile_allreduce_ring(n, rank, nbytes, itemsize),
-    "reduce_scatter_ring": lambda n, rank, nbytes, itemsize, root:
+    "allreduce_hier": lambda n, rank, nbytes, itemsize, root, group:
+        _compile_allreduce_hier(n, rank, nbytes, itemsize, group),
+    "reduce_scatter_ring": lambda n, rank, nbytes, itemsize, root, group:
         _compile_reduce_scatter_ring(n, rank, nbytes, itemsize),
-    "allgather_ring": lambda n, rank, nbytes, itemsize, root:
+    "allgather_ring": lambda n, rank, nbytes, itemsize, root, group:
         _compile_allgather_ring(n, rank, nbytes),
-    "allgather_bruck": lambda n, rank, nbytes, itemsize, root:
+    "allgather_bruck": lambda n, rank, nbytes, itemsize, root, group:
         _compile_allgather_bruck(n, rank, nbytes),
-    "bcast": lambda n, rank, nbytes, itemsize, root:
+    "bcast": lambda n, rank, nbytes, itemsize, root, group:
         _compile_bcast(n, rank, root, nbytes),
-    "reduce": lambda n, rank, nbytes, itemsize, root:
+    "reduce": lambda n, rank, nbytes, itemsize, root, group:
         _compile_reduce(n, rank, root, nbytes),
-    "barrier": lambda n, rank, nbytes, itemsize, root:
+    "barrier": lambda n, rank, nbytes, itemsize, root, group:
         _compile_barrier(n, rank),
 }
 
 
 def compile_schedule(comm, kind: str, nbytes: int = 0, itemsize: int = 1,
-                     root: int = 0) -> Schedule:
+                     root: int = 0, *, group: int = 0,
+                     chunk_bytes: int | None = None) -> Schedule:
     """Compile (or fetch from the communicator's cache) the schedule for
     ``kind`` at this (size, rank, payload) — the once-per-(op, size,
     topology) contract. ``nbytes`` is the slot-0 payload for whole-
-    buffer ops, the per-shard size for allgather kinds."""
-    key = (kind, nbytes, itemsize, root)
+    buffer ops, the per-shard size for allgather kinds. ``group`` is
+    the intra-group size for ``allreduce_hier``. ``chunk_bytes`` re-cuts
+    the schedule at chunk granularity (see ``chunk_schedule``); it is
+    widened — never narrowed — until the sub-round count fits the
+    per-launch tag window, and the widened value is what the returned
+    schedule's ``chunk_bytes`` reports."""
+    if chunk_bytes is not None:
+        # itemsize-align so no ReduceOp sub-region splits an element
+        chunk_bytes = max(itemsize, chunk_bytes - chunk_bytes % itemsize)
+    key = (kind, nbytes, itemsize, root, group, chunk_bytes)
     cache = comm._sched_cache
     sched = cache.get(key)
     if sched is None:
         sched = _COMPILERS[kind](comm.size, comm.rank, nbytes, itemsize,
-                                 root)
+                                 root, group)
         if sched.rounds > MAX_ROUNDS:
             raise ValueError(
                 f"{kind} at size {comm.size} needs {sched.rounds} rounds"
                 f" > MAX_ROUNDS={MAX_ROUNDS}")
+        if chunk_bytes is not None:
+            chunked = chunk_schedule(sched, chunk_bytes)
+            while chunked.rounds > MAX_ROUNDS:
+                chunk_bytes *= 2
+                chunked = chunk_schedule(sched, chunk_bytes)
+            sched = chunked
         cache[key] = sched
     return sched

@@ -18,6 +18,34 @@ class HealthCheck:
     data_too_large = "data_too_large"
 
 
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)``; the runner skips the example."""
+
+
+def assume(condition) -> bool:
+    """Real hypothesis steers generation away from failed assumptions;
+    the fallback simply skips the example."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+def seed(_value):
+    """The fallback PRNG is already fixed-seeded; accept and ignore the
+    explicit seed decorator so suites can pin real hypothesis."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def note(_message):
+    """Diagnostics attached to failing examples; no-op here."""
+
+
+def event(_message):
+    """Statistics bucket marker; no-op here."""
+
+
 class _Strategy:
     def __init__(self, draw):
         self.draw = draw
@@ -54,6 +82,24 @@ def sampled_from(seq):
     return _Strategy(lambda r: r.choice(seq))
 
 
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+def permutations(seq):
+    seq = list(seq)
+
+    def draw(r):
+        out = list(seq)
+        r.shuffle(out)
+        return out
+    return _Strategy(draw)
+
+
 class _StrategiesNamespace:
     integers = staticmethod(integers)
     binary = staticmethod(binary)
@@ -61,6 +107,9 @@ class _StrategiesNamespace:
     lists = staticmethod(lists)
     tuples = staticmethod(tuples)
     sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    just = staticmethod(just)
+    permutations = staticmethod(permutations)
 
 
 strategies = _StrategiesNamespace()
@@ -75,6 +124,13 @@ def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
     return deco
 
 
+# profile management: the fallback is always deterministic, so profiles
+# are accepted and ignored (conftest registers a "ci" profile against
+# real hypothesis)
+settings.register_profile = lambda *_a, **_kw: None
+settings.load_profile = lambda *_a, **_kw: None
+
+
 def given(*strats):
     def deco(fn):
         # plain zero-arg wrapper (NOT functools.wraps): pytest must not
@@ -83,8 +139,22 @@ def given(*strats):
             n = getattr(runner, "_fallback_max_examples",
                         _DEFAULT_EXAMPLES)
             rng = random.Random(0xC3A1)
-            for _ in range(n):
-                fn(*[s.draw(rng) for s in strats])
+            done = 0
+            attempts = 0
+            while done < n and attempts < 20 * n:
+                attempts += 1
+                try:
+                    fn(*[s.draw(rng) for s in strats])
+                except UnsatisfiedAssumption:
+                    continue
+                done += 1
+            if done == 0:
+                # mirror real hypothesis's Unsatisfied error: a test
+                # whose assumptions filtered out EVERY example must not
+                # pass vacuously
+                raise AssertionError(
+                    f"{fn.__name__}: assume() rejected all {attempts} "
+                    f"generated examples — no property was ever checked")
         runner.__name__ = fn.__name__
         runner.__doc__ = fn.__doc__
         runner.__module__ = fn.__module__

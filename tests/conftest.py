@@ -7,6 +7,7 @@ requirements-dev.txt), a deterministic lightweight fallback is installed
 into sys.modules BEFORE test modules import it, so the suite still
 collects and the property tests still run (without shrinking)."""
 import importlib.util
+import os
 import pathlib
 import sys
 
@@ -22,6 +23,16 @@ except ImportError:
     _mod = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis"] = _mod
+else:
+    # real hypothesis: a deterministic CI profile (fixed derivation, no
+    # wall-clock deadline — the protocol fuzz suite spins up whole rank
+    # teams per example). Activated in CI; selectable locally with
+    # HYPOTHESIS_PROFILE=ci.
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, derandomize=True, print_blob=True)
+    if os.environ.get("CI") or os.environ.get("HYPOTHESIS_PROFILE") \
+            == "ci":
+        hypothesis.settings.load_profile("ci")
 
 
 @pytest.fixture

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import run_threads
-from repro.core.comm import _best_group, _derived_name
+from repro.core.comm import _derived_name, _hier_group
 
 CELL = 4096
 
@@ -141,17 +141,24 @@ class TestMethodCollectives:
                                pool_bytes=64 << 20, timeout=120):
             assert np.allclose(out, exp)
 
-    def test_hier_subcomms_cached(self):
+    def test_hier_fused_schedule_cached_no_subcomms(self):
+        """The hier path is ONE fused schedule on the parent comm now:
+        compiled once, cached, and no sub-communicators are created."""
         def prog(env):
             c = env.comm
+            before = env.arena.stats()["slots_used"]
             c.allreduce(np.arange(8000.0), algo="hier")
-            n_cached = len(c._hier_cache)
+            n1 = sum(k[0] == "allreduce_hier" for k in c._sched_cache)
             c.allreduce(np.arange(8000.0), algo="hier")
-            return n_cached, len(c._hier_cache)
+            n2 = sum(k[0] == "allreduce_hier" for k in c._sched_cache)
+            seq = c._derived_seq              # split()/dup() counter
+            c.barrier()
+            return n1, n2, seq, env.arena.stats()["slots_used"] - before
 
-        for a, b in run_threads(4, prog, cell_size=CELL,
-                                pool_bytes=64 << 20):
-            assert a == b == 1          # split() ran once, then reused
+        for n1, n2, seq, _ in run_threads(4, prog, cell_size=CELL,
+                                          pool_bytes=64 << 20):
+            assert n1 == n2 == 1        # compiled once, then reused
+            assert seq == 0             # no split(): no derived comms
 
     @pytest.mark.parametrize("algo", ["ring", "bruck"])
     def test_allgather_resident(self, algo):
@@ -237,12 +244,15 @@ class TestMethodCollectives:
                                   pool_bytes=32 << 20):
             assert s0 == s1
 
-    def test_best_group(self):
-        assert _best_group(4) == 2
-        assert _best_group(6) == 2
-        assert _best_group(9) == 3
-        assert _best_group(12) == 3
-        assert _best_group(7) == 1       # prime: no hierarchy
+    def test_hier_group_policy(self):
+        assert _hier_group(4) == 2       # 2 groups of 2
+        assert _hier_group(6) == 3       # group COUNT must be pow2
+        assert _hier_group(12) == 3      # nearest sqrt(12) with 4 groups
+        assert _hier_group(16) == 4
+        assert _hier_group(7) is None    # prime: no hierarchy
+        assert _hier_group(9) is None    # no pow2 cofactor
+        assert _hier_group(6, 2) is None  # 3 groups: not a pow2 count
+        assert _hier_group(2, 2) is None  # g must be < n
 
 
 # --------------------------------------------------------------------------

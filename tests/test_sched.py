@@ -4,11 +4,14 @@ helpers), MPI-4 persistent collectives with round-synchronized
 pre-posting, matchbox sizing/capacity-miss accounting, tag-space
 isolation of collectives from ANY_TAG traffic, and the real-peer
 eager-threshold probe."""
+import time
+
 import numpy as np
 import pytest
 
 from repro.core import run_threads
-from repro.core.sched import (RecvOp, ReduceOp, SendOp, compile_schedule)
+from repro.core.sched import (MAX_ROUNDS, RecvOp, ReduceOp, SendOp,
+                              compile_schedule)
 
 CELL = 4096
 
@@ -77,6 +80,161 @@ class TestScheduleIR:
         s = compile_schedule(_StubComm(7, 0), "reduce", 512, 8, root=0)
         # root of 7 ranks folds in children 1, 2, 4 -> three ReduceOps
         assert sum(isinstance(nd, ReduceOp) for nd in s.nodes) == 3
+
+    def test_hier_compiles_valid_dags_all_ranks(self):
+        for n, g in [(4, 2), (6, 3), (8, 2), (8, 4), (16, 4)]:
+            for rank in range(n):
+                s = compile_schedule(_StubComm(n, rank), "allreduce_hier",
+                                     4096, 8, group=g)
+                s.validate()
+                for nd in s.nodes:
+                    if isinstance(nd, (SendOp, RecvOp)):
+                        assert 0 <= nd.peer < n and nd.peer != rank
+                # phase structure: (g-1) RS + log2(n/g) inter + (g-1) AG
+                m = n // g
+                assert s.rounds == 2 * (g - 1) + (m.bit_length() - 1)
+
+    def test_hier_inter_peers_cross_groups(self):
+        """Inter-phase partners hold the SAME chunk index in other
+        groups: peer = (group ^ 2^j) * g + local."""
+        s = compile_schedule(_StubComm(8, 3), "allreduce_hier", 4096, 8,
+                             group=2)
+        inter = [nd for nd in s.nodes if isinstance(nd, SendOp)
+                 and 1 <= nd.round <= 2]
+        assert sorted(nd.peer for nd in inter) == [1, 7]   # 3^2g, 3^4g
+
+
+# --------------------------------------------------------------------------
+# chunked schedules (the schedule-level pipelining tentpole)
+# --------------------------------------------------------------------------
+
+class TestChunkedSchedules:
+    @pytest.mark.parametrize("kind,nbytes", [
+        ("allreduce_rd", 1 << 16), ("allreduce_ring", 1 << 16),
+        ("reduce_scatter_ring", 1 << 16), ("allgather_ring", 1 << 14),
+        ("allgather_bruck", 1 << 14), ("bcast", 1 << 16),
+        ("reduce", 1 << 16), ("barrier", 0)])
+    def test_chunked_compiles_valid_all_ranks(self, kind, nbytes):
+        for n in (2, 3, 4, 5, 8):
+            if kind == "allreduce_rd" and n & (n - 1):
+                continue
+            for rank in range(n):
+                s = compile_schedule(_StubComm(n, rank), kind, nbytes, 8,
+                                     chunk_bytes=4096)
+                s.validate()
+                for nd in s.nodes:
+                    if isinstance(nd, (SendOp, RecvOp)):
+                        assert nd.buf.nbytes <= 4096
+
+    def test_rounds_count_submessages(self):
+        """Chunking a round into N sub-messages gives it N sub-rounds
+        (distinct wire tags; the CollRequest timeout satellite rides on
+        this count too)."""
+        c = _StubComm(2, 0)
+        base = compile_schedule(c, "allreduce_rd", 1 << 16, 8)
+        chunked = compile_schedule(c, "allreduce_rd", 1 << 16, 8,
+                                   chunk_bytes=4096)
+        assert base.rounds == 1
+        assert chunked.rounds == 16          # 64 KiB / 4 KiB
+        assert chunked.chunk_bytes == 4096
+
+    def test_chunkwise_deps_pipeline_bcast(self):
+        """An interior rank's forward of chunk c depends on the RECEIVE
+        of chunk c (plus the slot's send chain) — never on later
+        chunks. That is the pipelining property."""
+        s = compile_schedule(_StubComm(4, 1), "bcast", 1 << 14, 8,
+                             root=0, chunk_bytes=4096)
+        recvs = [nd for nd in s.nodes if isinstance(nd, RecvOp)]
+        sends = [nd for nd in s.nodes if isinstance(nd, SendOp)]
+        assert len(recvs) == 4 and len(sends) == 4
+        first_fwd = sends[0]
+        assert recvs[0].idx in first_fwd.deps
+        assert all(r.idx not in first_fwd.deps for r in recvs[1:])
+
+    def test_send_chain_one_per_slot(self):
+        """Sub-sends sourcing one slot are totally ordered (a PoolBuffer
+        has ONE drain-ack word)."""
+        s = compile_schedule(_StubComm(4, 2), "allreduce_ring", 1 << 16,
+                             8, chunk_bytes=2048)
+        prev = None
+        for nd in s.nodes:
+            if isinstance(nd, SendOp) and nd.buf.slot == 0:
+                if prev is not None:
+                    assert prev in _ancestors(s, nd.idx), \
+                        "slot-0 sends must chain"
+                prev = nd.idx
+
+    @pytest.mark.parametrize("kind,nbytes", [
+        ("reduce", 1 << 16), ("bcast", 1 << 16),
+        ("allreduce_ring", 1 << 16), ("allgather_bruck", 1 << 14)])
+    def test_chunked_subrounds_agree_across_ranks(self, kind, nbytes):
+        """Wire consistency: every chunked send must have exactly one
+        matching chunked receive at the SAME sub-round on its peer —
+        ranks that skip base rounds (tree leaves) must still agree on
+        the sub-round numbering (uniform per-round windows)."""
+        for n in (2, 3, 5, 6):
+            scheds = [compile_schedule(_StubComm(n, r), kind, nbytes, 8,
+                                       chunk_bytes=4096)
+                      for r in range(n)]
+            sends = sorted((r, nd.peer, nd.round, nd.buf.nbytes)
+                           for r, s in enumerate(scheds)
+                           for nd in s.nodes if isinstance(nd, SendOp))
+            recvs = sorted((nd.peer, r, nd.round, nd.buf.nbytes)
+                           for r, s in enumerate(scheds)
+                           for nd in s.nodes if isinstance(nd, RecvOp))
+            assert sends == recvs
+
+    def test_chunk_bytes_widens_to_fit_tag_window(self):
+        """A chunk size that would blow MAX_ROUNDS is widened, never
+        rejected."""
+        s = compile_schedule(_StubComm(2, 0), "allreduce_rd", 1 << 22, 8,
+                             chunk_bytes=256)
+        assert s.rounds <= MAX_ROUNDS
+        assert s.chunk_bytes > 256
+
+    def test_widening_agrees_across_ranks(self):
+        """The MAX_ROUNDS widening loop runs off ``base.rounds * span``
+        — both rank-UNIFORM (a reduce leaf breaks out of the tree
+        early, but its schedule still reports the full depth), so every
+        rank widens to the SAME chunk size and the wire stays
+        consistent."""
+        for kind in ("reduce", "bcast", "allreduce_ring"):
+            for n in (3, 5, 6):
+                scheds = [compile_schedule(_StubComm(n, r), kind,
+                                           1 << 20, 8, chunk_bytes=256)
+                          for r in range(n)]
+                assert len({s.chunk_bytes for s in scheds}) == 1
+                assert all(s.rounds <= MAX_ROUNDS for s in scheds)
+                sends = sorted((r, nd.peer, nd.round, nd.buf.nbytes)
+                               for r, s in enumerate(scheds)
+                               for nd in s.nodes
+                               if isinstance(nd, SendOp))
+                recvs = sorted((nd.peer, r, nd.round, nd.buf.nbytes)
+                               for r, s in enumerate(scheds)
+                               for nd in s.nodes
+                               if isinstance(nd, RecvOp))
+                assert sends == recvs
+
+    def test_recvs_stay_preposted(self):
+        """Dependency-free receives stay dependency-free per chunk —
+        the whole sub-receive fan pre-posts at exec start."""
+        s = compile_schedule(_StubComm(2, 0), "allreduce_rd", 1 << 14, 8,
+                             chunk_bytes=4096)
+        recvs = [nd for nd in s.nodes if isinstance(nd, RecvOp)]
+        assert len(recvs) == 4
+        assert all(not nd.deps for nd in recvs)
+        assert s.max_recvs_per_peer() == 4
+
+
+def _ancestors(sched, idx):
+    out = set()
+    stack = list(sched.nodes[idx].deps)
+    while stack:
+        d = stack.pop()
+        if d not in out:
+            out.add(d)
+            stack.extend(sched.nodes[d].deps)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -262,28 +420,74 @@ class TestPersistentCollectives:
                                                timeout=120))
 
     def test_capacity_misses_counted(self):
-        """matchbox_slots=1: the second postable receive from one
-        source finds the strip full — counted in ProtocolStats so the
-        sizing policy has a signal."""
+        """matchbox_slots=1: the second postable receive SPILLS to the
+        overflow list; when its payload arrives via a fallback path
+        while the posting is still spilled, the lost one-copy
+        opportunity is counted in ProtocolStats (the sizing signal)."""
         def prog(env):
             c = env.comm
             if env.rank == 1:
                 d1, d2 = c.alloc_buffer(8000), c.alloc_buffer(8000)
                 r1 = c.irecv_into(0, d1, tag=1)
-                r2 = c.irecv_into(0, d2, tag=2)   # strip already full
+                r2 = c.irecv_into(0, d2, tag=2)   # strip full: spilled
+                assert len(c._mb_overflow[0]) == 1
+                c.send(0, b"", tag=9)
+                # ONLY tag=2 is in flight: it arrives staged (no
+                # matching entry), parks behind the head, and r2
+                # completes from park while r1 still owns the one slot
+                # — the posting never left the overflow list -> a miss
+                r2.wait(60)
                 misses = env.arena.view.stats.mb_capacity_misses
                 c.send(0, b"", tag=9)
-                r1.wait(60)
-                r2.wait(60)
+                r1.wait(60)               # posted in place afterwards
+                c.barrier()
                 return misses
             c.recv(1, tag=9)
-            c.send(1, bytes(8000), tag=1)
             c.send(1, bytes(8000), tag=2)
+            c.recv(1, tag=9)
+            c.send(1, bytes(8000), tag=1)
+            c.barrier()
             return 0
 
         res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
                           comm_kw={"matchbox_slots": 1}, timeout=120)
         assert res[1] >= 1
+
+    def test_spilled_postings_promote_without_misses(self):
+        """Pre-posting far beyond strip capacity spills FIFO and
+        promotes as entries retire: every posting reaches the matchbox
+        before its payload's descriptor is processed, so
+        ``mb_capacity_misses`` stays 0 (the ROADMAP overflow-spill
+        follow-up)."""
+        K = 12
+
+        def prog(env):
+            c = env.comm
+            if env.rank == 1:
+                bufs = [c.alloc_buffer(8000) for _ in range(K)]
+                reqs = [c.irecv_into(0, b, tag=i)
+                        for i, b in enumerate(bufs)]
+                assert len(c._mb_overflow[0]) == K - 2   # 2 slots live
+                c.send(0, b"", tag=99)
+                for i, r in enumerate(reqs):
+                    r.wait(60)
+                    assert bytes(bufs[i].read(0, 1)) == bytes([i + 1])
+                assert not c._mb_records
+                assert not any(c._mb_overflow.values())
+                misses = env.arena.view.stats.mb_capacity_misses
+                c.barrier()
+                for b in bufs:
+                    b.free()
+                return misses
+            c.recv(1, tag=99)
+            for i in range(K):
+                c.send(1, bytes([i + 1]) * 8000, tag=i)
+            c.barrier()
+            return 0
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          comm_kw={"matchbox_slots": 2}, timeout=120)
+        assert res[1] == 0
 
     def test_matchbox_slots_param_reaches_strips(self):
         def prog(env):
@@ -422,3 +626,300 @@ class TestReservedTagFence:
             return True
 
         assert all(run_threads(2, prog, cell_size=CELL))
+
+
+# --------------------------------------------------------------------------
+# chunked execution + fused hierarchical allreduce (functional)
+# --------------------------------------------------------------------------
+
+class TestChunkedCollectives:
+    @pytest.mark.parametrize("n,algo", [(2, "rd"), (3, "ring"),
+                                        (4, "ring")])
+    def test_chunked_allreduce_matches_reference(self, n, algo):
+        def prog(env):
+            x = np.arange(6000, dtype=np.float64) * (env.rank + 1)
+            return env.comm.iallreduce(x, algo=algo,
+                                       chunk_bytes=8192).wait(60)
+
+        exp = np.arange(6000, dtype=np.float64) * sum(range(1, n + 1))
+        for out in run_threads(n, prog, cell_size=CELL,
+                               pool_bytes=64 << 20, timeout=120):
+            assert np.allclose(out, exp)
+
+    def test_chunked_auto_derives_from_probe(self):
+        """chunk_bytes="auto" floors at 8x the probed crossover (min
+        64 KiB), caps pipeline depth at ~8 chunks, and stays
+        message-granular for small payloads."""
+        from repro.core.collectives import auto_chunk_bytes
+
+        def prog(env):
+            c = env.comm
+            cb = auto_chunk_bytes(c, 4 << 20)
+            assert cb == max(64 * 1024,
+                             8 * (c.probed_crossover
+                                  or c.eager_threshold),
+                             (4 << 20) // 8)
+            assert auto_chunk_bytes(c, 64 << 20) == 8 << 20   # depth cap
+            assert auto_chunk_bytes(c, 1024) is None
+            x = np.arange(3000.0) * (env.rank + 1)
+            return c.iallreduce(x, chunk_bytes="auto").wait(60)
+
+        for out in run_threads(2, prog, cell_size=CELL,
+                               pool_bytes=32 << 20, timeout=120):
+            assert np.allclose(out, np.arange(3000.0) * 3)
+
+    def test_ihier_matches_allreduce_bit_exact(self):
+        """Acceptance: ihier_allreduce on a 4-rank 2x2 hier comm agrees
+        BIT-EXACTLY with comm.allreduce (which auto-selects the same
+        fused schedule at this shape)."""
+        def prog(env):
+            x = (np.arange(8000, dtype=np.float64) / 3.0
+                 + env.rank * 0.1)
+            a = env.comm.ihier_allreduce(x, group_size=2).wait(60)
+            b = env.comm.allreduce(x)
+            xi = np.arange(8000, dtype=np.int64) * (env.rank + 1)
+            ai = env.comm.ihier_allreduce(xi, group_size=2).wait(60)
+            return a.tobytes() == b.tobytes(), ai
+
+        for same, ai in run_threads(4, prog, cell_size=CELL,
+                                    pool_bytes=64 << 20, timeout=120):
+            assert same
+            assert np.array_equal(ai, np.arange(8000, dtype=np.int64)
+                                  * 10)
+
+    def test_ihier_chunked_overlaps_compute(self):
+        """The fused hier schedule is nonblocking: compute injected
+        between start and wait still reduces correctly."""
+        def prog(env):
+            x = np.full(16000, float(env.rank + 1))
+            req = env.comm.ihier_allreduce(x, chunk_bytes=16384)
+            acc = np.zeros(32)
+            for i in range(30):
+                acc += np.cos(acc + i)
+                env.comm.progress()
+            return req.wait(60)
+
+        for out in run_threads(4, prog, cell_size=CELL,
+                               pool_bytes=64 << 20, timeout=120):
+            assert np.allclose(out, 10.0)
+
+    def test_ihier_invalid_group_size_warns_and_falls_back(self):
+        def prog(env):
+            # 6 = 2 x 3 groups: a group COUNT of 3 is not a power of
+            # two, so recursive doubling cannot run the inter phase —
+            # the call must still WORK (the pre-fused sub-comm path
+            # accepted any divisor), just single-level, with a warning
+            x = np.arange(500.0) * (env.rank + 1)
+            with pytest.warns(UserWarning, match="group_size 2"):
+                out = env.comm.ihier_allreduce(x, group_size=2).wait(60)
+            return out
+
+        exp = np.arange(500.0) * sum(range(1, 7))
+        for out in run_threads(6, prog, cell_size=CELL,
+                               pool_bytes=32 << 20, timeout=120):
+            assert np.allclose(out, exp)
+
+    def test_default_timeout_scales_with_subrounds(self):
+        """Satellite fix: 30 s/round budgets every chunk sub-round once
+        a round is split — a chunked request's default wait budget is
+        its sub-round count, not the message-granular round count."""
+        def prog(env):
+            c = env.comm
+            x = np.zeros(1 << 15)        # 256 KiB
+            plain = c.iallreduce(x, algo="rd")
+            chunked = c.iallreduce(x, algo="rd", chunk_bytes=32768)
+            plain.wait(60)
+            chunked.wait(60)
+            return plain.default_timeout, chunked.default_timeout
+
+        for plain_t, chunked_t in run_threads(2, prog, cell_size=CELL,
+                                              pool_bytes=64 << 20,
+                                              timeout=120):
+            assert plain_t == 30.0
+            assert chunked_t == 30.0 * 8     # 256 KiB / 32 KiB chunks
+
+
+# --------------------------------------------------------------------------
+# fault injection: _SchedExec._abort on chunked schedules
+# --------------------------------------------------------------------------
+
+class TestChunkedAbort:
+    def test_mid_chunk_send_failure_aborts_cleanly(self):
+        """Kill one in-flight chunk send of a chunked resident schedule:
+        the sibling receives must cancel (matchbox retracted), the
+        leased buffer set must be LEAKED (never recycled — a straggler
+        chunk may still land in it), and the communicator must stay
+        usable for a fresh collective."""
+        def prog(env):
+            c = env.comm
+            if env.rank == 0:
+                c.barrier()
+                req = c.iallreduce(np.full(40000, 1.0), algo="rd",
+                                   chunk_bytes=65536)
+                ex = req._ex
+                # peer is asleep: resident sends went staged-sync and
+                # stay in flight awaiting the drain ack
+                for _ in range(50):
+                    c.progress()
+                    sends = [r for r in ex._inflight.values()
+                             if r.kind == "send" and not r.done]
+                    if sends:
+                        break
+                assert sends, "no in-flight chunk send to kill"
+                sends[0]._error = RuntimeError("injected chunk failure")
+                with pytest.raises(RuntimeError, match="injected"):
+                    req.wait(10)
+                assert req.error is not None
+                # sibling in-flight receives were cancelled and their
+                # matchbox postings withdrawn
+                assert not c._mb_records
+                assert not any(c._mb_overflow.values())
+                assert ex not in c._engine.colls
+                # the leased slot set is leaked, not recycled
+                assert c._rounds._free_sets == []
+                c.barrier()              # wake the peer's second phase
+            else:
+                c.barrier()
+                time.sleep(0.3)          # arrive late: rank 0's chunk
+                # sends are staged-sync in flight when it injects
+                req = c.iallreduce(np.full(40000, 1.0), algo="rd",
+                                   chunk_bytes=65536)
+                for _ in range(20):      # absorb rank 0's partial chunks
+                    c.progress()
+                # the peer died mid-collective: abort our side too (the
+                # MPI calling convention keeps collective seq numbers
+                # aligned for whatever comes next)
+                req._ex._abort(RuntimeError("peer aborted"))
+                assert not c._mb_records
+                assert not any(c._mb_overflow.values())
+                c.barrier()
+            # the comm is still usable: a fresh small collective works
+            # (stale chunk descriptors of the dead collective are
+            # drained, acked and parked under their old tag window)
+            out = c.allreduce(np.full(64, float(env.rank + 1)),
+                              algo="rd")
+            return float(out[0])
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          timeout=120)
+        assert res == [3.0, 3.0]
+
+    def test_abort_after_normal_completion_recycles(self):
+        """Control: a collective that completes normally RETURNS its
+        slot set to the round pool (the leak above is abort-only)."""
+        def prog(env):
+            c = env.comm
+            c.iallreduce(np.full(40000, 1.0), algo="rd",
+                         chunk_bytes=65536).wait(60)
+            c.barrier()
+            return len(c._rounds._free_sets)
+
+        assert all(k == 1 for k in run_threads(2, prog, cell_size=CELL,
+                                               pool_bytes=64 << 20,
+                                               timeout=120))
+
+
+# --------------------------------------------------------------------------
+# persistent bcast / allgather inits
+# --------------------------------------------------------------------------
+
+class TestPersistentBcastAllgather:
+    @pytest.mark.parametrize("n", [2, 3])
+    def test_bcast_init_iterations(self, n):
+        def prog(env):
+            c = env.comm
+            x = np.zeros(3000)
+            req = c.bcast_init(x, root=1)
+            vals = []
+            for i in range(4):
+                if c.rank == 1:
+                    x[:] = float(i + 5)
+                out = req.start().wait(60)
+                assert out is x          # in-place live-view contract
+                vals.append(float(out[0]))
+            c.barrier()
+            req.free()
+            return vals
+
+        for vals in run_threads(n, prog, cell_size=CELL,
+                                pool_bytes=64 << 20,
+                                comm_kw={"matchbox_slots": 16},
+                                timeout=120):
+            assert vals == [5.0, 6.0, 7.0, 8.0]
+
+    def test_allgather_init_ring_deterministic_hits(self):
+        """Ring allgather is CYCLIC, so the one-iteration-ahead
+        pre-post gives the same 100% posted-hit determinism as
+        allreduce_init; the arena footprint stays flat."""
+        iters = 5
+
+        def prog(env):
+            c = env.comm
+            sh = np.zeros(2000)
+            req = c.allgather_init(sh, algo="ring")
+            h0, r0 = c.posted_sends, c.rndv_sends
+            slots = []
+            outs = []
+            for i in range(iters):
+                sh[:] = float(10 * env.rank + i)
+                outs.append(req.start().wait(60)
+                            .reshape(c.size, -1)[:, 0].tolist())
+                c.barrier()
+                slots.append(env.arena.stats()["slots_used"])
+            hits, rndv = c.posted_sends - h0, c.rndv_sends - r0
+            c.barrier()
+            req.free()
+            return outs, hits, rndv, slots
+
+        n = 3
+        res = run_threads(n, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          comm_kw={"matchbox_slots": 16}, timeout=120)
+        for outs, hits, rndv, slots in res:
+            for i, row in enumerate(outs):
+                assert row == [float(10 * r + i) for r in range(n)]
+            assert hits == rndv and rndv >= iters
+            assert len(set(slots)) == 1
+
+    def test_bcast_allgather_init_free_releases_slots(self):
+        def prog(env):
+            c = env.comm
+            before = env.arena.stats()["slots_used"]
+            c.barrier()
+            pb = c.bcast_init(np.zeros(2000), root=0)
+            sh = np.full(500, float(env.rank + 1))
+            pg = c.allgather_init(sh, algo="bruck")
+            pb.start().wait(60)
+            g = pg.start().wait(60)        # bruck -> rank-order reorder
+            assert np.allclose(g.reshape(c.size, -1)[:, 0],
+                               np.arange(1.0, c.size + 1))
+            c.barrier()
+            pb.free()
+            pg.free()
+            c.barrier()
+            return env.arena.stats()["slots_used"] - before
+
+        assert all(d == 0 for d in run_threads(2, prog, cell_size=CELL,
+                                               pool_bytes=64 << 20,
+                                               timeout=120))
+
+
+class TestAutoChunkAgreement:
+    def test_auto_chunk_base_agreed_across_probing_ranks(self):
+        """eager_threshold="auto" probes per rank (crossovers may
+        differ), but chunk counts become sub-round wire tags — the
+        "auto" chunk basis must be the communicator-agreed maximum, and
+        a chunked "auto" collective must still reduce correctly."""
+        def prog(env):
+            c = env.comm
+            out = c.iallreduce(np.arange(40000.0) * (env.rank + 1),
+                               chunk_bytes="auto").wait(60)
+            return c._chunk_base, out
+
+        res = run_threads(2, prog, cell_size=CELL,
+                          eager_threshold="auto", pool_bytes=64 << 20,
+                          timeout=120)
+        bases = [b for b, _ in res]
+        assert bases[0] == bases[1] and bases[0] is not None
+        exp = np.arange(40000.0) * 3
+        for _, out in res:
+            assert np.allclose(out, exp)
