@@ -78,6 +78,12 @@ class ProtocolStats:
     # the benchmarks gate on) — read both when sizing
     # ``Communicator(matchbox_slots=...)``.
     mb_capacity_misses: int = 0
+    # SENDER-side matchbox cost: every strip slot a ``_mb_claim`` call
+    # probed (fast-path single-slot probes and full scans alike). A
+    # chunked send stream through an N-slot strip that keeps rescanning
+    # costs ~N slots per chunk; the claim cursor drops that toward 1 —
+    # this counter is the proof (tests/test_tuning.py gates the ratio).
+    mb_slots_scanned: int = 0
 
     def lines(self, n: int) -> int:
         return (n + CACHELINE - 1) // CACHELINE

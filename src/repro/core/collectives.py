@@ -70,18 +70,33 @@ def auto_chunk_bytes(comm, nbytes: int) -> int | None:
     Payloads under two chunks have nothing to pipeline — None keeps
     them message-granular.
 
+    A TUNED comm (``Comm(tuning="auto")`` with a fresh machine profile)
+    replaces the fixed nbytes/8 rule with the measured bandwidth knee:
+    the chunk is the rank-agreed ``chunk_floor`` — half the largest
+    working set that still runs at peak copy bandwidth (two operands
+    stream through a reduce round), floored at 8x the measured
+    crossover — so every sub-message stays inside the fast cache tier
+    regardless of payload size, instead of scaling with it.
+
     The probe basis must be RANK-AGREED: chunk counts become sub-round
     wire tags, and per-rank probes (``eager_threshold="auto"``) may
     measure different crossovers. ``Comm`` exposes the agreed maximum
-    (``_chunk_probe_base``, a one-time collective); bare communicators
-    fall back to the local value (their thresholds are constructor
-    arguments, identical on every rank by construction)."""
+    (``_chunk_probe_base``, a one-time collective; tuned comms agree
+    once at init); bare communicators fall back to the local value
+    (their thresholds are constructor arguments, identical on every
+    rank by construction)."""
     if nbytes <= 2 * 64 * 1024:
         # the 64 KiB floor alone forces None here — decide before the
         # (blocking, collective) probe agreement below, which would
         # stall a nonblocking call for a provably-None answer. Exact
         # and rank-uniform: nbytes agrees across ranks by MPI contract.
         return None
+    tuned = getattr(comm, "_tuned", None)
+    if tuned is not None:
+        cb = int(tuned["chunk_floor"])
+        if cb <= 0:          # measured sweep: unchunked won everywhere
+            return None
+        return cb if nbytes > 2 * cb else None
     agree = getattr(comm, "_chunk_probe_base", None)
     if agree is not None:
         base = agree()

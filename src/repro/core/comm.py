@@ -54,6 +54,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import collectives as _coll
+from repro.core import profile as _profile
 from repro.core.arena import Arena, _hash_name
 from repro.core.collectives import _is_pow2
 from repro.core.pool import Registration, as_u8
@@ -77,14 +78,19 @@ def _derived_name(parent: str, suffix: str) -> str:
     return name
 
 
-def _hier_group(n: int, group_size: int | None = None) -> int | None:
+def _hier_group(n: int, group_size: int | None = None,
+                ratio: float | None = None) -> int | None:
     """Group size for the FUSED hierarchical allreduce schedule: must
     divide n with a power-of-two group COUNT (the inter phase is
     recursive doubling), 2 <= g < n. Auto picks the valid divisor
-    closest to sqrt(n). None when no valid grouping exists (primes,
-    odd composites without a power-of-two cofactor, or an explicit
-    ``group_size`` the fused schedule cannot honor) — those cases run
-    single-level."""
+    closest to sqrt(n) — or, when a measured intra/inter tier bandwidth
+    ``ratio`` is supplied (machine profile, ``tuning="auto"``), closest
+    to sqrt(n * ratio): a faster intra tier carries proportionally more
+    of the work, so groups grow with the measured advantage instead of
+    assuming the tiers are equal. None when no valid grouping exists
+    (primes, odd composites without a power-of-two cofactor, or an
+    explicit ``group_size`` the fused schedule cannot honor) — those
+    cases run single-level."""
     if group_size is not None:
         g = int(group_size)
         if g < 2 or g >= n or n % g or not _is_pow2(n // g):
@@ -93,7 +99,8 @@ def _hier_group(n: int, group_size: int | None = None) -> int | None:
     cands = [g for g in range(2, n) if n % g == 0 and _is_pow2(n // g)]
     if not cands:
         return None
-    return min(cands, key=lambda g: abs(g - n ** 0.5))
+    target = (n * max(1.0, float(ratio))) ** 0.5 if ratio else n ** 0.5
+    return min(cands, key=lambda g: abs(g - target))
 
 
 class _RoundPool:
@@ -419,6 +426,16 @@ class PersistentCollRequest:
                 return arr
         self._fin = fin
         self._resident = comm._resident
+        # CYCLIC schedules (allreduce, allgather) make the pre-post
+        # handshake a guarantee: the matching posting always exists by
+        # the time a send looks for it, possibly still spilled behind a
+        # depth-capped strip. Such sends WAIT for promotion instead of
+        # burning the one-copy path — that is what keeps the posted-hit
+        # rate deterministically 100% at any matchbox depth. Bcast has
+        # no cycle (the root can outrun a slow subtree), so its sends
+        # keep the opportunistic claim-or-stage behavior.
+        self._await_claim = (5.0 if self._resident and kind != "bcast"
+                             else 0.0)
         # parity-salted tag windows: both iterations' receives are
         # posted concurrently, so their tags must differ
         self._bases = (comm._alloc_coll_tags(persistent=True),
@@ -495,7 +512,8 @@ class PersistentCollRequest:
         self._fill(bufs)
         ex = _SchedExec(comm, self._sched, bufs, self._bases[p],
                         dtype=self._arr.dtype, op=self.op,
-                        finalize=self._fin, bound_recvs=cur)
+                        finalize=self._fin, bound_recvs=cur,
+                        await_claim=self._await_claim)
         comm._engine.add_coll(ex)
         self._active = CollRequest(comm, ex)
         self.started += 1
@@ -544,8 +562,33 @@ class Comm(Communicator):
                  eager_threshold: int | str | None = None,
                  mb_slots: int = DEFAULT_MB_SLOTS,
                  matchbox_slots: int | None = None,
-                 name: str = "world", open_timeout: float = 30.0):
+                 name: str = "world", open_timeout: float = 30.0,
+                 tuning: str | None = None,
+                 profile_path: str | None = None,
+                 _inherit: Optional[dict] = None):
+        if tuning not in (None, "auto"):
+            raise ValueError(f"tuning must be None or 'auto', "
+                             f"got {tuning!r}")
         auto = eager_threshold == "auto"
+        self.tuning = tuning
+        # ``tuning="auto"``: load the measured machine profile
+        # (benchmarks/roofline.py --profile) and derive every tuned
+        # constant from it — eager threshold, chunk floor, hier group
+        # ratio, matchbox depth. Missing/stale profiles warn (in
+        # load_profile) and fall back to the heuristic policies.
+        # Derived comms (split/dup) inherit the parent's state instead.
+        prof = (_profile.load_profile(profile_path)
+                if tuning == "auto" and _inherit is None else None)
+        if (_inherit is None and prof is not None
+                and matchbox_slots is None
+                and mb_slots == DEFAULT_MB_SLOTS):
+            # matchbox depth from measured strip-scan vs spill-promote
+            # cost. The depth sizes the SHARED region before any
+            # collective agreement is possible, so it comes
+            # deterministically from the shared profile file; the
+            # agreement check below hard-fails if ranks diverged (a
+            # depth mismatch is a region-layout mismatch).
+            matchbox_slots = prof.mb_depth
         super().__init__(arena, rank, size, cell_size=cell_size,
                          n_cells=n_cells,
                          eager_threshold=None if auto else eager_threshold,
@@ -559,8 +602,29 @@ class Comm(Communicator):
         self.parent_ranks: tuple[int, ...] = tuple(range(size))
         self.probed_crossover: Optional[int] = None
         self.probe_mode: Optional[str] = None
-        if auto:
+        self.profile = prof
+        self._tuned: Optional[dict] = None
+        if _inherit is not None:
+            # sub-communicators never re-probe or re-agree: the parent
+            # already measured (or loaded) the crossover and agreed the
+            # wire-shaping values, and the child group is a subset of
+            # the ranks that agreed
+            self.profile = _inherit.get("profile")
+            self.probed_crossover = _inherit.get("probed_crossover")
+            self.probe_mode = "inherited"
+            self._chunk_base = _inherit.get("chunk_base")
+            self._tuned = _inherit.get("tuned")
+            return
+        if prof is not None:
+            # the profile REPLACES the init-time ping-pong probe
+            self.probe_mode = "profile"
+            self.probed_crossover = prof.eager_crossover
+            if auto or eager_threshold is None:
+                self.eager_threshold = prof.eager_threshold
+        elif auto:
             self.eager_threshold = self._probe_eager_threshold()
+        if tuning == "auto":
+            self._agree_tuning(prof)
 
     def _lease_round_bufs(self, slot_sizes: dict[int, int]):
         """Schedule-execution hook (core/collectives launch layer):
@@ -586,6 +650,55 @@ class Comm(Communicator):
                     algo="ring").wait()
                 self._chunk_base = int(agreed[0])
         return self._chunk_base
+
+    def _agree_tuning(self, prof) -> None:
+        """Rank-agree the profile-derived tuning at init (the
+        ``_chunk_probe_base`` idiom, run eagerly): one max-allreduce of
+        [crossover, chunk_floor, tier_ratio*1024, mb_depth, -mb_depth].
+        Chunk size and matchbox depth shape the wire (sub-round tags /
+        shared-region layout), so every rank must hold the SAME values.
+        The +depth/-depth pair detects divergence in one max-allreduce
+        (max(-d) = -min(d)); a depth mismatch means the shared matchbox
+        region was sized differently per rank — unrecoverable, so it
+        raises. Ranks whose profile load failed contribute zeros and
+        adopt the agreed values, keeping the collective rank-symmetric
+        (no deadlock when profile visibility diverges)."""
+        vec = np.array([
+            float(prof.eager_crossover) if prof else 0.0,
+            float(prof.chunk_floor) if prof else 0.0,
+            prof.tier_ratio * 1024.0 if prof else 0.0,
+            float(self.mb_slots), -float(self.mb_slots)], np.float64)
+        if self.size > 1:
+            vec = _coll.icoll_allreduce(self, vec, op=np.maximum,
+                                        algo="ring").wait()
+        if vec[3] != -vec[4]:
+            raise RuntimeError(
+                f"matchbox depth diverged across ranks under "
+                f"tuning='auto' (saw depths {int(-vec[4])}..{int(vec[3])})"
+                f": the shared strip region layout is inconsistent — "
+                f"regenerate artifacts/bench/machine_profile.json or "
+                f"pass matchbox_slots explicitly")
+        if vec[0] <= 0:
+            return                       # no rank had a fresh profile
+        self._tuned = {"crossover": int(vec[0]),
+                       "chunk_floor": int(vec[1]),
+                       "tier_ratio": float(vec[2]) / 1024.0,
+                       "mb_depth": int(vec[3])}
+        # pre-seed the chunk-agreement base: no later lazy collective
+        self._chunk_base = int(vec[0])
+
+    def _inherit_state(self) -> dict:
+        """Tuning state handed to split()/dup() children: the agreed
+        values stay valid on any subset of the agreeing ranks."""
+        return {"profile": self.profile,
+                "probed_crossover": self.probed_crossover,
+                "chunk_base": self._chunk_base,
+                "tuned": self._tuned}
+
+    @property
+    def _hier_ratio(self) -> Optional[float]:
+        """Measured intra/inter tier bandwidth ratio (None untuned)."""
+        return self._tuned["tier_ratio"] if self._tuned else None
 
     # ------------------------------------------------------------------
     # auto-tuned eager threshold (one-shot init-time micro-probe)
@@ -727,7 +840,8 @@ class Comm(Communicator):
                    cell_size=self.cell_size, n_cells=self.n_cells,
                    eager_threshold=self.eager_threshold,
                    mb_slots=self.mb_slots,
-                   name=_derived_name(self.name, f"s{seq}.{c}"))
+                   name=_derived_name(self.name, f"s{seq}.{c}"),
+                   tuning=self.tuning, _inherit=self._inherit_state())
         sub.parent_ranks = tuple(ranks)
         return sub
 
@@ -741,7 +855,8 @@ class Comm(Communicator):
                    cell_size=self.cell_size, n_cells=self.n_cells,
                    eager_threshold=self.eager_threshold,
                    mb_slots=self.mb_slots,
-                   name=_derived_name(self.name, f"d{seq}"))
+                   name=_derived_name(self.name, f"d{seq}"),
+                   tuning=self.tuning, _inherit=self._inherit_state())
         sub.parent_ranks = self.parent_ranks
         return sub
 
@@ -912,7 +1027,8 @@ class Comm(Communicator):
         arr = np.ascontiguousarray(arr)
         if algo == "auto":
             if self.size >= 4 and arr.size >= 4096 \
-                    and _hier_group(self.size) is not None:
+                    and _hier_group(self.size,
+                                    ratio=self._hier_ratio) is not None:
                 algo = "hier"
             else:
                 algo = _coll.auto_allreduce_algo(self.size, arr.size)
@@ -941,7 +1057,7 @@ class Comm(Communicator):
         grouping was explicit — the pre-fused sub-comm path accepted
         any divisor)."""
         arr = np.ascontiguousarray(arr)
-        g = _hier_group(self.size, group_size)
+        g = _hier_group(self.size, group_size, ratio=self._hier_ratio)
         if g is None:
             if group_size is not None:
                 warnings.warn(

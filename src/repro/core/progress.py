@@ -279,13 +279,18 @@ class _SchedExec:
     def __init__(self, comm, sched: Schedule, bufs, tag_base: int,
                  dtype=None, op=None,
                  finalize: Optional[Callable] = None,
-                 bound_recvs: Optional[dict[int, Any]] = None):
+                 bound_recvs: Optional[dict[int, Any]] = None,
+                 await_claim: float = 0.0):
         self.comm = comm
         self.sched = sched
         self.bufs = bufs
         self.tag_base = tag_base
         self.dtype = dtype
         self.op = op
+        # persistent cyclic schedules: seconds each send may wait for
+        # its guaranteed (but possibly spilled) matchbox posting before
+        # falling back to staged — see Communicator.isend(_await_claim)
+        self.await_claim = await_claim
         self._finalize = finalize
         self.finished = False
         self.result = None
@@ -385,7 +390,8 @@ class _SchedExec:
                 req = self.comm.isend(nd.peer,
                                       self.bufs.send_payload(nd.buf),
                                       tag=self.tag_base + nd.round,
-                                      _internal=True)
+                                      _internal=True,
+                                      _await_claim=self.await_claim)
                 self._watch(idx, req)
             elif isinstance(nd, ReduceOp):
                 dst = self.bufs.ndview(nd.dst, self.dtype)

@@ -526,6 +526,15 @@ class Communicator:
         self._mb_next_id: dict[int, int] = {}
         self._mb_salvage: dict[tuple[int, int, int], bytes] = {}
         self._mb_claimed: dict[tuple[int, int], int] = {}
+        # claim cursor per destination strip: the slot AFTER the last
+        # successful claim (the receiver promotes spilled postings into
+        # the slot the previous claim freed, so the next-oldest entry
+        # usually lands there) plus the retire frontier — the highest
+        # post_id F with every pid <= F known dead or claimed by us.
+        # pid == F+1 at the cursor slot proves oldest-live without a
+        # scan; see _mb_claim.
+        self._mb_cursor: dict[int, int] = {}
+        self._mb_frontier: dict[int, int] = {}
         self._aliasable: Optional[bool] = None
         self._reg_seq = 0
         self._freed = False
@@ -823,45 +832,97 @@ class Communicator:
     # ------------------------------------------------------------------
     # matchbox: sender side
     # ------------------------------------------------------------------
+    def _mb_match(self, v, off: int, tag: int, wtag: int,
+                  nbytes: int) -> bool:
+        """Tag + capacity filter for one live strip entry."""
+        etag = v.nt_load_u64(off + _MB_TAG)
+        if etag == _MB_ANY:
+            # a wildcard posting belongs to a USER receive — it must
+            # never swallow reserved-tag traffic (collective rounds)
+            if int(tag) >= TAG_RESERVED_BASE:
+                return False
+        elif etag != wtag:
+            return False
+        return v.nt_load_u64(off + _MB_CAP) >= nbytes
+
+    def _mb_commit_claim(self, dest: int, slot: int, pid: int,
+                         off: int) -> Optional[tuple[int, int, int, int]]:
+        """PENDING -> re-check -> owned on one chosen entry; advances
+        the claim cursor on success. Returns the claim tuple or None
+        when the receiver retracted the entry mid-claim."""
+        v = self.arena.view
+        self._mb_claimed[(dest, slot)] = pid
+        v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_PENDING)
+        if v.nt_load_u64(off) != pid:         # receiver retracted mid-claim
+            v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_ABORT)
+            return None
+        self._mb_cursor[dest] = (slot + 1) % self._mb.n_slots
+        return slot, pid, v.nt_load_u64(off + _MB_DEST), off
+
     def _mb_claim(self, dest: int, tag: int, nbytes: int,
                   pool_src: bool) -> Optional[tuple[int, int, int, int]]:
-        """Scan the (dest, self) strip for the OLDEST matching posted
-        entry and claim it (PENDING -> re-check -> owned). Returns
-        (slot, post_id, dest_off, entry_off) or None on miss."""
+        """Claim the OLDEST matching posted entry of the (dest, self)
+        strip (PENDING -> re-check -> owned). Returns
+        (slot, post_id, dest_off, entry_off) or None on miss.
+
+        Fast path first: a chunked send stream claims a strip's entries
+        in strictly increasing post_id order, and the receiver promotes
+        spilled postings into the slot the previous claim freed — so
+        the next-oldest entry is usually at the cursor slot. Per-strip
+        post_ids are monotone and never reused, so an entry there with
+        ``pid == frontier + 1`` is PROVABLY the oldest live entry; if
+        it also matches, claiming it without scanning preserves the
+        oldest-match FIFO rule. Anything else falls back to the full
+        scan. Every slot probed is counted in
+        ``ProtocolStats.mb_slots_scanned``."""
         mb = self._mb
         if mb is None or (pool_src and not self._pool_aliasable()):
             # a pool-resident source on a pool without raw views would
             # need a bounce read+write (2 copies) — staged is cheaper
             return None
         v = self.arena.view
+        st = v.stats
         wtag = int(tag) & _MB_ANY
+        cur = self._mb_cursor.get(dest)
+        fr = self._mb_frontier.get(dest, 0)
+        if cur is not None:
+            off = mb.entry_off(dest, self.rank, cur)
+            st.mb_slots_scanned += 1
+            pid = v.nt_load_u64(off)
+            if (pid == fr + 1
+                    and self._mb_claimed.get((dest, cur)) != pid
+                    and self._mb_match(v, off, tag, wtag, nbytes)):
+                got = self._mb_commit_claim(dest, cur, pid, off)
+                if got is not None:
+                    self._mb_frontier[dest] = pid
+                    return got
+        # ---- full scan: oldest matching post_id wins ----
         best = None
+        lo = None                     # lowest LIVE unclaimed pid seen
         for slot in range(mb.n_slots):
             off = mb.entry_off(dest, self.rank, slot)
+            st.mb_slots_scanned += 1
             pid = v.nt_load_u64(off)
             if not pid or self._mb_claimed.get((dest, slot)) == pid:
                 continue
-            etag = v.nt_load_u64(off + _MB_TAG)
-            if etag == _MB_ANY:
-                # a wildcard posting belongs to a USER receive — it must
-                # never swallow reserved-tag traffic (collective rounds)
-                if int(tag) >= TAG_RESERVED_BASE:
-                    continue
-            elif etag != wtag:
-                continue
-            if v.nt_load_u64(off + _MB_CAP) < nbytes:
+            if lo is None or pid < lo:
+                lo = pid
+            if not self._mb_match(v, off, tag, wtag, nbytes):
                 continue
             if best is None or pid < best[1]:
                 best = (slot, pid, off)
+        if lo is not None:
+            # every pid below the lowest live unclaimed one is retired —
+            # re-arms the fast path across gaps left by receiver
+            # retractions or tag-mismatched claims
+            self._mb_frontier[dest] = max(fr, lo - 1)
         if best is None:
             return None
         slot, pid, off = best
-        self._mb_claimed[(dest, slot)] = pid
-        v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_PENDING)
-        if v.nt_load_u64(off) != pid:         # receiver retracted mid-claim
-            v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_ABORT)
-            return None
-        return slot, pid, v.nt_load_u64(off + _MB_DEST), off
+        got = self._mb_commit_claim(dest, slot, pid, off)
+        if got is not None and pid == self._mb_frontier.get(dest, 0) + 1:
+            self._mb_frontier[dest] = pid
+        return got
 
     # ------------------------------------------------------------------
     # teardown
@@ -983,12 +1044,20 @@ class Communicator:
     # ------------------------------------------------------------------
     def isend(self, dest: int, data, tag: int = 0, *,
               _prestaged: Optional[PoolBuffer] = None,
-              _internal: bool = False) -> Request:
+              _internal: bool = False,
+              _await_claim: float = 0.0) -> Request:
         """``_prestaged``: a persistent staging buffer (owned by a
         ``PersistentRequest``) refilled in place on a matchbox miss —
         the plan stays claim-aware without per-iteration arena churn.
         ``_internal``: schedule/probe traffic may use the reserved tag
-        space user code is fenced out of."""
+        space user code is fenced out of.
+        ``_await_claim``: seconds to keep retrying a missed matchbox
+        claim before falling back to the staged path. Persistent CYCLIC
+        schedules set it: their pre-post handshake guarantees the
+        posting exists (possibly still in the receiver's overflow list
+        awaiting promotion into a depth-capped strip), so waiting keeps
+        the one-copy path deterministic; the deadline preserves
+        liveness if the guarantee is ever violated."""
         if int(tag) < 0:
             # ANY_TAG is a receive-side wildcard; a negative wire tag
             # would never match (fail fast on every protocol path alike)
@@ -1046,6 +1115,13 @@ class Communicator:
             # descriptor; per-pair FIFO matching still happens in queue
             # order on the receiver
             claim = self._mb_claim(dest, tag, nbytes, pview is not None)
+            if claim is None and _await_claim > 0.0 \
+                    and self._mb is not None:
+                deadline = time.monotonic() + _await_claim
+                while claim is None and time.monotonic() < deadline:
+                    yield
+                    claim = self._mb_claim(dest, tag, nbytes,
+                                           pview is not None)
             if claim is not None:
                 slot, pid, dst_off, eoff = claim
                 try:

@@ -653,9 +653,19 @@ def compile_schedule(comm, kind: str, nbytes: int = 0, itemsize: int = 1,
                 f" > MAX_ROUNDS={MAX_ROUNDS}")
         if chunk_bytes is not None:
             chunked = chunk_schedule(sched, chunk_bytes)
-            while chunked.rounds > MAX_ROUNDS:
-                chunk_bytes *= 2
-                chunked = chunk_schedule(sched, chunk_bytes)
+            if chunked.rounds > MAX_ROUNDS:
+                # widen by the MINIMAL integer factor that fits the tag
+                # window (sub-rounds scale ~1/chunk, so start at the
+                # ceiling ratio and step by one base unit): doubling
+                # here could overshoot a knee-derived chunk by nearly
+                # 2x, pushing tuned sub-messages out of the cache tier
+                # the profile chose them to fit
+                base_cb = chunk_bytes
+                factor = -(-chunked.rounds // MAX_ROUNDS)
+                chunked = chunk_schedule(sched, base_cb * factor)
+                while chunked.rounds > MAX_ROUNDS:
+                    factor += 1
+                    chunked = chunk_schedule(sched, base_cb * factor)
             sched = chunked
         cache[key] = sched
     return sched

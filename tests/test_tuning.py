@@ -1,0 +1,350 @@
+"""Measured machine profile + matchbox claim-cursor fast path: the
+pure policy derivations, profile staleness/fingerprint gating,
+``Comm(tuning="auto")`` consumption, crossover inheritance through
+split()/dup(), the sender-side claim cursor's scan accounting, and
+chunked persistent collectives through depth-capped matchboxes."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import run_threads
+from repro.core import profile as prof_mod
+
+CELL = 4096
+
+
+def _profile_data(**over) -> dict:
+    """Minimal valid measured-field set; override per test."""
+    d = {
+        "eager_crossover_bytes": 4096,
+        "copy_knee_bytes": 256 * 1024,
+        "best_chunk_bytes": 1 << 20,
+        "cache_gbps": 80.0,
+        "dram_gbps": 20.0,
+        "strip_scan_us_per_slot": 2.5,
+        "spill_promote_us": 20.0,
+        "yield_cost_us": 0.5,
+    }
+    d.update(over)
+    return d
+
+
+# --------------------------------------------------------------------------
+# pure policy derivations
+# --------------------------------------------------------------------------
+
+class TestDerivations:
+    def test_eager_threshold_half_crossover(self):
+        assert prof_mod.derive_eager_threshold(4096) == 2048
+        assert prof_mod.derive_eager_threshold(1) == 64   # floor
+
+    def test_chunk_floor_measured_argmax_wins(self):
+        assert prof_mod.derive_chunk_floor(1024, 2 << 20) == 2 << 20
+
+    def test_chunk_floor_amortization_and_tagwindow_floors(self):
+        # 8x-crossover dominates a tiny measured optimum...
+        assert prof_mod.derive_chunk_floor(1 << 20, 64 * 1024) == 8 << 20
+        # ...and 64 KiB is the absolute floor
+        assert prof_mod.derive_chunk_floor(64, 1024) == 64 * 1024
+
+    def test_chunk_floor_zero_disables_chunking(self):
+        assert prof_mod.derive_chunk_floor(4096, 0) == 0
+
+    def test_tier_ratio_clamped(self):
+        assert prof_mod.derive_tier_ratio(80.0, 20.0) == 4.0
+        assert prof_mod.derive_tier_ratio(1e6, 1.0) == 64.0
+        assert prof_mod.derive_tier_ratio(1.0, 0.0) == 1.0
+
+    def test_mb_depth_promote_over_scan_clamped(self):
+        assert prof_mod.derive_mb_depth(20.0, 2.5) == 8
+        assert prof_mod.derive_mb_depth(1.0, 10.0) == 4      # floor
+        assert prof_mod.derive_mb_depth(1e4, 1.0) == 32      # cap
+
+
+# --------------------------------------------------------------------------
+# profile file: roundtrip, staleness, fingerprint, env override
+# --------------------------------------------------------------------------
+
+class TestProfileFile:
+    def test_write_load_roundtrip(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        prof = prof_mod.load_profile(p)
+        assert prof is not None
+        assert prof.eager_crossover == 4096
+        assert prof.eager_threshold == 2048
+        assert prof.chunk_floor == 1 << 20
+        assert prof.tier_ratio == 4.0
+        assert prof.mb_depth == 8
+
+    def test_missing_file_is_none(self, tmp_path):
+        assert prof_mod.load_profile(tmp_path / "absent.json") is None
+
+    def test_stale_age_rejected_loudly(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        data = json.loads(p.read_text())
+        data["created"] = time.time() - 48 * 3600
+        p.write_text(json.dumps(data))
+        with pytest.warns(RuntimeWarning, match="stale"):
+            assert prof_mod.load_profile(p) is None
+
+    def test_foreign_host_rejected(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        data = json.loads(p.read_text())
+        data["host"] = "someone-elses-box|arm64|cpus=2"
+        p.write_text(json.dumps(data))
+        with pytest.warns(RuntimeWarning, match="fingerprint"):
+            assert prof_mod.load_profile(p) is None
+
+    def test_schema_drift_rejected(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        data = json.loads(p.read_text())
+        data["schema"] = prof_mod.SCHEMA_VERSION + 1
+        p.write_text(json.dumps(data))
+        with pytest.warns(RuntimeWarning, match="schema"):
+            assert prof_mod.load_profile(p) is None
+
+    def test_missing_field_rejected(self, tmp_path):
+        p = tmp_path / "p.json"
+        data = _profile_data()
+        del data["best_chunk_bytes"]
+        data.update(schema=prof_mod.SCHEMA_VERSION,
+                    host=prof_mod.host_fingerprint(),
+                    created=time.time())
+        p.write_text(json.dumps(data))
+        with pytest.warns(RuntimeWarning, match="best_chunk_bytes"):
+            assert prof_mod.load_profile(p) is None
+
+    def test_env_var_path_override(self, tmp_path, monkeypatch):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        monkeypatch.setenv(prof_mod.ENV_PATH, str(p))
+        prof = prof_mod.load_profile()
+        assert prof is not None and prof.path == p
+
+    def test_max_age_env_override(self, tmp_path, monkeypatch):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        data = json.loads(p.read_text())
+        data["created"] = time.time() - 120.0
+        p.write_text(json.dumps(data))
+        monkeypatch.setenv(prof_mod.ENV_MAX_AGE, "60")
+        with pytest.warns(RuntimeWarning, match="old"):
+            assert prof_mod.load_profile(p) is None
+        monkeypatch.setenv(prof_mod.ENV_MAX_AGE, "3600")
+        assert prof_mod.load_profile(p) is not None
+
+
+# --------------------------------------------------------------------------
+# Comm(tuning="auto") consumes every policy, rank-agreed
+# --------------------------------------------------------------------------
+
+class TestCommConsumesProfile:
+    def test_all_four_policies_applied(self, tmp_path):
+        """A fresh profile replaces the init probe (eager threshold),
+        the /8 chunk rule, the sqrt hier grouping, and the default
+        matchbox depth — identically on every rank."""
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+
+        def prog(env):
+            from repro.core.collectives import auto_chunk_bytes
+            c = env.comm
+            # correctness through the tuned data plane
+            y = c.allreduce(np.ones(40_000), algo="ring")
+            assert np.allclose(y, 2.0)
+            return (c.probe_mode, c.eager_threshold, c.mb_slots,
+                    auto_chunk_bytes(c, 8 << 20),
+                    auto_chunk_bytes(c, 1 << 20),
+                    c._tuned["tier_ratio"] if c._tuned else None)
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path": str(p)},
+                          timeout=120)
+        assert res[0] == res[1]                     # rank-agreed
+        mode, thr, mb, cb_big, cb_small, ratio = res[0]
+        assert mode == "profile"                    # init probe skipped
+        assert thr == 2048                          # crossover / 2
+        assert mb == 8                              # measured depth
+        assert cb_big == 1 << 20                    # measured argmax
+        assert cb_small is None                     # <= 2x floor
+        assert ratio == 4.0
+
+    def test_unchunked_optimum_disables_chunking(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(best_chunk_bytes=0),
+                                   tmp_path / "p.json")
+
+        def prog(env):
+            from repro.core.collectives import auto_chunk_bytes
+            return auto_chunk_bytes(env.comm, 64 << 20)
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path": str(p)}, timeout=60)
+        assert res == [None, None]
+
+    def test_missing_profile_falls_back_to_heuristics(self, tmp_path):
+        """tuning="auto" without a usable profile must not break — it
+        degrades to the pre-profile behavior."""
+        def prog(env):
+            from repro.core.collectives import auto_chunk_bytes
+            c = env.comm
+            assert c._tuned is None
+            return auto_chunk_bytes(c, 8 << 20)
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path":
+                                       str(tmp_path / "absent.json")},
+                          timeout=60)
+        assert res[0] == res[1] == (8 << 20) // 8   # the old /8 rule
+
+
+# --------------------------------------------------------------------------
+# split()/dup() inherit the probed crossover (bugfix)
+# --------------------------------------------------------------------------
+
+class TestCrossoverInheritance:
+    def test_children_never_reprobe(self, tmp_path):
+        """A child communicator inherits the parent's probed crossover
+        and tuning verbatim instead of paying (and possibly disagreeing
+        on) a fresh probe."""
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+
+        def prog(env):
+            import repro.core.comm as comm_mod
+            c = env.comm
+            orig = comm_mod.Comm._probe_eager_threshold
+
+            def boom(self, reps=3):
+                raise AssertionError("child communicator re-probed")
+
+            comm_mod.Comm._probe_eager_threshold = boom
+            try:
+                sub = c.dup()
+                sp = c.split(0, key=c.rank)
+                env.comm.barrier()
+            finally:
+                comm_mod.Comm._probe_eager_threshold = orig
+            out = []
+            for child in (sub, sp):
+                out.append((child.probe_mode, child.probed_crossover,
+                            child.eager_threshold,
+                            child._tuned == c._tuned))
+                child.free()
+            return c.probed_crossover, c.eager_threshold, out
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path": str(p)},
+                          timeout=120)
+        for crossover, thr, children in res:
+            for mode, child_cross, child_thr, same_tuning in children:
+                assert mode == "inherited"
+                assert child_cross == crossover
+                assert child_thr == thr
+                assert same_tuning
+
+
+# --------------------------------------------------------------------------
+# claim cursor: O(1) scans on in-order streams, FIFO preserved
+# --------------------------------------------------------------------------
+
+class TestClaimCursor:
+    def test_in_order_stream_scans_one_slot_per_claim(self):
+        """12 pre-posted receives consumed in post order: the first
+        claim full-scans the strip (12 probes, priming the cursor and
+        frontier), every later claim probes exactly the cursor slot —
+        23 probes total where the cursorless scan paid 144."""
+        n = 12
+        size = 2 * CELL
+
+        def prog(env):
+            st = env.arena.view.stats
+            if env.rank == 0:
+                env.comm.barrier()               # all entries posted
+                s0 = st.mb_slots_scanned
+                reqs = [env.comm.isend(1, bytes([i]) * size, tag=i + 1)
+                        for i in range(n)]
+                env.comm.waitall(reqs, timeout=60)
+                return (st.mb_slots_scanned - s0,
+                        env.comm.posted_sends)
+            bufs = [env.comm.alloc_buffer(size) for _ in range(n)]
+            reqs = [env.comm.irecv_into(0, b, tag=i + 1)
+                    for i, b in enumerate(bufs)]
+            env.comm.barrier()
+            env.comm.waitall(reqs, timeout=60)
+            return [b.read(0, 1) for b in bufs]
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=64 << 20,
+                          comm_kw={"matchbox_slots": n}, timeout=120)
+        scanned, posted = res[0]
+        assert posted == n                       # every send one-copy
+        assert scanned == n + (n - 1)            # 23, not O(n^2)=144
+        assert res[1] == [bytes([i]) for i in range(n)]
+
+    def test_out_of_order_tags_fall_back_without_fifo_violation(self):
+        """The cursor fast path must NOT claim a newer entry while an
+        older live one is merely tag-mismatched: out-of-order tags take
+        the full scan and each message still lands in its own posted
+        buffer."""
+        size = 2 * CELL
+
+        def prog(env):
+            if env.rank == 0:
+                env.comm.barrier()
+                env.comm.send(1, b"\x66" * size, tag=6)  # newer entry
+                env.comm.send(1, b"\x55" * size, tag=5)  # older entry
+                return env.comm.posted_sends
+            pb5 = env.comm.alloc_buffer(size)
+            pb6 = env.comm.alloc_buffer(size)
+            r5 = env.comm.irecv_into(0, pb5, tag=5)      # pid 1
+            r6 = env.comm.irecv_into(0, pb6, tag=6)      # pid 2
+            env.comm.barrier()
+            env.comm.waitall([r5, r6], timeout=60)
+            return pb5.read(0, 1), pb6.read(0, 1)
+
+        res = run_threads(2, prog, cell_size=CELL, eager_threshold=0,
+                          pool_bytes=32 << 20, timeout=60)
+        assert res[0] == 2                       # both claims hit
+        assert res[1] == (b"\x55", b"\x66")      # no cross-delivery
+
+
+# --------------------------------------------------------------------------
+# chunked persistent collectives through a depth-capped matchbox
+# --------------------------------------------------------------------------
+
+class TestDepthCappedPersistent:
+    def test_chunked_allreduce_init_100pct_hits_at_depth_2(self):
+        """12 chunk receives per peer pre-posted through a 2-slot strip:
+        10 spill, and each in-flight send must WAIT for the receiver to
+        promote the next posting (the persistent schedule's await-claim
+        hold) instead of falling back to the staged path. The posted-hit
+        rate stays a deterministic 100%."""
+        iters = 3
+        nelem = 96_000                   # 768 KiB / 8
+        chunk = 64 * 1024                # -> 12 sub-round recvs per peer
+
+        def prog(env):
+            c = env.comm
+            x = np.zeros(nelem)
+            req = c.allreduce_init(x, algo="ring", chunk_bytes=chunk)
+            h0, r0 = c.posted_sends, c.rndv_sends
+            vals = []
+            for i in range(iters):
+                x[:] = float(i * (env.rank + 1))
+                vals.append(float(req.start().wait(120)[0]))
+                c.barrier()
+            hits, rndv = c.posted_sends - h0, c.rndv_sends - r0
+            c.barrier()
+            req.free()
+            return vals, hits, rndv
+
+        res = run_threads(2, prog, cell_size=CELL,
+                          pool_bytes=128 << 20,
+                          comm_kw={"matchbox_slots": 2}, timeout=300)
+        exp = [float(i * 3) for i in range(iters)]
+        for vals, hits, rndv in res:
+            assert vals == exp
+            # every chunk send of every iteration hit a posted entry
+            assert hits == rndv and rndv > 0
