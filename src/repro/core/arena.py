@@ -139,9 +139,10 @@ class Arena:
             v.write_release(_BAKERY_CHOOSING,
                             bytes(_BAKERY_END + 16 * freelist_cap
                                   - _BAKERY_CHOOSING))
-            # zero the 'used' byte of every slot
+            # zero the 'used' byte of every slot — pre-publication init,
+            # no peer can observe the region yet
             for off in range(meta_off, meta_off + meta_size, SLOT_SIZE):
-                v.raw_write(off, b"\x00")
+                v.raw_write(off, b"\x00")  # lint: raw-ok (init)
             hdr = bytearray(_HDR_SIZE)
             hdr[_H_VERSION:_H_VERSION + 4] = VERSION.to_bytes(4, "little")
             hdr[_H_NLEVELS:_H_NLEVELS + 4] = n_levels.to_bytes(4, "little")
@@ -360,7 +361,9 @@ class Arena:
         for lvl in range(self.n_levels):
             base = self.level_off[lvl]
             for i in range(self.caps[lvl]):
-                if self.view.raw_read(base + i * SLOT_SIZE, 1)[0]:
+                # advisory stats snapshot: stale reads are acceptable
+                if self.view.raw_read(base + i * SLOT_SIZE,
+                                      1)[0]:  # lint: raw-ok (stats)
                     used += 1
         return {
             "slots_total": sum(self.caps),

@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import time
 import warnings
-from typing import Optional
+from typing import Any, Optional
 
 import numpy as np
 
@@ -392,13 +392,15 @@ class PersistentCollRequest:
             comm, sched_kind, arr.nbytes, arr.dtype.itemsize, root=root,
             chunk_bytes=_coll._resolve_chunk(comm, chunk_bytes,
                                              arr.nbytes))
-        self.matchbox_demand = 2 * self._sched.max_recvs_per_peer()
+        # two iterations' postings coexist (double-buffered slots), so
+        # demand is twice the schedule's own per-peer pre-post depth
+        self.matchbox_demand = 2 * self._sched.required_matchbox_depth()
         # per-iteration fill + finalize, fixed at init like the wire plan
         sched = self._sched
         shape, dtype, count = arr.shape, arr.dtype, arr.size
         if kind == "allreduce":
-            self._fill = lambda b: b.fill(0, arr,
-                                          pad_to=sched.slot_sizes[0])
+            self._fill = lambda b: b.fill(       # noqa: E731
+                0, arr, pad_to=sched.slot_sizes[0])
 
             def fin(b):
                 flat = b.ndview(sched.result, dtype)[:count]
@@ -406,7 +408,7 @@ class PersistentCollRequest:
         elif kind == "allgather":
             per_b = arr.nbytes
             off = 0 if algo == "bruck" else rank * per_b
-            self._fill = lambda b: b.fill_at(0, off, arr)
+            self._fill = lambda b: b.fill_at(0, off, arr)  # noqa: E731
             if algo == "bruck":
                 def fin(b):
                     work = np.array(b.ndview(sched.result, dtype)) \

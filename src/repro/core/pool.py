@@ -28,7 +28,7 @@ of the zero-copy rendezvous path in ``core/pt2pt.py``.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from multiprocessing import shared_memory
 
 

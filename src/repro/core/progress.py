@@ -325,7 +325,7 @@ class _SchedExec:
         if req.done:
             self._node_done(idx)
         else:
-            req._on_done = lambda _r, i=idx: self._node_done(i)
+            req._on_done = lambda _r, i=idx: self._node_done(i)  # noqa: E731
 
     def _node_done(self, idx: int) -> None:
         self._inflight.pop(idx, None)

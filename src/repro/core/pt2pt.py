@@ -86,19 +86,20 @@ from repro.core.progress import testall as _testall
 from repro.core.progress import waitall as _waitall
 from repro.core.progress import waitany as _waitany
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, FLAG_FIRST, FLAG_LAST,
-                                  FLAG_POSTED, FLAG_RNDV, QueueMatrix)
+                                  FLAG_POSTED, FLAG_RNDV,
+                                  TAG_RESERVED_BASE, QueueMatrix)
 from repro.core.rma import Window
 from repro.core.sync import SeqBarrier
 
 ANY_TAG = -1
 
-# tags at or above this value are RESERVED for internal traffic
+# tags at or above TAG_RESERVED_BASE are RESERVED for internal traffic
 # (collective schedule rounds live at 0x7E??????, the legacy collective
 # tag space at 0x7F000000+). ANY_TAG receives — and ANY_TAG matchbox
 # wildcards — never match reserved tags, so in-flight user wildcard
 # receives cannot steal a collective round (MPI's separate communication
-# contexts, enforced through tag-space partitioning).
-TAG_RESERVED_BASE = 0x7E000000
+# contexts, enforced through tag-space partitioning). The constant is
+# defined in the wire layer (``ringqueue``) and re-exported here.
 # per-launch tag window for collective schedules (see Communicator.
 # _alloc_coll_tags): sequence-numbered windows of MAX_ROUNDS tags
 _TAG_SCHED_BASE = 0x7E000000
@@ -180,6 +181,7 @@ class Matchbox:
         return self.base + ((recv * self.n + send) * self.n_slots
                             + slot) * _MB_ENTRY
 
+    # mb-writer: receiver
     def post(self, recv: int, send: int, slot: int, post_id: int,
              tag: int, dest_off: int, capacity: int) -> None:
         v = self.view
@@ -746,6 +748,7 @@ class Communicator:
         if fallback_delivery:
             self.arena.view.count_mb_miss()
 
+    # mb-writer: receiver
     def _mb_retract(self, rec: _PostRecord) -> None:
         """Withdraw a posting whose receive is completing another way
         (eager, staged, parked, error). If the sender committed a claim
@@ -786,6 +789,7 @@ class Communicator:
         finally:
             self._mb_promote(rec.src)         # the slot is free again
 
+    # mb-writer: receiver
     def _mb_consume(self, rec: _PostRecord) -> None:
         """A posted delivery completed in place: recycle the entry and
         promote the pair's oldest spilled posting into the slot."""
@@ -845,6 +849,7 @@ class Communicator:
             return False
         return v.nt_load_u64(off + _MB_CAP) >= nbytes
 
+    # mb-writer: sender
     def _mb_commit_claim(self, dest: int, slot: int, pid: int,
                          off: int) -> Optional[tuple[int, int, int, int]]:
         """PENDING -> re-check -> owned on one chosen entry; advances
@@ -1088,7 +1093,7 @@ class Communicator:
         nbytes = pview.nbytes if pview is not None else len(mv)
         req.nbytes = nbytes
 
-        def gen():
+        def gen():  # mb-writer: sender
             if dest == self.rank:
                 if pview is not None:
                     payload = bytes(self.arena.view.read_acquire(

@@ -29,7 +29,6 @@ bypass the cell pipeline entirely via a pool-resident staging object.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 
 from repro.core.coherence import CoherentView
 from repro.core.pool import CACHELINE, as_u8
@@ -46,6 +45,13 @@ FLAG_POSTED = 8     # rendezvous payload already sits in a RECEIVER-posted
 
 DEFAULT_CELL_SIZE = 16 * 1024      # MPICH default (paper §4.3)
 OPTIMAL_CELL_SIZE = 64 * 1024      # paper's tuned value
+
+# tags at or above this value are RESERVED for internal traffic (the
+# canonical definition — ``repro.core.pt2pt`` re-exports it with the
+# full tag-space map; it lives here, in the wire framing layer, so the
+# queue's own user-facing send surface can validate without importing
+# the communicator above it)
+TAG_RESERVED_BASE = 0x7E000000
 
 
 def cell_stride(cell_size: int) -> int:
@@ -199,7 +205,12 @@ class SPSCQueue:
     def send_message(self, data, tag: int = 0,
                      timeout: float | None = None) -> int:
         """Chunk ``data`` (any buffer-protocol object) into cells via
-        zero-copy views; returns number of cells used."""
+        zero-copy views; returns number of cells used. User-facing:
+        reserved tags are rejected (internal traffic frames through
+        ``plan_message`` + ``enqueue_parts`` directly)."""
+        if int(tag) >= TAG_RESERVED_BASE:
+            raise ValueError(f"tag {tag:#x} is in the reserved internal "
+                             f"range (>= {TAG_RESERVED_BASE:#x})")
         cells = 0
         for parts, flags in self.plan_message(as_u8(data), tag):
             self.enqueue_parts(parts, flags, timeout=timeout)

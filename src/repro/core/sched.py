@@ -66,11 +66,41 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 __all__ = ["BufRef", "SendOp", "RecvOp", "ReduceOp", "CopyOp",
-           "Schedule", "compile_schedule", "chunk_schedule",
-           "MAX_ROUNDS"]
+           "Schedule", "ScheduleInvariantError", "compile_schedule",
+           "chunk_schedule", "MAX_ROUNDS"]
 
 # rounds per schedule are capped so per-launch tag windows stay disjoint
 MAX_ROUNDS = 256
+
+
+class ScheduleInvariantError(ValueError):
+    """A compiled schedule violates a structural invariant.
+
+    Raised by ``Schedule.validate()`` (and reused by the cross-rank
+    verifier in ``repro.analysis.verify``) instead of ``assert`` so the
+    checks survive ``python -O``. Carries enough context — kind, rank,
+    offending node index and its deps — to locate the bad node without
+    a debugger."""
+
+    def __init__(self, message: str, *, kind: str | None = None,
+                 rank: int | None = None, node: int | None = None,
+                 deps: tuple[int, ...] | None = None):
+        where = []
+        if kind is not None:
+            where.append(f"kind={kind}")
+        if rank is not None:
+            where.append(f"rank={rank}")
+        if node is not None:
+            where.append(f"node={node}")
+        if deps is not None:
+            where.append(f"deps={deps}")
+        if where:
+            message = f"{message} [{', '.join(where)}]"
+        super().__init__(message)
+        self.kind = kind
+        self.rank = rank
+        self.node = node
+        self.deps = deps
 
 
 @dataclass(frozen=True)
@@ -149,26 +179,43 @@ class Schedule:
     def recv_nodes(self) -> list[RecvOp]:
         return [nd for nd in self.nodes if isinstance(nd, RecvOp)]
 
-    def max_recvs_per_peer(self) -> int:
-        """Largest number of receives this schedule posts toward one
-        peer — the matchbox depth a FULLY pre-posted execution needs
-        (persistent mode needs twice this: two iterations' entries
-        coexist)."""
+    def required_matchbox_depth(self, peer: int | None = None) -> int:
+        """Matchbox depth a FULLY pre-posted execution of this schedule
+        needs toward ``peer``: the number of RecvOps whose postings can
+        coexist (the engine pre-posts every receive at start, so that is
+        simply the per-peer receive count). ``peer=None`` returns the
+        max over all peers. This is the single source of truth for the
+        matchbox-demand derivation in ``comm.py`` and for the resource-
+        bound check in ``repro.analysis.verify``."""
         per: dict[int, int] = {}
         for nd in self.recv_nodes():
             per[nd.peer] = per.get(nd.peer, 0) + 1
+        if peer is not None:
+            return per.get(peer, 0)
         return max(per.values(), default=0)
+
+    def max_recvs_per_peer(self) -> int:
+        """Largest number of receives this schedule posts toward one
+        peer (persistent mode needs twice this: two iterations' entries
+        coexist). Alias of ``required_matchbox_depth()``."""
+        return self.required_matchbox_depth()
 
     def validate(self) -> None:
         """Compile-time sanity: deps in range and strictly backward
-        (construction order is a topological order), rounds in span."""
+        (construction order is a topological order), rounds in span.
+
+        Raises ``ScheduleInvariantError`` — not ``assert`` — so the
+        checks hold under ``python -O`` too."""
         for nd in self.nodes:
-            assert all(0 <= d < nd.idx for d in nd.deps), \
-                f"node {nd.idx}: forward/self dep {nd.deps}"
+            if not all(0 <= d < nd.idx for d in nd.deps):
+                raise ScheduleInvariantError(
+                    "forward/self/negative dep", kind=self.kind,
+                    rank=self.rank, node=nd.idx, deps=nd.deps)
             if isinstance(nd, (SendOp, RecvOp)):
-                assert 0 <= nd.round < self.rounds, \
-                    f"node {nd.idx}: round {nd.round} outside " \
-                    f"{self.rounds}"
+                if not 0 <= nd.round < self.rounds:
+                    raise ScheduleInvariantError(
+                        f"round {nd.round} outside span {self.rounds}",
+                        kind=self.kind, rank=self.rank, node=nd.idx)
 
 
 def _is_pow2(n: int) -> bool:
@@ -291,7 +338,9 @@ def _compile_allreduce_rd(n: int, rank: int, nbytes: int) -> Schedule:
     """Recursive doubling: log2(n) rounds, whole-payload exchanges.
     Round r peers with rank^2^r; each round's incoming block lands in
     its OWN slot so every receive pre-posts at start."""
-    assert _is_pow2(n), "recursive doubling needs power-of-two size"
+    if not _is_pow2(n):
+        raise ValueError("recursive doubling needs power-of-two size, "
+                         f"got {n}")
     s = Schedule("allreduce_rd", n, rank)
     acc = BufRef(0, 0, nbytes)
     prev_send = prev_red = None
@@ -374,9 +423,12 @@ def _compile_allreduce_hier(n: int, rank: int, nbytes: int,
     recursive-doubling requirement). Result: slot 0 in chunk order,
     like the fused ring."""
     g = group
+    if g < 1 or n % g:
+        raise ValueError(f"group size {g} must divide comm size {n}")
     m = n // g
-    assert g >= 1 and n % g == 0, "group size must divide comm size"
-    assert _is_pow2(m), "hier needs a power-of-two group count"
+    if not _is_pow2(m):
+        raise ValueError(f"hier needs a power-of-two group count, "
+                         f"got {m} groups")
     count = nbytes // itemsize
     per = -(-count // g)
     per_b = per * itemsize
@@ -628,7 +680,8 @@ _COMPILERS = {
 
 def compile_schedule(comm, kind: str, nbytes: int = 0, itemsize: int = 1,
                      root: int = 0, *, group: int = 0,
-                     chunk_bytes: int | None = None) -> Schedule:
+                     chunk_bytes: int | None = None,
+                     verify: bool = False) -> Schedule:
     """Compile (or fetch from the communicator's cache) the schedule for
     ``kind`` at this (size, rank, payload) — the once-per-(op, size,
     topology) contract. ``nbytes`` is the slot-0 payload for whole-
@@ -637,7 +690,19 @@ def compile_schedule(comm, kind: str, nbytes: int = 0, itemsize: int = 1,
     the schedule at chunk granularity (see ``chunk_schedule``); it is
     widened — never narrowed — until the sub-round count fits the
     per-launch tag window, and the widened value is what the returned
-    schedule's ``chunk_bytes`` reports."""
+    schedule's ``chunk_bytes`` reports.
+
+    ``verify=True`` (debug hook) additionally runs the cross-rank
+    static verifier over this config — compiling ALL ranks' schedules
+    and checking send/recv matching, deadlock freedom, buffer hazards
+    and resource bounds — and raises ``ScheduleInvariantError`` on any
+    finding. Costs O(size) compilations; meant for tests and bring-up
+    of new compilers, not hot paths."""
+    if verify:
+        from repro.analysis import verify as _verify
+        _verify.verify_config(kind, comm.size, nbytes=nbytes,
+                              itemsize=itemsize, root=root, group=group,
+                              chunk_bytes=chunk_bytes).raise_if_failed()
     if chunk_bytes is not None:
         # itemsize-align so no ReduceOp sub-region splits an element
         chunk_bytes = max(itemsize, chunk_bytes - chunk_bytes % itemsize)

@@ -1,0 +1,167 @@
+"""Protocol-discipline linter: the shipped core must lint clean, and
+each rule must fire on a minimal synthetic violation (and stay quiet
+on the sanctioned counterpart)."""
+from pathlib import Path
+
+import repro.core
+from repro.analysis.lint_protocol import lint_paths, lint_sources
+
+CORE = Path(repro.core.__file__).resolve().parent
+
+
+def codes(findings):
+    return {f.rule for f in findings}
+
+
+class TestShippedCore:
+    def test_core_lints_clean(self):
+        findings = lint_paths([CORE])
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+
+class TestRawAccess:
+    def test_raw_write_outside_coherence_layer_flagged(self):
+        fs = lint_sources({"x/foo.py":
+                           "def f(v):\n    v.raw_write(0, b'x')\n"})
+        assert codes(fs) == {"LP001"}
+        assert fs[0].line == 2
+
+    def test_pool_and_backing_chains_flagged(self):
+        src = ("def f(self, data):\n"
+               "    self.pool.write(0, data)\n"
+               "    return self.backing.read(0, 8)\n")
+        fs = lint_sources({"x/foo.py": src})
+        assert [f.line for f in fs] == [2, 3]
+        assert codes(fs) == {"LP001"}
+
+    def test_waiver_comment_suppresses(self):
+        src = ("def f(v):\n"
+               "    v.raw_write(0, b'x')  # lint: raw-ok (init)\n")
+        assert lint_sources({"x/foo.py": src}) == []
+
+    def test_coherence_layer_itself_exempt(self):
+        src = "def f(self, o, d):\n    self.pool.write(o, d)\n"
+        assert lint_sources({"x/coherence.py": src}) == []
+        assert lint_sources({"x/pool.py": src}) == []
+
+
+class TestReservedTags:
+    def test_unvalidated_surface_flagged(self):
+        src = ("def isend(self, dest, data, tag=0):\n"
+               "    return self.q.push(data, tag)\n")
+        fs = lint_sources({"x/a.py": src})
+        assert codes(fs) == {"LP002"}
+        assert "isend" in fs[0].message
+
+    def test_direct_validation_passes(self):
+        src = ("TAG_RESERVED_BASE = 1 << 30\n"
+               "def isend(self, dest, data, tag=0):\n"
+               "    if tag >= TAG_RESERVED_BASE:\n"
+               "        raise ValueError(tag)\n")
+        assert lint_sources({"x/a.py": src}) == []
+
+    def test_delegation_reaches_validation(self):
+        # recv -> irecv -> _impl references the constant: all clean
+        src = ("TAG_RESERVED_BASE = 1 << 30\n"
+               "def _impl(self, src, tag):\n"
+               "    assert tag < TAG_RESERVED_BASE\n"
+               "def irecv(self, src, tag=0):\n"
+               "    return self._impl(src, tag)\n"
+               "def recv(self, src, tag=0):\n"
+               "    return self.irecv(src, tag).wait()\n")
+        assert lint_sources({"x/a.py": src}) == []
+
+    def test_class_instantiation_counts_as_delegation(self):
+        # send_init returns a request object whose start() validates —
+        # the comm.py persistent-request shape
+        src = ("TAG_RESERVED_BASE = 1 << 30\n"
+               "class PersistentRequest:\n"
+               "    def start(self):\n"
+               "        if self.tag >= TAG_RESERVED_BASE:\n"
+               "            raise ValueError\n"
+               "def send_init(self, dest, buf, tag=0):\n"
+               "    return PersistentRequest(self, dest, buf, tag)\n")
+        assert lint_sources({"x/a.py": src}) == []
+
+    def test_private_and_tagless_surfaces_ignored(self):
+        src = ("def _isend(self, dest, data, tag=0):\n"
+               "    return 1\n"
+               "def send_queue(self, dest):\n"
+               "    return 2\n")
+        assert lint_sources({"x/a.py": src}) == []
+
+
+class TestTickSleeps:
+    def test_nonzero_sleep_in_progress_flagged(self):
+        src = "import time\n\ndef tick():\n    time.sleep(0.001)\n"
+        fs = lint_sources({"x/progress.py": src})
+        assert codes(fs) == {"LP003"}
+
+    def test_non_literal_sleep_flagged(self):
+        src = "import time\n\ndef tick(d):\n    time.sleep(d)\n"
+        assert codes(lint_sources({"x/progress.py": src})) == {"LP003"}
+
+    def test_yield_sleep_zero_allowed(self):
+        src = "import time\n\ndef tick():\n    time.sleep(0)\n"
+        assert lint_sources({"x/progress.py": src}) == []
+
+    def test_other_files_not_tick_paths(self):
+        src = "import time\n\ndef poll():\n    time.sleep(0.5)\n"
+        assert lint_sources({"x/pt2pt.py": src}) == []
+
+
+class TestMatchboxSingleWriter:
+    def test_unannotated_store_flagged(self):
+        src = ("_MB_CLAIM = 32\n"
+               "def claim(v, off, pid):\n"
+               "    v.nt_store_u64(off + _MB_CLAIM, pid)\n")
+        fs = lint_sources({"x/mb.py": src})
+        assert codes(fs) == {"LP004"}
+        assert "unannotated" in fs[0].message
+
+    def test_wrong_side_flagged(self):
+        src = ("_MB_CLAIM = 32\n"
+               "# mb-writer: receiver\n"
+               "def retract(v, off):\n"
+               "    v.nt_store_u64(off + _MB_CLAIM, 0)\n")
+        fs = lint_sources({"x/mb.py": src})
+        assert codes(fs) == {"LP004"}
+        assert "single-writer" in fs[0].message
+
+    def test_correct_annotations_pass(self):
+        src = ("_MB_CLAIM = 32\n"
+               "_MB_TAG = 8\n"
+               "# mb-writer: sender\n"
+               "def claim(v, off, pid):\n"
+               "    v.nt_store_u64(off + _MB_CLAIM, pid)\n"
+               "# mb-writer: receiver\n"
+               "def post(mb, v, slot, tag):\n"
+               "    off = mb.entry_off(0, 1, slot)\n"
+               "    v.nt_store_u64(off + _MB_TAG, tag)\n"
+               "    v.nt_store_u64(off, 7)\n")
+        assert lint_sources({"x/mb.py": src}) == []
+
+    def test_bare_postid_publish_needs_annotation(self):
+        src = ("def publish(mb, v, slot):\n"
+               "    off = mb.entry_off(0, 1, slot)\n"
+               "    v.nt_store_u64(off, 7)\n")
+        assert codes(lint_sources({"x/mb.py": src})) == {"LP004"}
+
+    def test_non_matchbox_stores_ignored(self):
+        src = ("def ack(v, ack_off):\n"
+               "    v.nt_store_u8(ack_off + 4, 1)\n")
+        assert lint_sources({"x/mb.py": src}) == []
+
+
+class TestCli:
+    def test_cli_clean_on_core(self, capsys):
+        from repro.analysis.lint_protocol import main
+        assert main([str(CORE)]) == 0
+        assert "0 finding(s)" in capsys.readouterr().out
+
+    def test_cli_nonzero_on_violation(self, tmp_path, capsys):
+        from repro.analysis.lint_protocol import main
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(v):\n    v.raw_write(0, b'x')\n")
+        assert main([str(bad)]) == 1
+        assert "LP001" in capsys.readouterr().out

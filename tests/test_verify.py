@@ -1,0 +1,276 @@
+"""Cross-rank static verifier: the full compiler matrix must prove
+clean, and every injected defect must be rejected with the right
+diagnostic (the mutation half is what shows the checks have teeth)."""
+import numpy as np
+import pytest
+
+from repro.analysis import verify as V
+from repro.core import run_threads
+from repro.core.sched import (MAX_ROUNDS, BufRef, RecvOp, Schedule,
+                              ScheduleInvariantError, SendOp,
+                              compile_schedule)
+
+
+# --------------------------------------------------------------------------
+# the exhaustive sweep: every shape the compilers currently emit
+# --------------------------------------------------------------------------
+
+class TestMatrixSweep:
+    def test_full_matrix_is_clean(self):
+        count, bad = V.sweep(16)
+        assert not bad, "\n".join(str(r) for r in bad)
+        # all algos x 2..16 ranks x chunk variants x hier groups
+        assert count > 400
+
+    def test_widening_boundary_config_included_and_clean(self):
+        # chunk so fine the sub-rounds would blow the tag window: the
+        # compiler must widen, and the widened shape must verify
+        rep = V.verify_config("allreduce_rd", 16, nbytes=65536,
+                              itemsize=8, chunk_bytes=64)
+        assert rep.ok, str(rep)
+        scheds = V.compile_group("allreduce_rd", 16, nbytes=65536,
+                                 itemsize=8, chunk_bytes=64)
+        assert scheds[0].rounds <= MAX_ROUNDS
+        assert scheds[0].chunk_bytes > 64
+
+    def test_report_str_mentions_config(self):
+        rep = V.verify_config("bcast", 4, nbytes=128)
+        assert rep.ok
+        assert "bcast" in str(rep) and "OK" in str(rep)
+
+
+# --------------------------------------------------------------------------
+# mutation tests: inject one known defect each, expect one distinct
+# diagnostic each
+# --------------------------------------------------------------------------
+
+def _two_rank(nodes0, nodes1, *, rounds, slot_sizes=None):
+    """Hand-build a 2-rank schedule pair for defect injection."""
+    out = []
+    for rank, nodes in ((0, nodes0), (1, nodes1)):
+        s = Schedule("handmade", 2, rank)
+        for nd in nodes:
+            s._add(nd)
+        s.rounds = rounds
+        if slot_sizes:
+            s.slot_sizes.update(slot_sizes)
+        out.append(s)
+    return out
+
+
+class TestMutations:
+    def test_dropped_recv_is_orphan_send(self):
+        scheds = V.compile_group("bcast", 2, nbytes=64)
+        scheds[1].nodes = [nd for nd in scheds[1].nodes
+                           if not isinstance(nd, RecvOp)]
+        rep = V.verify_schedules(scheds)
+        assert rep.codes() == {"orphan-send"}
+        (f,) = rep.findings
+        assert "no matching receive" in f.message and f.rank == 0
+
+    def test_forward_dep_is_invariant_violation(self):
+        scheds = V.compile_group("allreduce_ring", 4, nbytes=512,
+                                 itemsize=8)
+        scheds[0].nodes[0].deps = (2,)            # dep on a later node
+        rep = V.verify_schedules(scheds)
+        assert rep.codes() == {"invariant"}
+        assert any("dep" in f.message for f in rep.findings)
+
+    def test_swapped_tags_orphan_both_sides(self):
+        scheds = V.compile_group("allgather_bruck", 4, nbytes=256)
+        sends = [nd for nd in scheds[0].nodes if isinstance(nd, SendOp)]
+        sends[0].round, sends[1].round = sends[1].round, sends[0].round
+        rep = V.verify_schedules(scheds)
+        # the mis-tagged sends match nothing AND starve the peers'
+        # receives — both orphan classes, unlike a dropped recv
+        assert "orphan-send" in rep.codes()
+        assert "orphan-recv" in rep.codes()
+
+    def test_truncated_send_is_size_mismatch(self):
+        scheds = V.compile_group("allreduce_rd", 2, nbytes=256,
+                                 itemsize=8)
+        snd = next(nd for nd in scheds[0].nodes
+                   if isinstance(nd, SendOp))
+        snd.buf = BufRef(snd.buf.slot, snd.buf.off, 128)
+        rep = V.verify_schedules(scheds)
+        assert "size-mismatch" in rep.codes()
+
+    def test_overlapping_unordered_writes_are_hazard(self):
+        # two dependency-free receives scribble overlapping slot-0 bytes
+        scheds = _two_rank(
+            [RecvOp(deps=(), peer=1, buf=BufRef(0, 0, 64), round=0),
+             RecvOp(deps=(), peer=1, buf=BufRef(0, 32, 64), round=1)],
+            [SendOp(deps=(), peer=0, buf=BufRef(0, 0, 64), round=0),
+             SendOp(deps=(0,), peer=0, buf=BufRef(0, 32, 64), round=1)],
+            rounds=2)
+        rep = V.verify_schedules(scheds)
+        assert "buffer-hazard" in rep.codes()
+        f = next(f for f in rep.findings if f.code == "buffer-hazard")
+        assert f.rank == 0 and "no dependency path" in f.message
+
+    def test_depth_overflow_against_declared_capacity(self):
+        # ring posts n-1 receives toward the left neighbour; a declared
+        # capacity of 1 cannot hold them
+        scheds = V.compile_group("allreduce_ring", 4, nbytes=512,
+                                 itemsize=8)
+        rep = V.verify_schedules(scheds, matchbox_capacity=1)
+        assert rep.codes() == {"depth-overflow"}
+        assert any("capacity" in f.message for f in rep.findings)
+
+    def test_cross_rank_cycle_is_deadlock(self):
+        # rank 0 sends only after receiving, rank 1 likewise, and the
+        # wire edges close the loop: a classic exchange deadlock
+        scheds = _two_rank(
+            [RecvOp(deps=(), peer=1, buf=BufRef(1, 0, 64), round=0),
+             SendOp(deps=(0,), peer=1, buf=BufRef(0, 0, 64), round=1)],
+            [RecvOp(deps=(), peer=0, buf=BufRef(1, 0, 64), round=1),
+             SendOp(deps=(0,), peer=0, buf=BufRef(0, 0, 64), round=0)],
+            rounds=2)
+        rep = V.verify_schedules(scheds)
+        assert "deadlock" in rep.codes()
+        f = next(f for f in rep.findings if f.code == "deadlock")
+        assert "cycle" in f.message and "->" in f.message
+
+    def test_unchained_same_slot_sends_are_flagged(self):
+        scheds = _two_rank(
+            [SendOp(deps=(), peer=1, buf=BufRef(0, 0, 64), round=0),
+             SendOp(deps=(), peer=1, buf=BufRef(0, 64, 64), round=1)],
+            [RecvOp(deps=(), peer=0, buf=BufRef(1, 0, 64), round=0),
+             RecvOp(deps=(), peer=0, buf=BufRef(2, 0, 64), round=1)],
+            rounds=2)
+        rep = V.verify_schedules(scheds)
+        assert "unchained-send" in rep.codes()
+        assert any("drain-ack" in f.message for f in rep.findings)
+
+    def test_zero_byte_sends_exempt_from_chaining(self):
+        # the dissemination barrier's empty messages never take the
+        # pool path — they must NOT trip the send-chain rule
+        rep = V.verify_config("barrier", 8)
+        assert rep.ok, str(rep)
+
+    def test_duplicate_round_is_duplicate_match(self):
+        scheds = _two_rank(
+            [SendOp(deps=(), peer=1, buf=BufRef(0, 0, 64), round=0),
+             SendOp(deps=(0,), peer=1, buf=BufRef(0, 0, 64), round=0)],
+            [RecvOp(deps=(), peer=0, buf=BufRef(1, 0, 64), round=0)],
+            rounds=1)
+        rep = V.verify_schedules(scheds)
+        assert "duplicate-match" in rep.codes()
+
+    def test_tag_window_overflow_flagged(self):
+        scheds = V.compile_group("bcast", 2, nbytes=64)
+        for s in scheds:
+            s.rounds = MAX_ROUNDS + 1
+        rep = V.verify_schedules(scheds)
+        assert "tag-window" in rep.codes()
+
+    def test_rounds_disagreement_flagged(self):
+        scheds = V.compile_group("bcast", 2, nbytes=64)
+        scheds[1].rounds += 1
+        rep = V.verify_schedules(scheds)
+        assert "rounds-mismatch" in rep.codes()
+
+    def test_raise_if_failed_carries_diagnostics(self):
+        scheds = V.compile_group("bcast", 2, nbytes=64)
+        scheds[1].nodes = []
+        with pytest.raises(ScheduleInvariantError, match="orphan-send"):
+            V.verify_schedules(scheds).raise_if_failed()
+
+
+# --------------------------------------------------------------------------
+# satellite: ScheduleInvariantError replaces bare asserts
+# --------------------------------------------------------------------------
+
+class TestInvariantError:
+    def test_validate_raises_typed_error_with_context(self):
+        s = Schedule("t", 2, 0)
+        s._add(SendOp(deps=(), peer=1, buf=BufRef(0, 0, 8), round=0))
+        s.rounds = 1
+        s.nodes[0].deps = (5,)
+        with pytest.raises(ScheduleInvariantError) as ei:
+            s.validate()
+        assert ei.value.node == 0 and ei.value.deps == (5,)
+        assert "t" in str(ei.value) and "rank=0" in str(ei.value)
+
+    def test_round_outside_span_raises(self):
+        s = Schedule("t", 2, 0)
+        s._add(RecvOp(deps=(), peer=1, buf=BufRef(0, 0, 8), round=3))
+        s.rounds = 1
+        with pytest.raises(ScheduleInvariantError, match="outside"):
+            s.validate()
+
+    def test_compiler_preconditions_survive_without_asserts(self):
+        with pytest.raises(ValueError, match="power-of-two"):
+            V.compile_group("allreduce_rd", 6, nbytes=64, itemsize=8)
+        with pytest.raises(ValueError, match="divide"):
+            V.compile_group("allreduce_hier", 8, nbytes=64, itemsize=8,
+                            group=3)
+
+
+# --------------------------------------------------------------------------
+# satellite: matchbox demand has one source of truth
+# --------------------------------------------------------------------------
+
+class TestMatchboxDepth:
+    @pytest.mark.parametrize("kind,kw", [
+        ("allreduce_rd", dict(n=8, nbytes=512, itemsize=8)),
+        ("allreduce_ring", dict(n=6, nbytes=480, itemsize=8)),
+        ("allreduce_hier", dict(n=8, nbytes=512, itemsize=8, group=2)),
+        ("allgather_bruck", dict(n=7, nbytes=128)),
+        ("bcast", dict(n=8, nbytes=512)),
+    ])
+    def test_declared_depth_matches_recount(self, kind, kw):
+        n = kw.pop("n")
+        for sched in V.compile_group(kind, n, **kw):
+            per = {}
+            for nd in sched.recv_nodes():
+                per[nd.peer] = per.get(nd.peer, 0) + 1
+            for peer, depth in per.items():
+                assert sched.required_matchbox_depth(peer) == depth
+            assert sched.required_matchbox_depth() == \
+                max(per.values(), default=0)
+            # the legacy name must stay an alias, not a second formula
+            assert sched.max_recvs_per_peer() == \
+                sched.required_matchbox_depth()
+
+    def test_persistent_demand_derived_from_schedule(self):
+        def prog(env):
+            x = np.ones(64)
+            req = env.comm.allreduce_init(x, algo="ring")
+            demand = req.matchbox_demand
+            declared = 2 * req._sched.required_matchbox_depth()
+            recount = {}
+            for nd in req._sched.recv_nodes():
+                recount[nd.peer] = recount.get(nd.peer, 0) + 1
+            req.free()
+            return demand, declared, max(recount.values())
+
+        for demand, declared, worst in run_threads(4, prog):
+            assert demand == declared == 2 * worst
+
+
+# --------------------------------------------------------------------------
+# the compile_schedule(..., verify=True) debug hook
+# --------------------------------------------------------------------------
+
+class TestVerifyHook:
+    def test_hook_accepts_clean_config(self):
+        view = V._CompileView(4, 1)
+        sched = compile_schedule(view, "allreduce_ring", 512, 8,
+                                 chunk_bytes=128, verify=True)
+        assert sched.rounds <= MAX_ROUNDS
+
+    def test_hook_rejects_bad_config(self, monkeypatch):
+        # simulate a compiler regression: the hook must surface the
+        # verifier's findings as ScheduleInvariantError
+        bad = V.VerificationReport(
+            "stub", [V.Finding("deadlock", "injected")])
+        monkeypatch.setattr(V, "verify_config",
+                            lambda *a, **k: bad)
+        with pytest.raises(ScheduleInvariantError, match="deadlock"):
+            compile_schedule(V._CompileView(2, 0), "bcast", 64,
+                             verify=True)
+
+    def test_cli_sweep_entrypoint(self, capsys):
+        assert V.main(["--max-n", "4"]) == 0
+        assert "0 failing" in capsys.readouterr().out
