@@ -52,10 +52,21 @@ The checks (one ``Finding.code`` per failure class):
     matchbox demand (``Schedule.required_matchbox_depth`` is the single
     source of truth; ``comm.py`` derives persistent demand from it).
 
+One-sided schedules (``rput``/``rget``/``allgather_get``/``bcast_put``)
+verify under the SAME checks: their Put/Get nodes are engine-local
+(the shared-memory store IS the transfer, so they never enter the
+send/recv bijection), while all cross-rank ordering they need rides on
+zero-byte Send/Recv token pairs — which the matching, deadlock and
+depth checks see as ordinary wire traffic. Put reads its staging
+region, Get writes it, so the hazard check orders one-sided data
+movement exactly like Reduce/Copy.
+
 What this does NOT prove: value correctness (reduce order, padding),
 liveness of the runtime engine, or races in the matchbox claim
 protocol itself — those stay with the runtime fuzz suite and the
-``lint_protocol`` discipline linter.
+``lint_protocol`` discipline linter. For one-sided schedules it also
+does not model WINDOW-segment overlap across collectives (epoch
+discipline — fence/PSCW/lock — owns that, as in MPI).
 
 Entry points: ``verify_config`` for one config, ``sweep`` /
 ``iter_matrix`` for the full compiler matrix, ``compile_group`` +
@@ -67,7 +78,7 @@ from __future__ import annotations
 import argparse
 from dataclasses import dataclass, field
 
-from repro.core.sched import (MAX_ROUNDS, RecvOp, Schedule,
+from repro.core.sched import (MAX_ROUNDS, GetOp, PutOp, RecvOp, Schedule,
                               ScheduleInvariantError, SendOp,
                               compile_schedule)
 
@@ -312,10 +323,13 @@ def _check_deadlock(scheds, pairs, out) -> None:
 
 
 def _accesses(nd):
-    """Yield ``(buf, is_write)`` for every region a node touches."""
-    if isinstance(nd, SendOp):
+    """Yield ``(buf, is_write)`` for every LOCAL region a node touches.
+    Put reads its staging region (window store), Get writes it (window
+    load) — the window segment itself is cross-collective state that
+    epoch discipline orders, not the schedule DAG."""
+    if isinstance(nd, (SendOp, PutOp)):
         yield nd.buf, False
-    elif isinstance(nd, RecvOp):
+    elif isinstance(nd, (RecvOp, GetOp)):
         yield nd.buf, True
     else:                                   # ReduceOp / CopyOp
         yield nd.src, False
@@ -472,12 +486,18 @@ def iter_matrix(max_n: int = 16):
                     dict(kind="reduce_scatter_ring", n=n, nbytes=nbytes,
                          itemsize=itemsize),
                     dict(kind="allgather_ring", n=n, nbytes=per_b),
-                    dict(kind="allgather_bruck", n=n, nbytes=per_b)]
+                    dict(kind="allgather_bruck", n=n, nbytes=per_b),
+                    # one-sided: Put/Get nodes + zero-byte token pairs
+                    dict(kind="allgather_get", n=n, nbytes=per_b),
+                    dict(kind="rput", n=n, nbytes=nbytes, root=n - 1),
+                    dict(kind="rget", n=n, nbytes=nbytes, root=n - 1)]
             if pow2:
                 cfgs.append(dict(kind="allreduce_rd", n=n, nbytes=nbytes,
                                  itemsize=itemsize))
             for root in (0, n - 1):
                 cfgs.append(dict(kind="bcast", n=n, nbytes=nbytes,
+                                 root=root))
+                cfgs.append(dict(kind="bcast_put", n=n, nbytes=nbytes,
                                  root=root))
                 cfgs.append(dict(kind="reduce", n=n, nbytes=nbytes,
                                  itemsize=itemsize, root=root))

@@ -64,7 +64,12 @@ class ProtocolStats:
     # report via count_path). Not additive to copied_bytes — framing,
     # descriptors and arena metadata stay unattributed.
     path_copied_bytes: dict = field(default_factory=lambda: {
-        "eager": 0, "rndv_staged": 0, "rndv_posted": 0})
+        "eager": 0, "rndv_staged": 0, "rndv_posted": 0,
+        # one-sided (RMA) data-plane paths: direct window stores/loads
+        # (put/get/rput/rget/accumulate), the notified-put fast path
+        # (put_notify — zero receiver-side copies by construction), and
+        # the schedule-compiled RMA collectives (PutOp/GetOp nodes)
+        "rma_put": 0, "rma_get": 0, "rma_notify": 0, "rma_coll": 0})
     # postable receives whose matchbox posting was still waiting in the
     # per-pair OVERFLOW list when a fallback (eager/staged/parked)
     # delivery completed them — i.e. capacity cost the receive its
@@ -121,7 +126,8 @@ class CoherentView:
 
     def count_path(self, path: str, nbytes: int) -> None:
         """Attribute ``nbytes`` of already-counted payload movement to a
-        pt2pt data-plane path (eager / rndv_staged / rndv_posted)."""
+        data-plane path: pt2pt (eager / rndv_staged / rndv_posted) or
+        one-sided (rma_put / rma_get / rma_notify / rma_coll)."""
         self.stats.path_copied_bytes[path] += nbytes
 
     def count_mb_miss(self) -> None:

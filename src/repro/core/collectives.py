@@ -150,9 +150,16 @@ def _make_bufs(comm: Communicator, sched: Schedule, resident: bool):
 
 
 def _launch(comm: Communicator, sched: Schedule, bufs, dtype, op,
-            finalize) -> CollRequest:
+            finalize, *, win=None, win_disp: int = 0,
+            rma_path: str = "rma_coll") -> CollRequest:
+    """Bind a compiled schedule to its buffers and hand it to the shared
+    progress engine. ``win`` attaches an RMA window for schedules with
+    Put/Get nodes (the one-sided collectives launched from
+    ``repro.core.rma``); their payload bytes land in the ``rma_path``
+    ``ProtocolStats`` bucket."""
     ex = _SchedExec(comm, sched, bufs, comm._alloc_coll_tags(),
-                    dtype=dtype, op=op, finalize=finalize)
+                    dtype=dtype, op=op, finalize=finalize, win=win,
+                    win_disp=win_disp, rma_path=rma_path)
     comm._engine.add_coll(ex)
     return CollRequest(comm, ex)
 

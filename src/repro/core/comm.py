@@ -557,7 +557,26 @@ class PersistentCollRequest:
 
 
 class Comm(Communicator):
-    """First-class cMPI communicator (the v2 public API)."""
+    """First-class cMPI communicator (the v2 public API).
+
+    One-sided surface (RMA v2): ``win_allocate(name, win_size)``
+    returns a comm-bound :class:`repro.core.rma.Window` exposing
+    blocking put/get/accumulate, request-based ``rput``/``rget``
+    (engine-pumped ``CollRequest``s that mix with pt2pt requests in
+    ``waitall``), notified access (``put_notify``/``wait_notify`` —
+    zero receiver-side payload copies), passive-target
+    ``lock``/``lock_all``/``flush``, and the schedule-compiled window
+    collectives ``Window.allgather``/``Window.bcast``.
+
+    ``tuning="auto"`` reaches the one-sided path too: the agreed chunk
+    floor drives ``chunk_bytes="auto"`` on ``rput``/``rget`` exactly as
+    it drives two-sided collective chunking, and window collectives
+    share this communicator's tag sequence — issue them in the same
+    order on every rank, interleaved with ``Comm`` collectives or not.
+    Accounting: every RMA byte lands in
+    ``arena.view.stats.path_copied_bytes["rma_put" | "rma_get" |
+    "rma_notify" | "rma_coll"]`` (put-like, get-like, notified-put
+    payload, window-collective Put/Get nodes respectively)."""
 
     def __init__(self, arena: Arena, rank: int, size: int, *,
                  cell_size: int = DEFAULT_CELL_SIZE, n_cells: int = 8,

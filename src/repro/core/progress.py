@@ -38,8 +38,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core.sched import (BufRef, CopyOp, RecvOp, ReduceOp, Schedule,
-                              SendOp)
+from repro.core.sched import (BufRef, CopyOp, GetOp, PutOp, RecvOp,
+                              ReduceOp, Schedule, SendOp)
 
 __all__ = ["ProgressEngine", "CollRequest", "waitall", "waitany",
            "testall"]
@@ -280,13 +280,25 @@ class _SchedExec:
                  dtype=None, op=None,
                  finalize: Optional[Callable] = None,
                  bound_recvs: Optional[dict[int, Any]] = None,
-                 await_claim: float = 0.0):
+                 await_claim: float = 0.0, win=None, win_disp: int = 0,
+                 rma_path: str = "rma_coll", rma_budget: int = 0):
         self.comm = comm
         self.sched = sched
         self.bufs = bufs
         self.tag_base = tag_base
         self.dtype = dtype
         self.op = op
+        # one-sided bindings: Put/Get nodes execute against ``win`` at
+        # node.disp + ``win_disp``; their payload bytes are attributed
+        # to the ``rma_path`` ProtocolStats bucket. ``rma_budget`` > 0
+        # caps Put/Get executions per advance() — a chunked rput/rget
+        # then moves one chunk per engine tick instead of memcpy'ing
+        # the whole payload inside the first test()/progress() call,
+        # which is what lets it overlap the caller's compute.
+        self.win = win
+        self.win_disp = win_disp
+        self.rma_path = rma_path
+        self.rma_budget = rma_budget
         # persistent cyclic schedules: seconds each send may wait for
         # its guaranteed (but possibly spilled) matchbox posting before
         # falling back to staged — see Communicator.isend(_await_claim)
@@ -376,9 +388,15 @@ class _SchedExec:
             if req._error is not None:
                 self._abort(req._error)
                 return
+        rma_left = self.rma_budget
         while self._ready:
             idx = self._ready.popleft()
             nd = self.sched.nodes[idx]
+            if self.rma_budget and isinstance(nd, (PutOp, GetOp)):
+                if rma_left == 0:
+                    self._ready.appendleft(idx)   # next tick's chunk
+                    break
+                rma_left -= 1
             if idx in self._bound:
                 continue                     # pre-posted: completes via
             if isinstance(nd, RecvOp):       # its request callback
@@ -402,6 +420,16 @@ class _SchedExec:
                 dst = self.bufs.ndview(nd.dst, np.uint8)
                 src = self.bufs.ndview(nd.src, np.uint8)
                 dst[...] = src
+                self._node_done(idx)
+            elif isinstance(nd, PutOp):
+                self.win._exec_put(nd.target, self.win_disp + nd.disp,
+                                   self.bufs.ndview(nd.buf, np.uint8),
+                                   path=self.rma_path)
+                self._node_done(idx)
+            elif isinstance(nd, GetOp):
+                self.win._exec_get(nd.target, self.win_disp + nd.disp,
+                                   self.bufs.ndview(nd.buf, np.uint8),
+                                   path=self.rma_path)
                 self._node_done(idx)
 
 

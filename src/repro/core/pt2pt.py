@@ -1458,16 +1458,24 @@ class Communicator:
         self._barrier.wait()
 
     def win_allocate(self, name: str, win_size: int) -> Window:
-        """Collective window creation: root creates, others open-poll."""
+        """Collective window creation: root creates, others open-poll.
+
+        The window is bound to this communicator, enabling the full RMA
+        v2 surface: request-based ``rput``/``rget`` (engine-pumped,
+        composable with pt2pt requests in ``waitall``), notified access
+        (``put_notify``/``wait_notify``), passive-target
+        ``lock_all``/``flush``, and the schedule-compiled window
+        collectives (``Window.allgather``/``bcast``). Every RMA byte is
+        accounted under ``stats().path_copied_bytes["rma_*"]``."""
         if self.rank == 0:
             w = Window(self.arena, name, self.size, self.rank, win_size,
-                       create=True)
+                       create=True, comm=self)
         else:
             t0 = time.monotonic()
             while True:
                 try:
                     w = Window(self.arena, name, self.size, self.rank,
-                               win_size, create=False)
+                               win_size, create=False, comm=self)
                     break
                 except FileNotFoundError:
                     if time.monotonic() - t0 > 30.0:

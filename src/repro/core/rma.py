@@ -1,4 +1,5 @@
-"""One-sided communication over shared memory (paper §3.2, §3.4).
+"""One-sided communication over shared memory (paper §3.2, §3.4) — v2,
+rebuilt on the shared schedule/progress core.
 
 A window is ONE arena object sized ``n_ranks * win_size`` laid out
 contiguously across ranks (rank i's segment = [i*win_size, (i+1)*win_size)),
@@ -7,39 +8,95 @@ rank's window address from local information only (base + rank * win_size).
 
 ``MPI_Put`` is a plain write_release into the target segment; ``MPI_Get`` a
 read_acquire from it. No network, no protocol stack, no target-side
-involvement — the entire point of the paper.
+involvement — the entire point of the paper. Every RMA byte is attributed
+to a ``ProtocolStats.path_copied_bytes`` bucket:
 
-The buffer variants ``put_from`` / ``get_into`` move payloads as
-memoryviews with exactly one copy each way (the same primitives the
-pt2pt rendezvous path is built on); ``put_array`` / ``get_array`` are
-ndarray-view wrappers over them — no ``tobytes``/``frombuffer().copy()``.
+  ``rma_put``     blocking put/put_from/put_array, rput chunks,
+                  the accumulate write-back
+  ``rma_get``     blocking get/get_into/get_array, rget chunks,
+                  the accumulate read
+  ``rma_notify``  the payload of ``put_notify`` (the notified-access
+                  fast path — zero receiver-side copies by construction)
+  ``rma_coll``    Put/Get nodes of the window collectives
+                  (``allgather``/``bcast`` compiled as Schedule DAGs)
+
+Request-based RMA (the foMPI recipe, Gerstenberger et al.): ``rput`` /
+``rget`` compile a one-node ``rput``/``rget`` schedule, re-cut by the
+standard chunking post-pass (``Comm(tuning="auto")`` chunk policy via
+``chunk_bytes="auto"``), and return an engine-pumped ``CollRequest`` —
+one chunk moves per progress tick, so a large transfer overlaps the
+caller's compute and mixes freely with pt2pt requests in ``waitall``.
+Completion is LOCAL completion: the source (rput) or destination (rget)
+buffer is free for reuse; because the window is shared memory and every
+chunk is a ``write_release``, local completion here also implies the
+data is globally visible (``flush`` is still the portable spelling).
+
+Notified access (foMPI's ``MPI_Put_notify`` analogue): ``put_notify``
+writes the payload into the target segment and bumps a per-(target,
+origin) monotonic u64 notification counter — single-writer, SeqBarrier
+discipline, non-temporal stores only. The target's ``wait_notify``
+spins on an ``nt_load`` (no payload copy, no matchbox, no descriptor)
+and then consumes the data IN PLACE via ``local_view`` — the receiver
+side of the transfer copies exactly zero payload bytes.
 
 Synchronization (paper §3.4) lives in a companion object created with the
-window: PSCW flag matrices, a seq-number fence barrier, and an RW window
-lock — all atomics-free.
+window: PSCW flag matrices, a seq-number fence barrier, an RW window
+lock — all atomics-free — plus the notify counter matrix. Passive-target
+epochs come in both MPI flavors: ``lock``/``unlock`` (exclusive or
+shared) and ``lock_all``/``unlock_all`` with ``flush``/``flush_local``
+completing outstanding requests mid-epoch.
+
+Epoch semantics cheat-sheet (docs/architecture.md has the long form):
+
+  fence        collective; separates epochs for everyone at once
+  PSCW         post/start/complete/wait — pairwise exposure/access epochs
+  lock(_all)   passive target: the target does not participate at all
+  flush        completes OUTSTANDING requests (rput/rget) — an epoch
+               boundary for data, not for synchronization
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from repro.core.arena import Arena, ObjHandle
 from repro.core.pool import Registration, as_u8
+from repro.core.progress import CollRequest, _HeapBufs, _SchedExec
+from repro.core.sched import compile_schedule
 from repro.core.sync import PSCW, RWLock, SeqBarrier
 
 
+def _notify_bytes(n_ranks: int) -> int:
+    """The notify counter matrix: one u64 per (target, origin) pair.
+    Word (t, o) is written ONLY by origin o (monotonic increment) and
+    read ONLY by target t — the same single-writer discipline as the
+    SeqBarrier words, so no atomics are needed."""
+    return 8 * n_ranks * n_ranks
+
+
 class Window:
-    """cMPI RMA window for a communicator of ``n_ranks``."""
+    """cMPI RMA window for a communicator of ``n_ranks``.
+
+    Construct via ``comm.win_allocate(name, win_size)`` (collective;
+    wires the communicator in so the request-based operations and the
+    window collectives can use the shared progress engine), or directly
+    when only the blocking put/get surface is needed. ``free()`` is
+    collective and idempotent.
+    """
 
     def __init__(self, arena: Arena, name: str, n_ranks: int, rank: int,
-                 win_size: int, *, create: bool):
+                 win_size: int, *, create: bool, comm=None):
         self.arena = arena
         self.name = name
         self.n = n_ranks
         self.rank = rank
         self.win_size = win_size
+        self._comm = comm
         sync_bytes = (SeqBarrier.region_bytes(n_ranks)
                       + PSCW.region_bytes(n_ranks)
-                      + RWLock.region_bytes(n_ranks) + 192)
+                      + RWLock.region_bytes(n_ranks)
+                      + _notify_bytes(n_ranks) + 256)
         if create:
             self.data: ObjHandle = arena.create(f"{name}:w", n_ranks * win_size)
             self.sync: ObjHandle = arena.create(f"{name}:s", sync_bytes)
@@ -55,10 +112,24 @@ class Window:
         b += PSCW.region_bytes(n_ranks)
         b += (-b) % 64
         lock_off = b
+        b += RWLock.region_bytes(n_ranks)
+        b += (-b) % 64
+        self._notify_off = b
         self._fence = SeqBarrier(v, fence_off, n_ranks, rank,
                                  initialize=create)
         self._pscw = PSCW(v, pscw_off, n_ranks, rank, initialize=create)
         self._lock = RWLock(v, lock_off, n_ranks, rank, initialize=create)
+        if create:
+            for i in range(n_ranks * n_ranks):
+                v.nt_store_u64(self._notify_off + 8 * i, 0)
+        # local notification bookkeeping (single-writer counters):
+        # _notify_sent[t] = how many notifies I pushed toward target t;
+        # _notify_seen[o] = how many of origin o's notifies I consumed
+        self._notify_sent = [0] * n_ranks
+        self._notify_seen = [0] * n_ranks
+        # outstanding request-based operations, for flush(): (target,
+        # CollRequest) pairs, pruned opportunistically
+        self._reqs: list = []
         self._freed = False
 
     # ------------------------------------------------------------------
@@ -72,20 +143,60 @@ class Window:
                              f"window of {self.win_size}")
         return self.data.offset + target * self.win_size + disp
 
+    def _notify_word(self, target: int, origin: int) -> int:
+        return self._notify_off + 8 * (target * self.n + origin)
+
+    def _require_comm(self):
+        if self._comm is None:
+            raise RuntimeError(
+                "this Window has no communicator attached — create it "
+                "via comm.win_allocate() to use request-based RMA and "
+                "window collectives")
+        return self._comm
+
     # ------------------------------------------------------------------
-    # RMA operations
+    # engine hooks: how a window-bound _SchedExec executes Put/Get nodes
+    # ------------------------------------------------------------------
+    def _exec_put(self, target: int, disp: int, src,
+                  path: str = "rma_coll") -> None:
+        mv = as_u8(src)
+        self.arena.view.write_release(self._addr(target, disp, len(mv)),
+                                      mv)
+        self.arena.view.count_path(path, len(mv))
+
+    def _exec_get(self, target: int, disp: int, dst,
+                  path: str = "rma_coll") -> int:
+        mv = as_u8(dst)
+        n = self.arena.view.read_acquire_into(
+            self._addr(target, disp, len(mv)), mv)
+        self.arena.view.count_path(path, n)
+        return n
+
+    # ------------------------------------------------------------------
+    # blocking RMA operations
     # ------------------------------------------------------------------
     def put(self, target: int, disp: int, data) -> None:
+        """MPI_Put: store ``data`` into rank ``target``'s segment at
+        byte displacement ``disp``. Blocking and remotely visible on
+        return (write_release). Counts the payload under
+        ``path_copied_bytes["rma_put"]``. Epoch precondition: inside
+        any access epoch (fence/PSCW start/lock/lock_all) covering
+        ``target``."""
         self.put_from(target, disp, data)
 
     def put_from(self, target: int, disp: int, buf) -> None:
-        """MPI_Put from any C-contiguous buffer-protocol object — the
+        """``put`` from any C-contiguous buffer-protocol object — the
         payload moves user buffer -> window exactly once."""
-        mv = as_u8(buf)
-        self.arena.view.write_release(self._addr(target, disp, len(mv)), mv)
+        self._exec_put(target, disp, buf, path="rma_put")
 
     def get(self, target: int, disp: int, n: int) -> bytes:
-        return self.arena.view.read_acquire(self._addr(target, disp, n), n)
+        """MPI_Get: load ``n`` bytes from rank ``target``'s segment at
+        ``disp``. Blocking; returns fresh ``bytes``. Counts under
+        ``path_copied_bytes["rma_get"]``. Same epoch preconditions as
+        ``put``."""
+        out = self.arena.view.read_acquire(self._addr(target, disp, n), n)
+        self.arena.view.count_path("rma_get", n)
+        return out
 
     def get_into(self, target: int, disp: int, dst) -> int:
         """MPI_Get straight into a writable caller buffer; returns bytes
@@ -96,8 +207,10 @@ class Window:
         a ``PoolBuffer``/``PoolView`` (pool-resident reply buffer —
         window -> pool in one protocol copy), or a ``Registration``
         (pinned user buffer; the get bypasses the shadow since the
-        window is locally addressable)."""
+        window is locally addressable). Counts the payload under
+        ``path_copied_bytes["rma_get"]``."""
         from repro.core.pt2pt import PoolBuffer, PoolView  # lazy: cycle
+        v = self.arena.view
         if isinstance(dst, PoolBuffer):
             dst = PoolView(dst, 0, dst.nbytes)
         if isinstance(dst, PoolView):
@@ -109,18 +222,21 @@ class Window:
             except TypeError:
                 # no raw views (incoherent pool): bounce once, protocol-
                 # correct on both legs
-                self.arena.view.write_release(
-                    off, self.arena.view.read_acquire(src_addr, n))
+                v.write_release(off, v.read_acquire(src_addr, n))
+                v.count_path("rma_get", n)
                 return n
-            return self.arena.view.read_acquire_into(src_addr, alias)
+            n = v.read_acquire_into(src_addr, alias)
+            v.count_path("rma_get", n)
+            return n
         mv = dst.mv if isinstance(dst, Registration) else as_u8(dst)
-        return self.arena.view.read_acquire_into(
-            self._addr(target, disp, len(mv)), mv)
+        return self._exec_get(target, disp, mv, path="rma_get")
 
     def put_array(self, target: int, disp: int, arr: np.ndarray) -> None:
+        """``put`` an ndarray (made contiguous if needed)."""
         self.put_from(target, disp, np.ascontiguousarray(arr))
 
     def get_array(self, target: int, disp: int, shape, dtype) -> np.ndarray:
+        """``get`` into a fresh ndarray of ``shape``/``dtype``."""
         out = np.empty(shape, dtype)
         self.get_into(target, disp, out)
         return out
@@ -128,7 +244,11 @@ class Window:
     def accumulate(self, target: int, disp: int, arr: np.ndarray,
                    op=np.add) -> None:
         """MPI_Accumulate. CXL pooled memory has no cross-host atomics, so
-        atomicity comes from the window lock (paper §3.5 motivation)."""
+        atomicity comes from the window lock (paper §3.5 motivation) —
+        the read-op-write runs under the EXCLUSIVE window lock and is
+        atomic against any other locked access. Counts one ``rma_get``
+        plus one ``rma_put`` of the payload. Do not call while already
+        holding the window lock (not reentrant)."""
         self._lock.acquire_excl()
         try:
             cur = self.get_array(target, disp, arr.shape, arr.dtype)
@@ -136,51 +256,323 @@ class Window:
         finally:
             self._lock.release_excl()
 
+    def local_view(self, disp: int, nbytes: int) -> memoryview:
+        """Writable memoryview alias of THIS rank's own window segment
+        — the in-place consumption path for notified access (read the
+        payload where the origin's ``put_notify`` left it: zero
+        receiver-side copies, and none counted). Raises ``TypeError``
+        when the backing pool cannot hand out raw views (incoherent
+        test pools) — fall back to ``get_into`` there."""
+        return self.arena.pool.memview(self._addr(self.rank, disp,
+                                                  nbytes), nbytes)
+
+    # ------------------------------------------------------------------
+    # request-based RMA (rput/rget — local-completion requests)
+    # ------------------------------------------------------------------
+    def rput(self, target: int, disp: int, src, *,
+             chunk_bytes="auto") -> CollRequest:
+        """Request-based put: returns an engine-pumped ``CollRequest``.
+
+        The payload is compiled as a one-node ``rput`` schedule and
+        re-cut by the standard chunking post-pass (``chunk_bytes="auto"``
+        follows the communicator's tuned chunk policy; pass ``None`` to
+        force one monolithic store, or an int byte size). One chunk
+        moves per engine tick, so the transfer overlaps compute between
+        ``rput`` and ``wait()`` and mixes with pt2pt requests in
+        ``comm.waitall``. LOCAL completion: when the request is done the
+        source buffer is reusable — and, window memory being shared, the
+        data is also already visible at the target (``flush`` is the
+        portable spelling of that guarantee). Do not modify ``src``
+        before completion. Counts chunks under
+        ``path_copied_bytes["rma_put"]``. Needs a comm-attached window
+        (``comm.win_allocate``)."""
+        comm = self._require_comm()
+        from repro.core.collectives import _resolve_chunk  # lazy: cycle
+        u8 = np.frombuffer(as_u8(src), np.uint8)
+        nbytes = u8.size
+        self._addr(target, disp, nbytes)     # bounds check up front
+        cb = _resolve_chunk(comm, chunk_bytes, nbytes)
+        sched = compile_schedule(comm, "rput", nbytes, root=target,
+                                 chunk_bytes=cb)
+        bufs = _HeapBufs({})
+        bufs.alias(0, u8)
+        ex = _SchedExec(comm, sched, bufs, 0, win=self, win_disp=disp,
+                        rma_path="rma_put", rma_budget=1,
+                        finalize=lambda b: nbytes)
+        comm._engine.add_coll(ex)
+        req = CollRequest(comm, ex)
+        self._track(target, req)
+        return req
+
+    def rget(self, target: int, disp: int, dst, *,
+             chunk_bytes="auto") -> CollRequest:
+        """Request-based get into a writable buffer (ndarray, bytearray,
+        memoryview or ``Registration``): the chunked mirror of ``rput``.
+        On completion ``dst`` holds the data (``wait()`` also returns
+        it). Counts chunks under ``path_copied_bytes["rma_get"]``."""
+        comm = self._require_comm()
+        from repro.core.collectives import _resolve_chunk  # lazy: cycle
+        mv = dst.mv if isinstance(dst, Registration) else as_u8(dst)
+        if mv.readonly:
+            raise ValueError("rget needs a writable destination")
+        u8 = np.frombuffer(mv, np.uint8)
+        nbytes = u8.size
+        self._addr(target, disp, nbytes)
+        cb = _resolve_chunk(comm, chunk_bytes, nbytes)
+        sched = compile_schedule(comm, "rget", nbytes, root=target,
+                                 chunk_bytes=cb)
+        bufs = _HeapBufs({})
+        bufs.alias(0, u8)
+        ex = _SchedExec(comm, sched, bufs, 0, win=self, win_disp=disp,
+                        rma_path="rma_get", rma_budget=1,
+                        finalize=lambda b: dst)
+        comm._engine.add_coll(ex)
+        req = CollRequest(comm, ex)
+        self._track(target, req)
+        return req
+
+    def _track(self, target: int, req: CollRequest) -> None:
+        self._reqs = [(t, r) for t, r in self._reqs if not r.done]
+        self._reqs.append((target, req))
+
+    # ------------------------------------------------------------------
+    # notified access (foMPI's put_notify analogue)
+    # ------------------------------------------------------------------
+    def notify(self, target: int) -> None:
+        """Bump this origin's notification counter at ``target`` (one
+        non-temporal u64 store — no payload, no copies counted). Use
+        after ``rput(...).wait()`` + data already in place, or let
+        ``put_notify`` pair it with the payload write."""
+        self._notify_sent[target] += 1
+        self.arena.view.nt_store_u64(
+            self._notify_word(target, self.rank),
+            self._notify_sent[target])
+
+    def put_notify(self, target: int, disp: int, data) -> None:
+        """Notified put: store ``data`` into ``target``'s segment, then
+        bump the (target, origin) notification counter the target's
+        ``wait_notify`` spins on. The payload moves exactly once
+        (origin -> window, counted under
+        ``path_copied_bytes["rma_notify"]``); the target consumes it IN
+        PLACE via ``local_view`` — the receiver side copies zero bytes,
+        deterministically (no matchbox, no descriptor, no drain). The
+        counter is monotonic and single-writer (only this origin writes
+        this word), so back-to-back notifies queue naturally — but
+        successive payloads to the SAME displacement overwrite, so wait
+        for the consumer (e.g. a reply notify) before reusing a slot."""
+        mv = as_u8(data)
+        self.arena.view.write_release(
+            self._addr(target, disp, len(mv)), mv)
+        self.arena.view.count_path("rma_notify", len(mv))
+        self.notify(target)
+
+    def test_notify(self, origin: int) -> int:
+        """Number of UNCONSUMED notifications from ``origin`` (does not
+        consume; one nt_load)."""
+        cur = self.arena.view.nt_load_u64(
+            self._notify_word(self.rank, origin))
+        return cur - self._notify_seen[origin]
+
+    def wait_notify(self, origin: int, *, count: int = 1,
+                    timeout: float | None = 30.0) -> int:
+        """Block until ``count`` notifications from ``origin`` arrived;
+        consumes and returns them. Spins on one non-temporal load —
+        zero payload copies on this side — while pumping the attached
+        communicator's progress engine (if any) so outstanding requests
+        keep moving."""
+        t0 = time.monotonic()
+        while True:
+            pending = self.test_notify(origin)
+            if pending >= count:
+                self._notify_seen[origin] += count
+                return count
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"wait_notify: {pending}/{count} notifications "
+                    f"from rank {origin}")
+            if self._comm is not None:
+                self._comm._progress()
+            time.sleep(0)
+
+    # ------------------------------------------------------------------
+    # window collectives (RMA-based, compiled as Schedule DAGs)
+    # ------------------------------------------------------------------
+    def iallgather(self, shard: np.ndarray, *,
+                   chunk_bytes=None) -> CollRequest:
+        """Nonblocking get-based allgather over the window: each rank
+        publishes its shard into its OWN segment (disp 0), then every
+        rank GETS every other segment directly — payloads never ride
+        the wire, only zero-byte ready/done tokens do (2(n-1) empty
+        messages). ``wait()`` returns the rank-ordered flat array.
+        Needs ``shard.nbytes <= win_size``; Put/Get bytes land in
+        ``path_copied_bytes["rma_coll"]``. Collective: all ranks call
+        with equal-size shards, in the same order relative to every
+        other collective on this communicator (shared tag sequence)."""
+        comm = self._require_comm()
+        from repro.core.collectives import (_launch, _resolve_chunk,
+                                            immediate)
+        shard = np.ascontiguousarray(shard)
+        per_b, dtype = shard.nbytes, shard.dtype
+        if per_b > self.win_size:
+            raise ValueError(f"shard of {per_b} B exceeds window "
+                             f"segment of {self.win_size} B")
+        if comm.size == 1:
+            return immediate(comm, shard.reshape(-1).copy())
+        cb = _resolve_chunk(comm, chunk_bytes, per_b)
+        sched = compile_schedule(comm, "allgather_get", per_b,
+                                 shard.dtype.itemsize, chunk_bytes=cb)
+        bufs = _HeapBufs(sched.slot_sizes)
+        bufs.fill_at(0, comm.rank * per_b, shard)
+        fin = lambda b: np.array(b.ndview(sched.result, dtype))  # noqa: E731
+        return _launch(comm, sched, bufs, dtype, None, fin, win=self)
+
+    def allgather(self, shard: np.ndarray) -> np.ndarray:
+        """Blocking wrapper over ``iallgather``."""
+        return self.iallgather(shard).wait()
+
+    def ibcast(self, arr: np.ndarray, root: int = 0, *,
+               chunk_bytes=None) -> CollRequest:
+        """Nonblocking put-based binomial-tree bcast over the window:
+        each parent PUTS the payload into its child's own segment and
+        follows with a zero-byte token; the child lands it from its
+        segment into ``arr`` IN PLACE and forwards. ``arr`` must be a
+        C-contiguous ndarray of identical shape/dtype on every rank
+        (MPI bcast-known semantics). Chunked, a child forwards chunk c
+        the moment chunk c landed — the pipelined tree. Needs
+        ``arr.nbytes <= win_size``. Same calling-order contract as
+        ``iallgather``."""
+        comm = self._require_comm()
+        from repro.core.collectives import (_launch, _resolve_chunk,
+                                            immediate)
+        if not (isinstance(arr, np.ndarray) and arr.flags.c_contiguous):
+            raise ValueError("ibcast needs a C-contiguous ndarray "
+                             "(the payload is delivered in place)")
+        if arr.nbytes > self.win_size:
+            raise ValueError(f"payload of {arr.nbytes} B exceeds window "
+                             f"segment of {self.win_size} B")
+        if comm.size == 1:
+            return immediate(comm, arr)
+        cb = _resolve_chunk(comm, chunk_bytes, arr.nbytes)
+        sched = compile_schedule(comm, "bcast_put", arr.nbytes,
+                                 arr.dtype.itemsize, root=root,
+                                 chunk_bytes=cb)
+        bufs = _HeapBufs({})                 # slot 0 IS the user array
+        bufs.alias(0, arr)
+        return _launch(comm, sched, bufs, arr.dtype, None,
+                       lambda b: arr, win=self)
+
+    def bcast(self, arr: np.ndarray, root: int = 0) -> np.ndarray:
+        """Blocking wrapper over ``ibcast``."""
+        return self.ibcast(arr, root).wait()
+
     # ------------------------------------------------------------------
     # synchronization (paper §3.4)
     # ------------------------------------------------------------------
     def fence(self) -> None:
-        """Collective epoch separator (MPI_Win_fence)."""
+        """Collective epoch separator (MPI_Win_fence): completes this
+        rank's outstanding requests (local flush), then joins the
+        seq-number barrier. On return, every rank's RMA ops from the
+        previous epoch are globally visible."""
+        self.flush()
         self._fence.wait()
 
     # PSCW
     def post(self, origins: list[int]) -> None:
+        """Open an EXPOSURE epoch toward ``origins`` (MPI_Win_post):
+        they may access this rank's segment once their ``start``
+        returns. Pair with ``wait``."""
         self._pscw.post(origins)
 
     def start(self, targets: list[int]) -> None:
+        """Open an ACCESS epoch toward ``targets`` (MPI_Win_start):
+        blocks until each has posted. Pair with ``complete``."""
         self._pscw.start(targets)
 
     def complete(self, targets: list[int]) -> None:
+        """Close the access epoch (MPI_Win_complete): flushes this
+        rank's outstanding requests first so the targets observe
+        everything issued inside the epoch."""
+        self.flush()
         self._pscw.complete(targets)
 
     def wait(self, origins: list[int]) -> None:
+        """Close the exposure epoch (MPI_Win_wait): returns once every
+        origin called ``complete``."""
         self._pscw.wait(origins)
 
-    # lock-unlock
+    # lock-unlock (passive target)
     def lock(self, shared: bool = False) -> None:
+        """Passive-target epoch on the window lock (MPI_Win_lock;
+        window-global, not per-rank): exclusive by default, ``shared``
+        for concurrent readers/accumulators. The target rank does not
+        participate."""
         if shared:
             self._lock.acquire_shared()
         else:
             self._lock.acquire_excl()
 
     def unlock(self, shared: bool = False) -> None:
+        """Close a ``lock`` epoch; flushes outstanding requests first
+        (MPI unlock completion semantics)."""
+        self.flush()
         if shared:
             self._lock.release_shared()
         else:
             self._lock.release_excl()
 
+    def lock_all(self) -> None:
+        """Passive-target epoch on ALL ranks at once (MPI_Win_lock_all:
+        shared mode by definition — concurrent lock_all epochs on
+        different ranks proceed in parallel; exclusive access still
+        goes through ``lock()``). Complete individual transfers inside
+        the epoch with ``flush``/``flush_local``."""
+        self._lock.acquire_shared()
+
+    def unlock_all(self) -> None:
+        """Close the ``lock_all`` epoch: flushes every outstanding
+        request, then releases the shared lock."""
+        self.flush()
+        self._lock.release_shared()
+
+    def flush(self, target: int | None = None,
+              timeout: float | None = 60.0) -> None:
+        """Complete outstanding ``rput``/``rget`` requests to ``target``
+        (all targets when ``None``), pumping the progress engine. On a
+        shared-memory window remote completion and local completion
+        coincide — when ``flush`` returns, the data IS in the target
+        segment (each chunk was a write_release)."""
+        keep = []
+        for t, r in self._reqs:
+            if target is None or t == target:
+                r.wait(timeout)
+            elif not r.done:
+                keep.append((t, r))
+        self._reqs = keep
+
+    def flush_local(self, target: int | None = None,
+                    timeout: float | None = 60.0) -> None:
+        """MPI_Win_flush_local: completes the LOCAL side (source/dest
+        buffers reusable). Identical to ``flush`` here — shared-memory
+        chunks are remotely visible the instant they complete locally —
+        kept as a distinct spelling so programs stay portable to
+        transports where the two differ."""
+        self.flush(target, timeout)
+
     def free(self) -> None:
-        """Collective MPI_Win_free: every rank calls it. Fences first so
-        no rank is still inside an access/exposure epoch when the backing
-        objects go away, then rank 0 destroys them. Idempotent on every
-        rank (a second call is a no-op), and safe for non-root ranks that
-        were mid-epoch — the fence orders their last RMA op before the
-        destroy. Note: the destroy itself happens after the final sync
-        point, so do not re-create a window under the same name without
-        an external barrier."""
+        """Collective MPI_Win_free: every rank calls it. Completes this
+        rank's outstanding requests, fences so no rank is still inside
+        an access/exposure epoch when the backing objects go away, then
+        rank 0 destroys them. Idempotent on every rank (a second call
+        is a no-op), and safe for ranks that are mid-epoch — a held
+        lock or an un-waited PSCW epoch is plain shared state that dies
+        with the sync object, and the fence orders every rank's last
+        RMA op before the destroy. Note: the destroy itself happens
+        after the final sync point, so do not re-create a window under
+        the same name without an external barrier."""
         if self._freed:
             return
         self._freed = True
+        self.flush()
         self._fence.wait()
         if self.rank == 0:
             try:

@@ -10,6 +10,21 @@ a collective is compiled into a small dependency DAG of four node kinds
   ReduceOp  dst[...] = op(dst, src) over two regions (local compute)
   CopyOp    dst[...] = src (local data movement)
 
+plus two ONE-SIDED node kinds for schedules bound to an RMA window
+(``repro.core.rma.Window``):
+
+  PutOp     store a local buffer region into rank ``target``'s window
+            segment at byte displacement ``disp`` (write_release — no
+            target-side involvement, no wire message, no tag)
+  GetOp     load rank ``target``'s window segment at ``disp`` into a
+            local buffer region (read_acquire)
+
+Put/Get are LOCAL nodes to the progress engine (the window is shared
+memory — the store IS the transfer); cross-rank ordering in RMA-based
+collectives comes from zero-byte Send/Recv token pairs, which keeps the
+one-sided schedules inside the same verified matching/deadlock/hazard
+discipline as the two-sided ones.
+
 over SYMBOLIC buffer slots (``BufRef``): the IR names `(slot, offset,
 nbytes)` regions, never concrete memory, so one compiled schedule serves
 the pool-resident backend (PoolBuffer round buffers, posted-rendezvous
@@ -66,8 +81,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 __all__ = ["BufRef", "SendOp", "RecvOp", "ReduceOp", "CopyOp",
-           "Schedule", "ScheduleInvariantError", "compile_schedule",
-           "chunk_schedule", "MAX_ROUNDS"]
+           "PutOp", "GetOp", "Schedule", "ScheduleInvariantError",
+           "compile_schedule", "chunk_schedule", "MAX_ROUNDS"]
 
 # rounds per schedule are capped so per-launch tag windows stay disjoint
 MAX_ROUNDS = 256
@@ -146,6 +161,28 @@ class CopyOp(_Node):
 
 
 @dataclass
+class PutOp(_Node):
+    """One-sided store: local region ``buf`` -> rank ``target``'s window
+    segment at byte displacement ``disp`` (plus the execution's
+    ``win_disp`` base). Local to the engine — no wire message, no tag;
+    ``round`` is informational only."""
+    target: int = -1
+    buf: BufRef = None
+    disp: int = 0
+    round: int = 0
+
+
+@dataclass
+class GetOp(_Node):
+    """One-sided load: rank ``target``'s window segment at ``disp`` ->
+    local region ``buf``. Local to the engine, like PutOp."""
+    target: int = -1
+    buf: BufRef = None
+    disp: int = 0
+    round: int = 0
+
+
+@dataclass
 class Schedule:
     """A compiled collective for ONE rank of an n-rank communicator."""
     kind: str
@@ -169,7 +206,7 @@ class Schedule:
 
     @staticmethod
     def _refs(node):
-        if isinstance(node, (SendOp, RecvOp)):
+        if isinstance(node, (SendOp, RecvOp, PutOp, GetOp)):
             return (node.buf,)
         return (node.dst, node.src)
 
@@ -312,6 +349,20 @@ def chunk_schedule(base: Schedule, chunk_bytes: int) -> Schedule:
                     idx = s._add(RecvOp(deps=deps, peer=nd.peer,
                                         buf=buf, round=rnd))
                 subs.append(idx)
+            pieces[nd.idx] = subs
+        elif isinstance(nd, (PutOp, GetOp)):
+            # one-sided: no wire tag, so no sub-round — the local buf
+            # region AND the window displacement split in lockstep
+            m = _n_chunks(nd.buf.nbytes, chunk_bytes)
+            subs = []
+            cls = PutOp if isinstance(nd, PutOp) else GetOp
+            for c in range(m):
+                buf = _sub_region(nd.buf, c, chunk_bytes)
+                deps = map_deps(nd, m, c)
+                subs.append(s._add(cls(deps=deps, target=nd.target,
+                                       buf=buf,
+                                       disp=nd.disp + c * chunk_bytes,
+                                       round=nd.round)))
             pieces[nd.idx] = subs
         else:                                # ReduceOp / CopyOp
             m = _n_chunks(nd.dst.nbytes, chunk_bytes)
@@ -656,6 +707,112 @@ def _compile_barrier(n: int, rank: int) -> Schedule:
     return s
 
 
+# --------------------------------------------------------------------------
+# one-sided (RMA window) kinds — executed by a window-bound _SchedExec
+# --------------------------------------------------------------------------
+
+def _compile_rput(n: int, rank: int, nbytes: int, target: int) -> Schedule:
+    """Request-based put: one PutOp of the whole payload; the chunking
+    post-pass splits it into a per-chunk chain the engine pumps
+    incrementally (local-completion semantics: the request completes
+    when the last chunk left the source buffer)."""
+    s = Schedule("rput", n, rank)
+    s._add(PutOp(deps=(), target=target, buf=BufRef(0, 0, nbytes),
+                 disp=0))
+    s.rounds = 1
+    s.result = None
+    s.validate()
+    return s
+
+
+def _compile_rget(n: int, rank: int, nbytes: int, target: int) -> Schedule:
+    """Request-based get: one GetOp, chunked like ``rput``."""
+    s = Schedule("rget", n, rank)
+    s._add(GetOp(deps=(), target=target, buf=BufRef(0, 0, nbytes),
+                 disp=0))
+    s.rounds = 1
+    s.result = BufRef(0, 0, nbytes)
+    s.validate()
+    return s
+
+
+def _compile_allgather_get(n: int, rank: int, per_b: int) -> Schedule:
+    """Get-based allgather over a window: each rank PUBLISHES its block
+    into its OWN window segment (a self-put), announces readiness to
+    every peer with a zero-byte token (round 0), then GETS every peer's
+    block straight into the rank-ordered output slot the moment that
+    peer's token arrives. A closing zero-byte token (round 1) tells each
+    peer its segment has been read, so the collective is safe to repeat
+    on the same window immediately. Data never rides the wire — only
+    2(n-1) empty tokens do."""
+    s = Schedule("allgather_get", n, rank)
+    empty = BufRef(0, 0, 0)
+    chunk = lambda t: BufRef(0, (t % n) * per_b, per_b)   # noqa: E731
+    pub = s._add(PutOp(deps=(), target=rank, buf=chunk(rank), disp=0))
+    for off in range(1, n):
+        t = (rank + off) % n
+        s._add(SendOp(deps=(pub,), peer=t, buf=empty, round=0))
+    for off in range(1, n):
+        t = (rank + off) % n
+        rdy = s._add(RecvOp(deps=(), peer=t, buf=empty, round=0))
+        get = s._add(GetOp(deps=(rdy,), target=t, buf=chunk(t), disp=0))
+        s._add(SendOp(deps=(get,), peer=t, buf=empty, round=1))
+    for off in range(1, n):
+        t = (rank + off) % n
+        s._add(RecvOp(deps=(), peer=t, buf=empty, round=1))
+    s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), n * per_b)
+    s.rounds = 2
+    s.result = BufRef(0, 0, n * per_b)
+    s.validate()
+    return s
+
+
+def _compile_bcast_put(n: int, rank: int, root: int,
+                       nbytes: int) -> Schedule:
+    """Put-based binomial-tree bcast: the parent PUTS the payload into
+    this rank's own window segment and follows with a zero-byte token;
+    on token arrival the rank GETS the payload from its own segment into
+    slot 0 (the landing copy), forwards by putting into each child's
+    segment, and finally acks the parent (round 1) so the parent's
+    completion implies its subtree no longer reads any segment it wrote
+    — back-to-back bcasts on one window cannot overwrite in-flight
+    data."""
+    s = Schedule("bcast_put", n, rank)
+    buf = BufRef(0, 0, nbytes)
+    empty = BufRef(0, 0, 0)
+    vr = (rank - root) % n
+    land = None
+    parent = None
+    if vr:
+        k = 1
+        while k * 2 <= vr:
+            k *= 2
+        parent = (vr - k + root) % n
+        tok = s._add(RecvOp(deps=(), peer=parent, buf=empty, round=0))
+        land = s._add(GetOp(deps=(tok,), target=rank, buf=buf, disp=0))
+    prev_send = None
+    acks = []
+    k = 1
+    while k < n:
+        if vr < k and vr + k < n:
+            child = (vr + k + root) % n
+            deps = tuple(d for d in (land, prev_send) if d is not None)
+            put = s._add(PutOp(deps=deps, target=child, buf=buf, disp=0))
+            prev_send = s._add(SendOp(deps=(put,), peer=child, buf=empty,
+                                      round=0))
+            acks.append(s._add(RecvOp(deps=(), peer=child, buf=empty,
+                                      round=1)))
+        k *= 2
+    if parent is not None:
+        deps = (land,) + (tuple(acks) if acks else ())
+        s._add(SendOp(deps=deps, peer=parent, buf=empty, round=1))
+    s.slot_sizes[0] = max(s.slot_sizes.get(0, 0), nbytes)
+    s.rounds = 2
+    s.result = buf
+    s.validate()
+    return s
+
+
 _COMPILERS = {
     "allreduce_rd": lambda n, rank, nbytes, itemsize, root, group:
         _compile_allreduce_rd(n, rank, nbytes),
@@ -675,6 +832,16 @@ _COMPILERS = {
         _compile_reduce(n, rank, root, nbytes),
     "barrier": lambda n, rank, nbytes, itemsize, root, group:
         _compile_barrier(n, rank),
+    # one-sided kinds: ``root`` carries the TARGET rank for rput/rget
+    # (the schedule is per-(nbytes, target) and cached like any other)
+    "rput": lambda n, rank, nbytes, itemsize, root, group:
+        _compile_rput(n, rank, nbytes, root),
+    "rget": lambda n, rank, nbytes, itemsize, root, group:
+        _compile_rget(n, rank, nbytes, root),
+    "allgather_get": lambda n, rank, nbytes, itemsize, root, group:
+        _compile_allgather_get(n, rank, nbytes),
+    "bcast_put": lambda n, rank, nbytes, itemsize, root, group:
+        _compile_bcast_put(n, rank, root, nbytes),
 }
 
 

@@ -1,0 +1,338 @@
+"""RMA v2: schedule-compiled one-sided communication.
+
+Request-based rput/rget over the shared progress engine (local
+completion, chunked, composable with pt2pt requests in waitall),
+notified access with its deterministic zero-receiver-copy guarantee,
+the get-based allgather and put-based bcast window collectives,
+passive-target lock_all/flush epochs, and ProtocolStats attribution of
+every RMA byte to an ``rma_*`` path bucket."""
+import numpy as np
+import pytest
+
+from repro.core import run_threads
+
+
+class TestRequestBasedRMA:
+    def test_rput_rget_roundtrip(self):
+        def prog(env):
+            r, n = env.rank, env.size
+            win = env.comm.win_allocate("w", 1 << 16)
+            src = (np.arange(4096, dtype=np.uint8) + r).astype(np.uint8)
+            win.fence()
+            win.rput(r, 0, src).wait()
+            win.fence()
+            peer = (r + 1) % n
+            dst = np.zeros(4096, np.uint8)
+            res = win.rget(peer, 0, dst).wait()
+            assert res is dst             # wait() returns the dest
+            win.free()
+            return np.array_equal(
+                dst, (np.arange(4096) + peer).astype(np.uint8))
+
+        assert all(run_threads(3, prog, pool_bytes=16 << 20))
+
+    def test_rput_chunked_counts_rma_put(self):
+        """A chunked rput moves one chunk per engine tick and lands
+        every byte in path_copied_bytes['rma_put'] (the §6 accounting
+        fix: no RMA byte escapes the path buckets)."""
+        size = 64 * 1024
+
+        def prog(env):
+            win = env.comm.win_allocate("w", size)
+            st = env.arena.view.stats
+            c0 = st.path_copied_bytes["rma_put"]
+            src = np.full(size, env.rank, np.uint8)
+            win.fence()
+            req = win.rput(env.rank, 0, src, chunk_bytes=8 * 1024)
+            req.wait()
+            win.fence()
+            put_bytes = st.path_copied_bytes["rma_put"] - c0
+            got = win.get_array((env.rank + 1) % env.size, 0,
+                                (size,), np.uint8)
+            win.free()
+            return put_bytes, bool(np.all(got == (env.rank + 1) % env.size))
+
+        res = run_threads(2, prog, pool_bytes=16 << 20)
+        for put_bytes, ok in res:
+            assert put_bytes == size
+            assert ok
+
+    def test_blocking_put_get_count_paths(self):
+        """Blocking put/get/accumulate all attribute their payloads
+        (put->rma_put, get->rma_get, accumulate->one of each)."""
+        def prog(env):
+            win = env.comm.win_allocate("w", 256)
+            st = env.arena.view.stats
+            win.fence()
+            p0, g0 = (st.path_copied_bytes["rma_put"],
+                      st.path_copied_bytes["rma_get"])
+            win.put(env.rank, 0, b"x" * 100)
+            _ = win.get(env.rank, 0, 100)
+            win.accumulate(env.rank, 128, np.arange(4.0))
+            win.fence()
+            dp = st.path_copied_bytes["rma_put"] - p0
+            dg = st.path_copied_bytes["rma_get"] - g0
+            win.free()
+            return dp, dg
+
+        for dp, dg in run_threads(2, prog, pool_bytes=16 << 20):
+            assert dp == 100 + 32        # put + accumulate write-back
+            assert dg == 100 + 32        # get + accumulate read
+
+    def test_mixed_waitall_pt2pt_and_rma(self):
+        """comm.waitall drains a mixed bag: a pt2pt isend/irecv pair
+        plus rput and rget requests, in one call."""
+        def prog(env):
+            r, n = env.rank, env.size
+            comm = env.comm
+            win = comm.win_allocate("w", 1 << 16)
+            win.fence()
+            peer = (r + 1) % n
+            src_rank = (r - 1) % n
+            sreq = comm.isend(peer, np.full(512, r, np.uint8), tag=5)
+            rreq = comm.irecv(src_rank, tag=5)
+            preq = win.rput(r, 0, np.full(2048, r, np.uint8),
+                            chunk_bytes=512)
+            comm.waitall([sreq, rreq, preq])
+            win.fence()
+            dst = np.zeros(2048, np.uint8)
+            greq = win.rget(peer, 0, dst, chunk_bytes=512)
+            comm.waitall([greq])
+            msg = rreq.data
+            win.free()
+            return (bool(np.all(np.frombuffer(msg, np.uint8) == src_rank)),
+                    bool(np.all(dst == peer)))
+
+        for pt_ok, rma_ok in run_threads(3, prog, pool_bytes=16 << 20):
+            assert pt_ok and rma_ok
+
+
+class TestNotifiedAccess:
+    def test_put_notify_zero_receiver_copy(self):
+        """The notified-put fast path: payload counted once at the
+        ORIGIN under rma_notify; the consumer's copied-byte counters do
+        not move at all — deterministically zero receiver-side copies
+        (it spins on one non-temporal word and reads in place)."""
+        payload = b"sensor-frame-0042"
+
+        def prog(env):
+            win = env.comm.win_allocate("w", 4096)
+            st = env.arena.view.stats
+            win.fence()
+            if env.rank == 0:
+                n0 = st.path_copied_bytes["rma_notify"]
+                win.put_notify(1, 64, payload)
+                out = ("origin", st.path_copied_bytes["rma_notify"] - n0)
+            else:
+                c0 = st.copied_bytes
+                assert win.wait_notify(0) == 1
+                got = bytes(win.local_view(64, len(payload)))
+                out = ("consumer", st.copied_bytes - c0, got)
+            win.fence()
+            win.free()
+            return out
+
+        origin, consumer = run_threads(2, prog, pool_bytes=16 << 20)
+        assert origin == ("origin", len(payload))
+        assert consumer == ("consumer", 0, payload)
+
+    def test_notify_counts_and_test_notify(self):
+        """Back-to-back notifies queue on the monotonic counter;
+        test_notify peeks without consuming; wait_notify(count=k)
+        consumes exactly k."""
+        def prog(env):
+            win = env.comm.win_allocate("w", 4096)
+            win.fence()
+            if env.rank == 0:
+                for i in range(3):
+                    win.put_notify(1, 128 * i, bytes([i]) * 8)
+                win.fence()
+                win.free()
+                return None
+            win.wait_notify(0, count=3)
+            assert win.test_notify(0) == 0
+            vals = [win.local_view(128 * i, 8)[0] for i in range(3)]
+            win.fence()
+            win.free()
+            return vals
+
+        res = run_threads(2, prog, pool_bytes=16 << 20)
+        assert res[1] == [0, 1, 2]
+
+    def test_wait_notify_timeout(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 256)
+            win.fence()
+            if env.rank == 1:
+                with pytest.raises(TimeoutError):
+                    win.wait_notify(0, timeout=0.2)
+            win.fence()
+            win.free()
+            return True
+
+        assert all(run_threads(2, prog, pool_bytes=16 << 20))
+
+
+class TestWindowCollectives:
+    def test_allgather_get(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 1 << 16)
+            shard = np.full(64, float(env.rank) + 0.5)
+            out = win.allgather(shard)
+            win.free()
+            return out
+
+        n = 4
+        res = run_threads(n, prog, pool_bytes=32 << 20)
+        exp = np.repeat(np.arange(n) + 0.5, 64)
+        for out in res:
+            assert np.array_equal(out, exp)
+
+    def test_allgather_counts_rma_coll_no_wire_payload(self):
+        """The get-based allgather's payloads move only through the
+        window (rma_coll bucket); the wire carries zero-byte tokens
+        only, so the eager/rndv payload buckets stay flat."""
+        def prog(env):
+            win = env.comm.win_allocate("w", 1 << 16)
+            st = env.arena.view.stats
+            before = dict(st.path_copied_bytes)
+            out = win.allgather(np.arange(128.0) * (env.rank + 1))
+            coll = st.path_copied_bytes["rma_coll"] - before["rma_coll"]
+            wire = sum(st.path_copied_bytes[k] - before[k]
+                       for k in ("eager", "rndv_staged", "rndv_posted"))
+            win.free()
+            return out.size, coll, wire
+
+        for size, coll, wire in run_threads(3, prog, pool_bytes=32 << 20):
+            assert size == 3 * 128
+            assert coll > 0
+            assert wire == 0
+
+    def test_bcast_put_roots_and_chunks(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 1 << 17)
+            outs = []
+            for root in (0, env.size - 1):
+                arr = (np.arange(8192, dtype=np.float64)
+                       if env.rank == root
+                       else np.zeros(8192))
+                win.ibcast(arr, root=root, chunk_bytes=16 * 1024).wait()
+                outs.append(bool(np.array_equal(arr,
+                                                np.arange(8192.0))))
+                win.fence()          # bcast completion is local
+            win.free()
+            return outs
+
+        for outs in run_threads(4, prog, pool_bytes=64 << 20):
+            assert outs == [True, True]
+
+    def test_interleaves_with_comm_collectives(self):
+        """Window collectives share the communicator's tag sequence:
+        alternating comm.allreduce and win.allgather in the same order
+        on every rank must not cross-match."""
+        def prog(env):
+            win = env.comm.win_allocate("w", 4096)
+            a = env.comm.allreduce(np.full(16, 1.0))
+            g = win.allgather(np.full(16, float(env.rank)))
+            b = env.comm.allreduce(np.full(16, 2.0))
+            win.free()
+            return float(a[0]), g.copy(), float(b[0])
+
+        n = 3
+        res = run_threads(n, prog, pool_bytes=32 << 20)
+        for a0, g, b0 in res:
+            assert a0 == n and b0 == 2 * n
+            assert np.array_equal(g, np.repeat(np.arange(n,
+                                                         dtype=float), 16))
+
+    def test_size_1_and_bounds(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 128)
+            g = win.allgather(np.arange(4.0))
+            with pytest.raises(ValueError):
+                win.allgather(np.zeros(1024))    # shard > win_size
+            with pytest.raises(ValueError):
+                win.ibcast(np.zeros(1024), root=0)
+            win.free()
+            return g
+
+        res = run_threads(1, prog, pool_bytes=8 << 20)
+        assert np.array_equal(res[0], np.arange(4.0))
+
+
+class TestPassiveTargetEpochs:
+    def test_lock_all_flush(self):
+        """lock_all epochs on every rank concurrently; flush(target)
+        completes the rput mid-epoch; after the closing fence each
+        rank's segment holds its left neighbour's payload."""
+        def prog(env):
+            r, n = env.rank, env.size
+            win = env.comm.win_allocate("w", 4096)
+            win.fence()
+            win.lock_all()
+            req = win.rput((r + 1) % n, 0, np.full(1024, r, np.uint8),
+                           chunk_bytes=256)
+            win.flush((r + 1) % n)
+            win.unlock_all()
+            win.fence()
+            assert req.done
+            got = win.get_array(r, 0, (1024,), np.uint8)
+            win.free()
+            return bool(np.all(got == (r - 1) % n))
+
+        assert all(run_threads(4, prog, pool_bytes=16 << 20))
+
+    def test_flush_local_and_unlock_complete_requests(self):
+        def prog(env):
+            win = env.comm.win_allocate("w", 8192)
+            win.fence()
+            win.lock(shared=True)
+            req = win.rput(env.rank, 0, np.full(4096, 7, np.uint8),
+                           chunk_bytes=1024)
+            win.unlock(shared=True)     # unlock flushes
+            assert req.done
+            win.fence()
+            win.flush_local()           # no outstanding: no-op
+            got = win.get_array(env.rank, 0, (4096,), np.uint8)
+            win.free()
+            return bool(np.all(got == 7))
+
+        assert all(run_threads(2, prog, pool_bytes=16 << 20))
+
+
+class TestWindowLifecycle:
+    def test_free_idempotent_mid_epoch(self):
+        """free() is collective but safe mid-epoch: rank 1 holds a
+        shared lock and rank 0 has an un-flushed rput when free() is
+        called; the internal flush + fence settles both, and repeated
+        free() calls are no-ops."""
+        def prog(env):
+            win = env.comm.win_allocate("w", 4096)
+            win.fence()
+            if env.rank == 0:
+                win.rput(1, 0, np.full(512, 9, np.uint8),
+                         chunk_bytes=128)        # left outstanding
+            else:
+                win.lock_all()                   # left open
+            win.free()
+            win.free()                           # idempotent
+            win.free()
+            return True
+
+        assert all(run_threads(2, prog, pool_bytes=16 << 20))
+
+    def test_detached_window_rejects_requests(self):
+        """A Window built without a communicator still does blocking
+        put/get but refuses the engine-backed surface."""
+        from repro.core.arena import Arena
+        from repro.core.pool import LocalPool
+        from repro.core.rma import Window
+
+        arena = Arena(LocalPool(1 << 20), 0, initialize=True)
+        win = Window(arena, "solo", 1, 0, 1024, create=True)
+        win.put(0, 0, b"abc")
+        assert win.get(0, 0, 3) == b"abc"
+        with pytest.raises(RuntimeError):
+            win.rput(0, 0, np.zeros(8, np.uint8))
+        with pytest.raises(RuntimeError):
+            win.allgather(np.zeros(4))

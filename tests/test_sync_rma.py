@@ -160,6 +160,34 @@ class TestRMA:
         assert all(run_threads(2, prog, pool_bytes=8 << 20))
 
 
+class TestGetIntoRegistration:
+    def test_get_into_registration_destination(self):
+        """get_into accepts a pinned Registration: the window load
+        drains straight into the user's buffer (one rma_get-counted
+        copy, the shadow stays untouched) — the same destination kinds
+        the pt2pt posting path takes."""
+        size = 2048
+
+        def prog(env):
+            win = env.comm.win_allocate("w", 4096)
+            st = env.arena.view.stats
+            win.fence()
+            win.put(env.rank, 0, bytes([env.rank + 1]) * size)
+            win.fence()
+            peer = (env.rank + 1) % env.size
+            dst = np.zeros(size, np.uint8)
+            reg = env.comm.register(dst)
+            g0 = st.path_copied_bytes["rma_get"]
+            got = win.get_into(peer, 0, reg)
+            dg = st.path_copied_bytes["rma_get"] - g0
+            env.comm.unregister(reg)
+            win.fence()
+            return got, dg, bool(np.all(dst == peer + 1))
+
+        for got, dg, ok in run_threads(2, prog, pool_bytes=16 << 20):
+            assert got == size and dg == size and ok
+
+
 class TestAccumulateUnderSharedLock:
     def test_accumulate_excluded_by_shared_holders(self):
         """MPI_Accumulate takes the window lock EXCLUSIVELY; concurrent
@@ -196,3 +224,26 @@ class TestAccumulateUnderSharedLock:
             tears, final = out
             assert tears == 0                # no torn accumulate seen
             assert np.allclose(final, [2.0 * iters, 2.0 * iters])
+
+    def test_accumulate_custom_op_with_shared_readers(self):
+        """accumulate(op=np.maximum) interleaved with shared-lock
+        readers: the exclusive lock serializes read-op-write against
+        them, and the final cell is the true max across ranks."""
+        def prog(env):
+            win = env.comm.win_allocate("wmax", 64)
+            win.fence()
+            if env.rank == 0:
+                win.put(0, 0, np.zeros(1).tobytes())
+            win.fence()
+            for i in range(10):
+                win.accumulate(0, 0, np.array([float(env.rank * 10 + i)]),
+                               op=np.maximum)
+                win.lock(shared=True)
+                seen = np.frombuffer(win.get(0, 0, 8))[0]
+                win.unlock(shared=True)
+                assert seen >= float(env.rank * 10 + i)
+            win.fence()
+            return np.frombuffer(win.get(0, 0, 8))[0]
+
+        res = run_threads(3, prog, pool_bytes=8 << 20, timeout=120)
+        assert all(v == 29.0 for v in res)

@@ -1,0 +1,117 @@
+"""Execute the fenced ``python`` blocks of markdown docs.
+
+CI's ``docs`` job runs this over README.md and docs/architecture.md so
+every documented snippet is a working program, not prose that rotted.
+Each block runs in its own subprocess from the repository root with
+``PYTHONPATH=src`` prepended, so snippets are written exactly as a
+user would run them.
+
+A block whose FIRST line starts with ``# doc: no-exec`` is skipped —
+the marker (with a reason) is for intentional fragments that reference
+surrounding context (a live ``comm``, a training loop) and cannot be
+self-contained without burying the point.
+
+Usage:
+    python tools/run_doc_snippets.py README.md docs/architecture.md
+    python tools/run_doc_snippets.py --list README.md   # show, don't run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+FENCE_RE = re.compile(r"^```python[ \t]*$")
+NO_EXEC = "# doc: no-exec"
+
+
+def extract_blocks(path: Path) -> list[tuple[int, str]]:
+    """Return ``(start_line, source)`` for every fenced python block."""
+    blocks = []
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        if FENCE_RE.match(lines[i]):
+            start = i + 2                      # 1-based first code line
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            if i >= len(lines):
+                raise SystemExit(f"{path}:{start}: unterminated "
+                                 f"```python fence")
+            blocks.append((start, "\n".join(body) + "\n"))
+        i += 1
+    return blocks
+
+
+def run_block(path: Path, line: int, src: str,
+              timeout: float) -> tuple[bool, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    with tempfile.NamedTemporaryFile(
+            "w", suffix=".py", prefix=f"doc_{path.stem}_L{line}_",
+            delete=False) as f:
+        f.write(src)
+        tmp = f.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, tmp], cwd=REPO_ROOT, env=env,
+            capture_output=True, text=True, timeout=timeout)
+        ok = proc.returncode == 0
+        out = (proc.stdout + proc.stderr).strip()
+        return ok, out
+    except subprocess.TimeoutExpired:
+        return False, f"timed out after {timeout:.0f}s"
+    finally:
+        os.unlink(tmp)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="run every fenced python block of the given "
+                    "markdown files (skipping '# doc: no-exec' blocks)")
+    p.add_argument("files", nargs="+", type=Path)
+    p.add_argument("--timeout", type=float, default=600.0,
+                   help="per-block timeout in seconds (default 600)")
+    p.add_argument("--list", action="store_true",
+                   help="list the blocks and whether each would run")
+    args = p.parse_args(argv)
+
+    failures = 0
+    ran = skipped = 0
+    for path in args.files:
+        if not path.exists():
+            print(f"MISSING  {path}")
+            failures += 1
+            continue
+        for line, src in extract_blocks(path):
+            where = f"{path}:{line}"
+            if src.lstrip().startswith(NO_EXEC):
+                skipped += 1
+                print(f"SKIP     {where}  ({NO_EXEC})")
+                continue
+            if args.list:
+                print(f"WOULD RUN {where}")
+                continue
+            ok, out = run_block(path, line, src, args.timeout)
+            ran += 1
+            if ok:
+                print(f"OK       {where}")
+            else:
+                failures += 1
+                print(f"FAIL     {where}\n{'-' * 60}\n{out}\n{'-' * 60}")
+    print(f"\n{ran} block(s) ran, {skipped} skipped, "
+          f"{failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
