@@ -226,6 +226,35 @@ def _matchbox_micro(reps: int = 20000) -> tuple[float, float]:
     return scan_us, promote_us
 
 
+def write_trace(payload: int = 4 << 20) -> list[Path]:
+    """Small traced run for timeline inspection: a 2-rank chunked ring
+    iallreduce with the flight recorder on, per-rank dumps written to
+    ``artifacts/bench/trace/roofline_rank{r}.json`` (merge with
+    ``python -m repro.trace merge``). This is the profile sweep's
+    workload seen through the recorder — per-chunk schedule lanes plus
+    engine-tick occupancy — not a performance measurement."""
+    from repro.core.runtime import run_processes
+    from repro.core.trace import load_dump, summarize_dumps
+
+    out_dir = Path(__file__).resolve().parent.parent / "artifacts" \
+        / "bench" / "trace"
+
+    def prog(env):
+        c = env.comm
+        x = np.full(payload // 8, float(env.rank + 1))
+        c.iallreduce(x, algo="ring", chunk_bytes="auto").wait(None)
+        c.barrier()
+        return c.trace_dump(out_dir / f"roofline_rank{env.rank}.json")
+
+    paths = run_processes(2, prog, pool_bytes=max(256 << 20, 16 * payload),
+                          cell_size=16384, comm_kw={"trace": True},
+                          timeout=300)
+    print(summarize_dumps([load_dump(p) for p in paths]))
+    for p in paths:
+        print(f"  {p}")
+    return [Path(p) for p in paths]
+
+
 def sweep_profile(smoke: bool = False) -> dict:
     """Run the full ERT-style sweep and return the profile fields."""
     from benchmarks.fig5_8_osu import SANDBOX_YIELD_US, yield_cost_us
@@ -365,7 +394,14 @@ def main() -> None:
                     help="CI-sized profile sweep")
     ap.add_argument("--out", default=None,
                     help="profile output path override")
+    ap.add_argument("--trace", action="store_true",
+                    help="run a small traced 2-rank chunked iallreduce "
+                         "and write per-rank flight-recorder dumps to "
+                         "artifacts/bench/trace/")
     args = ap.parse_args()
+    if args.trace:
+        write_trace()
+        return
     if args.profile:
         write_machine_profile(smoke=args.smoke, path=args.out)
         return

@@ -5,7 +5,7 @@ checker sees: every store to the shared pool must go through the
 coherence protocol, every user-facing tag must stay out of the
 reserved internal window, the progress engine must never block inside
 a tick, and each matchbox entry field has exactly ONE writing side.
-This module enforces those conventions mechanically, as four rules
+This module enforces those conventions mechanically, as five rules
 over the ASTs of ``src/repro/core``:
 
 ``LP001`` raw shared-region access
@@ -43,6 +43,16 @@ over the ASTs of ``src/repro/core``:
     annotation on (or just above) its ``def`` line, and the stored
     fields must belong to the annotated side.
 
+``LP005`` guarded, allocation-free trace emission
+    The flight recorder (``core/trace.py``) is always compiled in;
+    its disabled-mode cost budget is ONE predicate check per site. In
+    the tick-path files (``progress.py``, ``pt2pt.py``) every
+    ``emit(...)`` call must therefore sit lexically inside an ``if``
+    whose test checks the ``.enabled`` predicate, and its arguments
+    must be plain names/ints — no f-strings, dict/list/set displays,
+    comprehensions or ``dict()`` calls, which would allocate eagerly
+    on every pass even while tracing is off.
+
 CLI: ``python -m repro.analysis.lint_protocol [paths...]`` (defaults
 to ``src/repro/core``); prints ``path:line: LPxxx message`` per
 finding and exits nonzero if any were found.
@@ -70,6 +80,10 @@ _TICK_FILES = {"progress.py"}
 _MB_SENDER_FIELDS = {"_MB_CLAIM", "_MB_FILL"}
 _MB_RECEIVER_FIELDS = {"_MB_TAG", "_MB_DEST", "_MB_CAP"}
 _MB_WRITER = re.compile(r"#\s*mb-writer:\s*(sender|receiver)")
+
+_TRACE_FILES = {"progress.py", "pt2pt.py"}
+_EMIT_ARG_BANNED = (ast.JoinedStr, ast.Dict, ast.DictComp, ast.ListComp,
+                    ast.SetComp, ast.GeneratorExp)
 
 
 @dataclass(frozen=True)
@@ -299,6 +313,59 @@ def _check_mb_single_writer(path: str, tree: ast.Module, lines: list,
     visit(tree)
 
 
+def _mentions_enabled(test: ast.AST) -> bool:
+    for nd in ast.walk(test):
+        if isinstance(nd, ast.Attribute) and nd.attr == "enabled":
+            return True
+        if isinstance(nd, ast.Name) and nd.id == "enabled":
+            return True
+    return False
+
+
+def _check_trace_guards(path: str, fname: str, tree: ast.Module,
+                        out: list) -> None:
+    if fname not in _TRACE_FILES:
+        return
+
+    def check_emit(nd: ast.Call, guarded: bool) -> None:
+        if not guarded:
+            out.append(LintFinding(
+                "LP005", path, nd.lineno,
+                "trace emit() in a tick path outside an '.enabled' "
+                "guard — disabled-mode cost must be one predicate "
+                "check (tr = self.tracer; if tr.enabled: tr.emit(...))"))
+        for a in list(nd.args) + [kw.value for kw in nd.keywords]:
+            if any(isinstance(sub, _EMIT_ARG_BANNED)
+                   or (isinstance(sub, ast.Call)
+                       and isinstance(sub.func, ast.Name)
+                       and sub.func.id == "dict")
+                   for sub in ast.walk(a)):
+                out.append(LintFinding(
+                    "LP005", path, a.lineno,
+                    "trace emit() argument builds an f-string/dict/"
+                    "comprehension — arguments must be plain names or "
+                    "ints (records are five int64 words; formatting "
+                    "belongs in the exporter)"))
+                break
+
+    def visit(node: ast.AST, guarded: bool) -> None:
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "emit") or \
+                    (isinstance(f, ast.Name) and f.id == "emit"):
+                check_emit(node, guarded)
+        if isinstance(node, ast.If) and _mentions_enabled(node.test):
+            for b in node.body:
+                visit(b, True)
+            for b in node.orelse:
+                visit(b, guarded)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child, guarded)
+
+    visit(tree, False)
+
+
 # --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
@@ -322,6 +389,7 @@ def lint_sources(sources: dict) -> list:
         _check_raw_access(path, fname, tree, lines, out)
         _check_tick_sleeps(path, fname, tree, out)
         _check_mb_single_writer(path, tree, lines, out)
+        _check_trace_guards(path, fname, tree, out)
     _check_reserved_tags(funcs, classes, out)
     return sorted(out, key=lambda f: (f.path, f.line, f.rule))
 

@@ -33,6 +33,10 @@
                 free-function surface is deprecated in favor of Comm
                 methods but routes through the same schedules
   runtime     — thread and process runtimes for multi-rank execution
+  trace       — flight recorder + metrics registry: off-by-default ring
+                of binary events across engine/pt2pt/matchbox/RMA hot
+                paths (``Comm(trace=True)``), exported as Chrome-trace
+                timelines via ``python -m repro.trace``
 
 Deprecated (import still works, emits DeprecationWarning): the
 ``Communicator`` name (use ``Comm``) and the free-function collectives
@@ -59,6 +63,9 @@ from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
 from repro.core.rma import Window
 from repro.core.runtime import RankEnv, run_processes, run_threads
 from repro.core.sync import PSCW, BakeryLock, RWLock, SeqBarrier
+from repro.core.trace import (EV_NAMES, Histogram, Metrics, Tracer,
+                              as_tracer, chrome_events, merge_dumps,
+                              summarize_dumps)
 
 # pre-v2 API surface: served lazily so each access emits a
 # DeprecationWarning while old code keeps working unchanged

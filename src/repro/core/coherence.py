@@ -93,6 +93,33 @@ class ProtocolStats:
     def lines(self, n: int) -> int:
         return (n + CACHELINE - 1) // CACHELINE
 
+    def snapshot(self) -> dict:
+        """Deep-copied point-in-time view of every counter. Pair with
+        :meth:`delta` so benchmarks and tests stop hand-diffing fields::
+
+            s0 = view.stats.snapshot()
+            ... traffic ...
+            d = view.stats.delta(s0)      # {"copied_bytes": ..., ...}
+        """
+        out = dict(self.__dict__)
+        out["path_copied_bytes"] = dict(self.path_copied_bytes)
+        return out
+
+    def delta(self, prev: dict) -> dict:
+        """Counter-wise difference of the current stats against a prior
+        :meth:`snapshot`. ``path_copied_bytes`` is diffed per path and
+        keeps only the paths that moved; scalar counters absent from
+        ``prev`` (an older snapshot) diff against zero."""
+        out = {}
+        for k, v in self.snapshot().items():
+            if k == "path_copied_bytes":
+                pv = prev.get(k, {})
+                out[k] = {p: n - pv.get(p, 0) for p, n in v.items()
+                          if n - pv.get(p, 0)}
+            else:
+                out[k] = v - prev.get(k, 0)
+        return out
+
 
 class CoherentView:
     """Protocol-applying accessor for one rank over one pool."""
@@ -126,9 +153,15 @@ class CoherentView:
 
     def count_path(self, path: str, nbytes: int) -> None:
         """Attribute ``nbytes`` of already-counted payload movement to a
-        data-plane path: pt2pt (eager / rndv_staged / rndv_posted) or
-        one-sided (rma_put / rma_get / rma_notify / rma_coll)."""
-        self.stats.path_copied_bytes[path] += nbytes
+        data-plane path: pt2pt (eager / rndv_staged / rndv_posted),
+        one-sided (rma_put / rma_get / rma_notify / rma_coll), or any
+        new subsystem's bucket — unknown paths upsert (defaultdict
+        style), so e.g. a future serving tier can count ``serve_*``
+        buckets without editing this file. The core buckets stay
+        pre-declared in ``ProtocolStats`` so zero-traffic paths still
+        report 0."""
+        pc = self.stats.path_copied_bytes
+        pc[path] = pc.get(path, 0) + nbytes
 
     def count_mb_miss(self) -> None:
         """Report a matchbox capacity miss: a postable receive's spilled

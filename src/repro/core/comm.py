@@ -586,6 +586,7 @@ class Comm(Communicator):
                  name: str = "world", open_timeout: float = 30.0,
                  tuning: str | None = None,
                  profile_path: str | None = None,
+                 trace=None,
                  _inherit: Optional[dict] = None):
         if tuning not in (None, "auto"):
             raise ValueError(f"tuning must be None or 'auto', "
@@ -614,7 +615,7 @@ class Comm(Communicator):
                          n_cells=n_cells,
                          eager_threshold=None if auto else eager_threshold,
                          mb_slots=mb_slots, matchbox_slots=matchbox_slots,
-                         name=name, open_timeout=open_timeout)
+                         name=name, open_timeout=open_timeout, trace=trace)
         self._derived_seq = 0
         self._rounds = _RoundPool(self)
         self._resident_ok: Optional[bool] = None
@@ -862,7 +863,8 @@ class Comm(Communicator):
                    eager_threshold=self.eager_threshold,
                    mb_slots=self.mb_slots,
                    name=_derived_name(self.name, f"s{seq}.{c}"),
-                   tuning=self.tuning, _inherit=self._inherit_state())
+                   tuning=self.tuning, trace=self.tracer,
+                   _inherit=self._inherit_state())
         sub.parent_ranks = tuple(ranks)
         return sub
 
@@ -877,7 +879,8 @@ class Comm(Communicator):
                    eager_threshold=self.eager_threshold,
                    mb_slots=self.mb_slots,
                    name=_derived_name(self.name, f"d{seq}"),
-                   tuning=self.tuning, _inherit=self._inherit_state())
+                   tuning=self.tuning, trace=self.tracer,
+                   _inherit=self._inherit_state())
         sub.parent_ranks = self.parent_ranks
         return sub
 
@@ -893,6 +896,28 @@ class Comm(Communicator):
             return
         self._rounds.free_all()
         super().free()
+
+    # ------------------------------------------------------------------
+    # observability (core/trace.py)
+    # ------------------------------------------------------------------
+    def trace_report(self) -> dict:
+        """Unified observability view for this rank: flight-recorder
+        event counters, the live latency histograms (engine-tick
+        duration, posted-rendezvous hit latency, ``wait_notify`` spin),
+        registry metrics and the aggregate ``ProtocolStats`` snapshot.
+        Meaningful content requires ``Comm(trace=True)`` (or an int
+        capacity / injected ``Tracer``); a disabled tracer reports
+        zeroes."""
+        return self.tracer.report(stats=self.arena.view.stats)
+
+    def trace_dump(self, path) -> str:
+        """Write this rank's flight-recorder ring + report as a JSON
+        dump for ``python -m repro.trace merge|summarize``. Returns the
+        written path. Each rank dumps its own file; the CLI stitches
+        them into one Chrome/Perfetto timeline (CLOCK_MONOTONIC is
+        shared across processes on one host, so no clock alignment is
+        needed)."""
+        return self.tracer.dump(path, stats=self.arena.view.stats)
 
     # ------------------------------------------------------------------
     # persistent requests (MPI-4)

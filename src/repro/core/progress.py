@@ -40,9 +40,16 @@ import numpy as np
 
 from repro.core.sched import (BufRef, CopyOp, GetOp, PutOp, RecvOp,
                               ReduceOp, Schedule, SendOp)
+from repro.core.trace import (EV_SCHED_ABORT, EV_SCHED_BEGIN,
+                              EV_SCHED_DONE, EV_SCHED_END,
+                              EV_SCHED_ISSUE, EV_TICK, Tracer)
 
 __all__ = ["ProgressEngine", "CollRequest", "waitall", "waitany",
            "testall"]
+
+# executions driven by a comm that predates the tracer (tests building
+# _SchedExec by hand) fall back to this always-disabled recorder
+_NULL_TRACER = Tracer(capacity=1, enabled=False)
 
 
 class ProgressEngine:
@@ -75,6 +82,15 @@ class ProgressEngine:
         if self._in_tick:
             return
         self._in_tick = True
+        tr = self.comm.tracer
+        t0 = 0
+        if tr.enabled:
+            # record only ticks with work in flight — idle spin turns
+            # would evict every interesting record from the ring
+            if (self.colls or self.stagers
+                    or any(self.send_fifo.values())
+                    or any(self.recv_fifo.values())):
+                t0 = time.monotonic_ns()
         try:
             self._tick_sends()
             self._tick_recvs()
@@ -90,6 +106,8 @@ class ProgressEngine:
                             pass
         finally:
             self._in_tick = False
+            if tr.enabled and t0:
+                tr.emit(EV_TICK, time.monotonic_ns() - t0)
 
     def _tick_sends(self) -> None:
         for fifo in list(self.send_fifo.values()):
@@ -308,6 +326,18 @@ class _SchedExec:
         self.result = None
         self.error: Optional[BaseException] = None
         nodes = sched.nodes
+        # flight recorder: one exec id + interned kind per execution so
+        # hot-path records carry ints only; a chunked schedule's nodes
+        # then render as per-chunk lanes keyed (exec, node idx)
+        tr = getattr(comm, "tracer", _NULL_TRACER)
+        self._tr = tr
+        self._trace_exec = 0
+        self._trace_kind = 0
+        if tr.enabled:
+            self._trace_exec = tr.next_exec_id()
+            self._trace_kind = tr.intern(sched.kind)
+            tr.emit(EV_SCHED_BEGIN, self._trace_exec, self._trace_kind,
+                    len(nodes))
         self._n_left = len(nodes)
         self._pending = [len(nd.deps) for nd in nodes]
         self._dependents: list[list[int]] = [[] for _ in nodes]
@@ -341,6 +371,9 @@ class _SchedExec:
 
     def _node_done(self, idx: int) -> None:
         self._inflight.pop(idx, None)
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_SCHED_DONE, self._trace_exec, idx)
         self._n_left -= 1
         for j in self._dependents[idx]:
             self._pending[j] -= 1
@@ -351,6 +384,9 @@ class _SchedExec:
 
     def _complete(self) -> None:
         self.finished = True
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_SCHED_END, self._trace_exec)
         try:
             if self._finalize is not None:
                 self.result = self._finalize(self.bufs)
@@ -367,6 +403,9 @@ class _SchedExec:
         still land in it, and recycling it would hand that write to an
         unrelated collective."""
         self.error = err
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_SCHED_ABORT, self._trace_exec)
         for req in list(self._inflight.values()):
             if req.kind == "recv" and not req.done:
                 req._on_done = None
@@ -389,6 +428,7 @@ class _SchedExec:
                 self._abort(req._error)
                 return
         rma_left = self.rma_budget
+        tr = self._tr
         while self._ready:
             idx = self._ready.popleft()
             nd = self.sched.nodes[idx]
@@ -398,8 +438,10 @@ class _SchedExec:
                     break
                 rma_left -= 1
             if idx in self._bound:
-                continue                     # pre-posted: completes via
-            if isinstance(nd, RecvOp):       # its request callback
+                continue     # pre-posted: completes via its callback
+            if tr.enabled:
+                tr.emit(EV_SCHED_ISSUE, self._trace_exec, idx)
+            if isinstance(nd, RecvOp):
                 req = self.comm.irecv_into(
                     nd.peer, self.bufs.recv_dest(nd.buf),
                     tag=self.tag_base + nd.round, _internal=True)

@@ -90,6 +90,10 @@ from repro.core.ringqueue import (DEFAULT_CELL_SIZE, FLAG_FIRST, FLAG_LAST,
                                   TAG_RESERVED_BASE, QueueMatrix)
 from repro.core.rma import Window
 from repro.core.sync import SeqBarrier
+from repro.core.trace import (EV_MB_CLAIM, EV_MB_CONSUME, EV_MB_POST,
+                              EV_MB_PROMOTE, EV_MB_RETRACT, EV_MB_SPILL,
+                              EV_PT2PT_EAGER, EV_PT2PT_POSTED,
+                              EV_PT2PT_STAGED, as_tracer)
 
 ANY_TAG = -1
 
@@ -441,13 +445,18 @@ class Communicator:
                  eager_threshold: int | None = None,
                  mb_slots: int = DEFAULT_MB_SLOTS,
                  matchbox_slots: int | None = None,
-                 name: str = "world", open_timeout: float = 30.0):
+                 name: str = "world", open_timeout: float = 30.0,
+                 trace=None):
         self.arena = arena
         self.rank = rank
         self.size = size
         self.name = name
         self.cell_size = cell_size
         self.n_cells = n_cells
+        # flight recorder (core/trace.py): off by default — every hot
+        # path checks ``self.tracer.enabled`` and nothing else. Must
+        # exist before the engine and the init barrier below run.
+        self.tracer = as_tracer(trace, rank)
         # protocol switch: payloads <= threshold go through queue cells
         # (eager), larger ones through a pool staging object (rendezvous)
         self.eager_threshold = (cell_size if eager_threshold is None
@@ -690,6 +699,9 @@ class Communicator:
                           dest.post_off, dest.capacity)
             rec = _PostRecord(src, slot, pid, tag, dest, req)
             self._mb_records[(src, slot)] = rec
+            tr = self.tracer
+            if tr.enabled:
+                tr.emit(EV_MB_POST, pid, src, dest.capacity)
             return rec
         return None
 
@@ -706,6 +718,9 @@ class Communicator:
             if pend.rec is not None:
                 return pend
         self._mb_overflow.setdefault(src, deque()).append(pend)
+        tr = self.tracer
+        if tr.enabled:
+            tr.emit(EV_MB_SPILL, 0, src)
         return pend
 
     def _mb_promote(self, src: int) -> None:
@@ -722,6 +737,9 @@ class Communicator:
                 return
             pend.rec = rec
             ovf.popleft()
+            tr = self.tracer
+            if tr.enabled:
+                tr.emit(EV_MB_PROMOTE, rec.post_id, src)
 
     def _mb_withdraw(self, pend: Optional[_PendingPost], *,
                      fallback_delivery: bool = False) -> None:
@@ -787,6 +805,9 @@ class Communicator:
                 v.count_path("rndv_posted", n)
                 self._mb_salvage[(rec.src, rec.slot, rec.post_id)] = data
         finally:
+            tr = self.tracer
+            if tr.enabled:
+                tr.emit(EV_MB_RETRACT, rec.post_id, rec.src)
             self._mb_promote(rec.src)         # the slot is free again
 
     # mb-writer: receiver
@@ -796,6 +817,9 @@ class Communicator:
         off = self._mb.entry_off(self.rank, rec.src, rec.slot)
         self.arena.view.nt_store_u64(off, 0)
         self._mb_records.pop((rec.src, rec.slot), None)
+        tr = self.tracer
+        if tr.enabled:
+            tr.emit(EV_MB_CONSUME, rec.post_id, rec.src)
         self._mb_promote(rec.src)
 
     def _mb_repost(self, rec: _PostRecord) -> None:
@@ -862,6 +886,9 @@ class Communicator:
             v.nt_store_u64(off + _MB_CLAIM, (pid << 2) | _CLAIM_ABORT)
             return None
         self._mb_cursor[dest] = (slot + 1) % self._mb.n_slots
+        tr = self.tracer
+        if tr.enabled:
+            tr.emit(EV_MB_CLAIM, pid, dest)
         return slot, pid, v.nt_load_u64(off + _MB_DEST), off
 
     def _mb_claim(self, dest: int, tag: int, nbytes: int,
@@ -1108,6 +1135,9 @@ class Communicator:
             if pview is None and nbytes <= self.eager_threshold:
                 # ---- eager: memoryview slices through queue cells ----
                 self.eager_sends += 1
+                tr = self.tracer
+                if tr.enabled:
+                    tr.emit(EV_PT2PT_EAGER, dest, nbytes, tag)
                 for parts, flags in q.plan_message(mv, tag):
                     while not q.try_enqueue_parts(parts, flags):
                         yield
@@ -1146,6 +1176,9 @@ class Communicator:
                 v.nt_store_u64(eoff + _MB_CLAIM,
                                (pid << 2) | _CLAIM_COMMIT)
                 self.posted_sends += 1
+                tr = self.tracer
+                if tr.enabled:
+                    tr.emit(EV_PT2PT_POSTED, dest, nbytes, tag)
                 # wire: [total u64 | tag u64 | slot u64 | post_id u64]
                 desc = (nbytes.to_bytes(8, "little")
                         + (int(tag) & _MB_ANY).to_bytes(8, "little")
@@ -1160,6 +1193,9 @@ class Communicator:
                     pbuf._in_flight = False
                 return
             # ---- staged rendezvous: stage once, ship a descriptor ----
+            tr = self.tracer
+            if tr.enabled:
+                tr.emit(EV_PT2PT_STAGED, dest, nbytes, tag)
             sync_done = None
             if pview is not None:
                 # pool-resident source: no staging copy at all

@@ -65,6 +65,14 @@ from repro.core.pool import Registration, as_u8
 from repro.core.progress import CollRequest, _HeapBufs, _SchedExec
 from repro.core.sched import compile_schedule
 from repro.core.sync import PSCW, RWLock, SeqBarrier
+from repro.core.trace import (EV_RMA_FENCE_BEGIN, EV_RMA_FENCE_END,
+                              EV_RMA_FLUSH_BEGIN, EV_RMA_FLUSH_END,
+                              EV_RMA_GET, EV_RMA_LOCK_ALL, EV_RMA_NOTIFY,
+                              EV_RMA_PUT, EV_RMA_UNLOCK_ALL,
+                              EV_RMA_WAIT_BEGIN, EV_RMA_WAIT_END, Tracer)
+
+# windows built without a communicator (direct construction) trace here
+_NULL_TRACER = Tracer(capacity=1, enabled=False)
 
 
 def _notify_bytes(n_ranks: int) -> int:
@@ -93,6 +101,7 @@ class Window:
         self.rank = rank
         self.win_size = win_size
         self._comm = comm
+        self._tr = getattr(comm, "tracer", None) or _NULL_TRACER
         sync_bytes = (SeqBarrier.region_bytes(n_ranks)
                       + PSCW.region_bytes(n_ranks)
                       + RWLock.region_bytes(n_ranks)
@@ -160,9 +169,12 @@ class Window:
     def _exec_put(self, target: int, disp: int, src,
                   path: str = "rma_coll") -> None:
         mv = as_u8(src)
-        self.arena.view.write_release(self._addr(target, disp, len(mv)),
-                                      mv)
-        self.arena.view.count_path(path, len(mv))
+        n = len(mv)
+        self.arena.view.write_release(self._addr(target, disp, n), mv)
+        self.arena.view.count_path(path, n)
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_PUT, target, n)
 
     def _exec_get(self, target: int, disp: int, dst,
                   path: str = "rma_coll") -> int:
@@ -170,6 +182,9 @@ class Window:
         n = self.arena.view.read_acquire_into(
             self._addr(target, disp, len(mv)), mv)
         self.arena.view.count_path(path, n)
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_GET, target, n)
         return n
 
     # ------------------------------------------------------------------
@@ -361,10 +376,13 @@ class Window:
         successive payloads to the SAME displacement overwrite, so wait
         for the consumer (e.g. a reply notify) before reusing a slot."""
         mv = as_u8(data)
-        self.arena.view.write_release(
-            self._addr(target, disp, len(mv)), mv)
-        self.arena.view.count_path("rma_notify", len(mv))
+        n = len(mv)
+        self.arena.view.write_release(self._addr(target, disp, n), mv)
+        self.arena.view.count_path("rma_notify", n)
         self.notify(target)
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_NOTIFY, target, n)
 
     def test_notify(self, origin: int) -> int:
         """Number of UNCONSUMED notifications from ``origin`` (does not
@@ -380,11 +398,16 @@ class Window:
         zero payload copies on this side — while pumping the attached
         communicator's progress engine (if any) so outstanding requests
         keep moving."""
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_WAIT_BEGIN, origin)
         t0 = time.monotonic()
         while True:
             pending = self.test_notify(origin)
             if pending >= count:
                 self._notify_seen[origin] += count
+                if tr.enabled:
+                    tr.emit(EV_RMA_WAIT_END, origin)
                 return count
             if timeout is not None and time.monotonic() - t0 > timeout:
                 raise TimeoutError(
@@ -473,8 +496,13 @@ class Window:
         rank's outstanding requests (local flush), then joins the
         seq-number barrier. On return, every rank's RMA ops from the
         previous epoch are globally visible."""
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_FENCE_BEGIN)
         self.flush()
         self._fence.wait()
+        if tr.enabled:
+            tr.emit(EV_RMA_FENCE_END)
 
     # PSCW
     def post(self, origins: list[int]) -> None:
@@ -527,12 +555,18 @@ class Window:
         goes through ``lock()``). Complete individual transfers inside
         the epoch with ``flush``/``flush_local``."""
         self._lock.acquire_shared()
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_LOCK_ALL)
 
     def unlock_all(self) -> None:
         """Close the ``lock_all`` epoch: flushes every outstanding
         request, then releases the shared lock."""
         self.flush()
         self._lock.release_shared()
+        tr = self._tr
+        if tr.enabled:
+            tr.emit(EV_RMA_UNLOCK_ALL)
 
     def flush(self, target: int | None = None,
               timeout: float | None = 60.0) -> None:
@@ -541,6 +575,10 @@ class Window:
         shared-memory window remote completion and local completion
         coincide — when ``flush`` returns, the data IS in the target
         segment (each chunk was a write_release)."""
+        tr = self._tr
+        tgt = -1 if target is None else target
+        if tr.enabled:
+            tr.emit(EV_RMA_FLUSH_BEGIN, tgt)
         keep = []
         for t, r in self._reqs:
             if target is None or t == target:
@@ -548,6 +586,8 @@ class Window:
             elif not r.done:
                 keep.append((t, r))
         self._reqs = keep
+        if tr.enabled:
+            tr.emit(EV_RMA_FLUSH_END, tgt)
 
     def flush_local(self, target: int | None = None,
                     timeout: float | None = 60.0) -> None:

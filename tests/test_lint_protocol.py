@@ -153,6 +153,57 @@ class TestMatchboxSingleWriter:
         assert lint_sources({"x/mb.py": src}) == []
 
 
+class TestTraceGuards:
+    def test_unguarded_emit_flagged(self):
+        src = ("def tick(self):\n"
+               "    self.tracer.emit(1, 0, 0, 0)\n")
+        fs = lint_sources({"x/progress.py": src})
+        assert codes(fs) == {"LP005"}
+        assert fs[0].line == 2
+
+    def test_guarded_plain_int_emit_passes(self):
+        src = ("def tick(self):\n"
+               "    tr = self.tracer\n"
+               "    if tr.enabled:\n"
+               "        tr.emit(1, self.rank, 0, 0)\n")
+        assert lint_sources({"x/progress.py": src}) == []
+
+    def test_fstring_arg_flagged_even_when_guarded(self):
+        src = ("def f(self, dest):\n"
+               "    tr = self.tracer\n"
+               "    if tr.enabled:\n"
+               "        tr.emit(1, f'dest={dest}', 0, 0)\n")
+        fs = lint_sources({"x/pt2pt.py": src})
+        assert codes(fs) == {"LP005"}
+        assert "eager" in fs[0].message.lower() \
+            or "f-string" in fs[0].message.lower() \
+            or "build" in fs[0].message.lower()
+
+    def test_dict_arg_flagged(self):
+        src = ("def f(self, n):\n"
+               "    tr = self.tracer\n"
+               "    if tr.enabled:\n"
+               "        tr.emit(1, {'n': n}, 0, 0)\n")
+        assert codes(lint_sources({"x/pt2pt.py": src})) == {"LP005"}
+
+    def test_else_branch_not_considered_guarded(self):
+        src = ("def f(self):\n"
+               "    tr = self.tracer\n"
+               "    if tr.enabled:\n"
+               "        tr.emit(1, 0, 0, 0)\n"
+               "    else:\n"
+               "        tr.emit(2, 0, 0, 0)\n")
+        fs = lint_sources({"x/progress.py": src})
+        assert codes(fs) == {"LP005"}
+        assert [f.line for f in fs] == [6]
+
+    def test_only_hot_path_files_in_scope(self):
+        src = ("def f(self):\n"
+               "    self.tracer.emit(1, 0, 0, 0)\n")
+        assert lint_sources({"x/comm.py": src}) == []
+        assert lint_sources({"x/rma.py": src}) == []
+
+
 class TestCli:
     def test_cli_clean_on_core(self, capsys):
         from repro.analysis.lint_protocol import main

@@ -27,16 +27,17 @@ class TestPostedDelivery:
             st = env.arena.view.stats
             if env.rank == 0:
                 env.comm.recv(1, tag=2)          # credit: entry is live
-                c0 = st.path_copied_bytes["rndv_posted"]
+                s0 = st.snapshot()
                 env.comm.send(1, b"\xab" * size, tag=1)
+                d = st.delta(s0)
                 return (env.comm.posted_sends,
-                        st.path_copied_bytes["rndv_posted"] - c0)
+                        d["path_copied_bytes"].get("rndv_posted", 0))
             pb = env.comm.alloc_buffer(size)
             rreq = env.comm.irecv_into(0, pb, tag=1)   # posts the entry
             env.comm.send(0, b"", tag=2)
-            c0 = st.copied_bytes
+            s0 = st.snapshot()
             rreq.wait(30)
-            recv_copied = st.copied_bytes - c0
+            recv_copied = st.delta(s0)["copied_bytes"]
             assert rreq.nbytes == size
             assert pb.read(0, 8) == b"\xab" * 8
             return recv_copied
@@ -61,20 +62,20 @@ class TestPostedDelivery:
                 if env.rank == 0:
                     src = b"\xee" * size
                     env.comm.barrier()
-                    c0 = st.copied_bytes
+                    s0 = st.snapshot()
                     for _ in range(iters):
                         env.comm.recv(1, tag=2)
                         env.comm.send(1, src, tag=1)
-                    return st.copied_bytes - c0
+                    return st.delta(s0)["copied_bytes"]
                 dst = env.comm.alloc_buffer(size) if posted \
                     else bytearray(size)
                 env.comm.barrier()
-                c0 = st.copied_bytes
+                s0 = st.snapshot()
                 for _ in range(iters):
                     rreq = env.comm.irecv_into(0, dst, tag=1)
                     env.comm.send(0, b"", tag=2)
                     rreq.wait(30)
-                return st.copied_bytes - c0
+                return st.delta(s0)["copied_bytes"]
             return prog
 
         staged = sum(run_threads(2, make_prog(False), cell_size=CELL,

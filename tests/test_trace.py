@@ -1,0 +1,285 @@
+"""Flight recorder (repro.core.trace): ring-buffer semantics, the
+disabled-mode zero-write guarantee across a real collective, the
+Chrome-trace exporter's lane discipline, the unified metrics report,
+the ProtocolStats snapshot/delta helpers, and the merge/summarize CLI."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import run_threads
+from repro.core.coherence import CoherentView, ProtocolStats
+from repro.core.pool import LocalPool
+from repro.core.trace import (EV_MB_CONSUME, EV_MB_POST, EV_NAMES, EV_TICK,
+                              Histogram, Tracer, as_tracer, chrome_events,
+                              load_dump, merge_dumps, summarize_dumps)
+
+MiB = 1 << 20
+
+
+# --------------------------------------------------------------------------
+# ring semantics
+# --------------------------------------------------------------------------
+
+class TestRing:
+    def test_wraparound_keeps_newest_never_reallocates(self):
+        tr = Tracer(capacity=8)
+        buf_id = id(tr._buf)
+        for i in range(20):
+            tr.emit(EV_TICK, i)
+        assert tr.recorded == 20
+        evs = tr.events()
+        assert len(evs) == 8                     # capacity, not total
+        assert [e[2] for e in evs] == list(range(12, 20))   # newest kept
+        assert [e[0] for e in evs] == sorted(e[0] for e in evs)
+        assert id(tr._buf) is not None and id(tr._buf) == buf_id
+
+    def test_under_capacity_returns_all_oldest_first(self):
+        tr = Tracer(capacity=64)
+        for i in range(5):
+            tr.emit(EV_TICK, i)
+        assert [e[2] for e in tr.events()] == [0, 1, 2, 3, 4]
+
+    def test_counts_survive_wraparound(self):
+        tr = Tracer(capacity=4)
+        for i in range(10):
+            tr.emit(EV_TICK, i)
+        assert tr.counts[EV_TICK] == 10          # counter, not ring size
+
+    def test_capacity_floor(self):
+        with pytest.raises(ValueError, match="capacity"):
+            Tracer(capacity=0)
+
+    def test_clear_resets_ring_and_histograms(self):
+        tr = Tracer(capacity=8)
+        tr.emit(EV_TICK, 123)
+        tr.clear()
+        assert tr.recorded == 0 and tr.events() == []
+        assert tr.hist_tick.summary()["count"] == 0
+
+    def test_posted_hit_keyed_by_post_id_and_peer(self):
+        """post_ids restart at 1 per source pair: the same id from two
+        peers must not cross-wire the post->consume latency pairing."""
+        tr = Tracer(capacity=64)
+        tr.emit(EV_MB_POST, 1, 5)                # id 1 from peer 5
+        tr.emit(EV_MB_POST, 1, 6)                # id 1 from peer 6
+        tr.emit(EV_MB_CONSUME, 1, 5)
+        tr.emit(EV_MB_CONSUME, 1, 6)
+        assert tr.hist_posted_hit.summary()["count"] == 2
+        assert tr._post_t == {}
+
+
+class TestAsTracer:
+    def test_normalization(self):
+        assert as_tracer(None, 3).enabled is False
+        assert as_tracer(False, 3).enabled is False
+        t = as_tracer(True, 3)
+        assert t.enabled and t.rank == 3
+        assert as_tracer(4096, 0).capacity == 4096
+        inj = Tracer(capacity=2, rank=7, enabled=False)
+        assert as_tracer(inj, 0) is inj          # instance passes through
+        with pytest.raises(TypeError):
+            as_tracer("yes", 0)
+
+
+class TestHistogram:
+    def test_log2_buckets_and_percentiles(self):
+        h = Histogram()
+        for ns in (100, 1000, 1000, 100000):
+            h.record(ns)
+        s = h.summary()
+        assert s["count"] == 4
+        # percentile returns the bucket's upper edge (<= 2x the truth)
+        assert 1000 <= h.percentile(0.5) <= 2000
+        assert 100000 <= h.percentile(0.99) <= 200000
+
+
+# --------------------------------------------------------------------------
+# disabled mode: a real chunked collective must not write one record
+# --------------------------------------------------------------------------
+
+class _CountingRecorder(Tracer):
+    def __init__(self):
+        super().__init__(capacity=16, enabled=False)
+        self.emit_calls = 0
+
+    def emit(self, ev, a0=0, a1=0, a2=0):
+        self.emit_calls += 1
+        super().emit(ev, a0, a1, a2)
+
+
+class TestDisabledMode:
+    def test_zero_emits_across_chunked_iallreduce(self):
+        """Every instrumentation site sits behind ``if tr.enabled:``
+        (LP005); with tracing off, a full chunked iallreduce plus pt2pt
+        traffic must reach the recorder exactly zero times."""
+        rec = _CountingRecorder()
+
+        def prog(env):
+            c = env.comm
+            assert c.tracer is rec               # injected recorder
+            x = np.full((1 * MiB) // 8, float(env.rank + 1))
+            c.iallreduce(x, algo="ring", chunk_bytes=128 << 10).wait(30)
+            peer = 1 - env.rank
+            c.send(peer, b"x" * 64, tag=1)
+            c.recv(peer, tag=1)
+            return True
+
+        assert all(run_threads(2, prog, pool_bytes=64 << 20,
+                               comm_kw={"trace": rec}, timeout=120))
+        assert rec.emit_calls == 0
+        assert rec.recorded == 0
+
+
+# --------------------------------------------------------------------------
+# traced end-to-end run: report + dumps + Chrome export + CLI
+# --------------------------------------------------------------------------
+
+def _traced_run(tmp_path):
+    """2 thread ranks, tracing on: chunked iallreduce + posted-rendezvous
+    pt2pt + an RMA notified-put epoch; returns the per-rank dump paths."""
+    def prog(env):
+        c = env.comm
+        x = np.full((1 * MiB) // 8, float(env.rank + 1))
+        c.iallreduce(x, algo="ring", chunk_bytes=256 << 10).wait(30)
+        if env.rank == 0:
+            c.recv(1, tag=2)                     # credit: entry live
+            c.send(1, b"\xab" * (256 << 10), tag=1)
+        else:
+            pb = c.alloc_buffer(256 << 10)
+            rreq = c.irecv_into(0, pb, tag=1)
+            c.send(0, b"", tag=2)
+            rreq.wait(30)
+            pb.free()
+        w = c.win_allocate("ttrace", 4096)
+        w.lock_all()
+        if env.rank == 0:
+            w.put_notify(1, 0, b"\xcd" * 512)
+        else:
+            w.wait_notify(0)
+        w.unlock_all()
+        w.fence()
+        w.free()
+        report = c.trace_report()
+        path = c.trace_dump(tmp_path / f"rank{env.rank}.json")
+        return report, path
+
+    res = run_threads(2, prog, pool_bytes=64 << 20, eager_threshold=0,
+                      comm_kw={"trace": True}, timeout=120)
+    return res
+
+
+class TestTracedRun:
+    @pytest.fixture(scope="class")
+    def run(self, tmp_path_factory):
+        return _traced_run(tmp_path_factory.mktemp("trace"))
+
+    def test_report_surfaces_latency_histograms(self, run):
+        r0, _ = run[0][0], run[0][1]
+        r1 = run[1][0]
+        assert r0["enabled"] and r0["events_recorded"] > 0
+        # engine-tick occupancy on both ranks
+        assert r0["histograms"]["engine_tick_ns"]["count"] > 0
+        assert r1["histograms"]["engine_tick_ns"]["count"] > 0
+        # posted-hit latency on the receiving rank (post->consume)
+        assert r1["histograms"]["posted_hit_ns"]["count"] >= 1
+        # wait_notify spin latency on the notified rank
+        assert r1["histograms"]["notify_wait_ns"]["count"] >= 1
+        # unified with ProtocolStats
+        assert r0["protocol_stats"]["copied_bytes"] > 0
+
+    def test_event_taxonomy_coverage(self, run):
+        kinds = set()
+        for report, _ in run:
+            kinds.update(report["counters"])
+        named = kinds & set(EV_NAMES.values())
+        assert len(named) >= 8, sorted(named)    # acceptance bar
+        assert any(k.startswith("pt2pt.") for k in named)
+        assert any(k.startswith("sched.") for k in named)
+        assert any(k.startswith("mb.") for k in named)
+        assert any(k.startswith("rma.") for k in named)
+
+    def test_chrome_export_roundtrip_and_lane_discipline(self, run):
+        dumps = [load_dump(p) for _, p in run]
+        merged = merge_dumps(dumps)
+        merged = json.loads(json.dumps(merged))  # JSON round-trip
+        evs = merged["traceEvents"]
+        assert {e["ph"] for e in evs} >= {"X", "M"}
+        names = {e["name"] for e in evs if e["ph"] != "M"}
+        assert len(names) >= 8
+        assert {e["pid"] for e in evs} == {0, 1}   # one lane per rank
+        # duration slices on one (pid, tid) lane never overlap and are
+        # time-ordered — Perfetto renders them as clean nested tracks
+        lanes = {}
+        for e in evs:
+            if e["ph"] == "X":
+                lanes.setdefault((e["pid"], e["tid"]), []).append(e)
+        assert lanes
+        for lane in lanes.values():
+            lane.sort(key=lambda e: e["ts"])
+            for a, b in zip(lane, lane[1:]):
+                assert a["ts"] + a["dur"] <= b["ts"] + 1e-6, (a, b)
+
+    def test_cli_merge_and_summarize(self, run, tmp_path, capsys):
+        from repro.trace import main
+        files = [str(p) for _, p in run]
+        out = tmp_path / "timeline.json"
+        assert main(["merge", *files, "-o", str(out)]) == 0
+        trace = json.loads(out.read_text())
+        assert trace["traceEvents"]
+        assert main(["summarize", *files, "--top", "5"]) == 0
+        text = capsys.readouterr().out
+        assert "engine.tick" in text
+        assert summarize_dumps([load_dump(p) for _, p in run])
+
+    def test_cli_missing_file_fails(self, tmp_path, capsys):
+        from repro.trace import main
+        assert main(["merge", str(tmp_path / "nope.json")]) == 1
+        assert "missing dump" in capsys.readouterr().err
+
+    def test_chrome_events_skips_disabled_empty_dump(self, tmp_path):
+        tr = Tracer(capacity=4, enabled=False)
+        p = tr.dump(tmp_path / "empty.json")
+        evs = chrome_events(load_dump(p))
+        assert all(e["ph"] == "M" for e in evs)  # metadata only
+
+
+# --------------------------------------------------------------------------
+# ProtocolStats snapshot/delta + the count_path upsert regression
+# --------------------------------------------------------------------------
+
+class TestProtocolStatsDelta:
+    def test_snapshot_is_deep_and_delta_diffs(self):
+        st = ProtocolStats()
+        st.copies, st.copied_bytes = 2, 100
+        st.path_copied_bytes["eager"] = 100
+        s0 = st.snapshot()
+        st.copies, st.copied_bytes = 5, 350
+        st.path_copied_bytes["eager"] += 250
+        assert s0["copied_bytes"] == 100         # unaffected by later moves
+        d = st.delta(s0)
+        assert d["copies"] == 3
+        assert d["copied_bytes"] == 250
+        # only the paths that moved survive the per-path diff
+        assert d["path_copied_bytes"] == {"eager": 250}
+
+    def test_delta_tolerates_older_snapshot_missing_keys(self):
+        st = ProtocolStats()
+        st.fences = 4
+        s0 = st.snapshot()
+        del s0["fences"]                          # snapshot from old code
+        st.fences = 9
+        assert st.delta(s0)["fences"] == 9        # diffs against zero
+
+    def test_count_path_upserts_unknown_bucket(self):
+        """Regression: count_path("serve_hot", ...) used to KeyError on
+        any path outside the pre-declared dict; new subsystems must be
+        able to attribute traffic without editing coherence.py."""
+        v = CoherentView(LocalPool(1 << 16), "coherent")
+        v.count_path("rndv_posted", 64)           # pre-declared bucket
+        v.count_path("serve_hot", 128)            # unknown: upsert
+        v.count_path("serve_hot", 128)
+        assert v.stats.path_copied_bytes["rndv_posted"] == 64
+        assert v.stats.path_copied_bytes["serve_hot"] == 256
+        # pre-declared zero-traffic buckets still report 0
+        assert v.stats.path_copied_bytes["rma_put"] == 0
