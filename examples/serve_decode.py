@@ -3,6 +3,14 @@ caches (attention KV, Mamba conv+ssm, RWKV wkv state — whatever the arch
 needs).
 
     PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-3b
+
+With ``--ranks N`` the demo runs the DISTRIBUTED serve tier instead: a
+router rank admits synthetic sessions through persistent-request pools
+and N-1 workers decode them with continuous batching over the
+rank-sharded KV page cache (pages move one-sidedly — see
+docs/serving.md).
+
+    PYTHONPATH=src python examples/serve_decode.py --ranks 3
 """
 import argparse
 import sys
@@ -10,18 +18,26 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.configs import ARCHS, get_config  # noqa: E402
-from repro.launch.serve import serve_batch  # noqa: E402
-
-
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m", choices=list(ARCHS))
+    ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--ranks", type=int, default=0,
+                    help="> 1: distributed serve tier (router + workers)")
+    ap.add_argument("--sessions", type=int, default=24)
     args = ap.parse_args()
 
+    if args.ranks > 1:
+        from repro.launch.serve import serve_distributed
+        serve_distributed(ranks=args.ranks, sessions=args.sessions)
+        return
+
+    from repro.configs import ARCHS, get_config
+    from repro.launch.serve import serve_batch
+    if args.arch not in ARCHS:
+        ap.error(f"unknown arch {args.arch!r} (choose from {list(ARCHS)})")
     cfg = get_config(args.arch).reduced()
     out = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
                       gen=args.gen)

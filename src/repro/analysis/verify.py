@@ -52,8 +52,8 @@ The checks (one ``Finding.code`` per failure class):
     matchbox demand (``Schedule.required_matchbox_depth`` is the single
     source of truth; ``comm.py`` derives persistent demand from it).
 
-One-sided schedules (``rput``/``rget``/``allgather_get``/``bcast_put``)
-verify under the SAME checks: their Put/Get nodes are engine-local
+One-sided schedules (``rput``/``rget``/``raccumulate``/
+``allgather_get``/``bcast_put``) verify under the SAME checks: their Put/Get nodes are engine-local
 (the shared-memory store IS the transfer, so they never enter the
 send/recv bijection), while all cross-rank ordering they need rides on
 zero-byte Send/Recv token pairs — which the matching, deadlock and
@@ -490,7 +490,10 @@ def iter_matrix(max_n: int = 16):
                     # one-sided: Put/Get nodes + zero-byte token pairs
                     dict(kind="allgather_get", n=n, nbytes=per_b),
                     dict(kind="rput", n=n, nbytes=nbytes, root=n - 1),
-                    dict(kind="rget", n=n, nbytes=nbytes, root=n - 1)]
+                    dict(kind="rget", n=n, nbytes=nbytes, root=n - 1),
+                    # read-modify-write chain: Get -> Reduce -> Put
+                    dict(kind="raccumulate", n=n, nbytes=nbytes,
+                         itemsize=itemsize, root=n - 1)]
             if pow2:
                 cfgs.append(dict(kind="allreduce_rd", n=n, nbytes=nbytes,
                                  itemsize=itemsize))

@@ -60,7 +60,7 @@ from repro.core.sched import (BufRef, CopyOp, RecvOp, ReduceOp, Schedule,
                               SendOp, compile_schedule)
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, OPTIMAL_CELL_SIZE,
                                   QueueMatrix, SPSCQueue)
-from repro.core.rma import Window
+from repro.core.rma import DynamicWindow, Window
 from repro.core.runtime import RankEnv, run_processes, run_threads
 from repro.core.sync import PSCW, BakeryLock, RWLock, SeqBarrier
 from repro.core.trace import (EV_NAMES, Histogram, Metrics, Tracer,

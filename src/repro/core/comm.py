@@ -281,6 +281,15 @@ class PersistentRequest:
         self._active.wait(timeout)
         return self._active.nbytes
 
+    def cancel(self) -> None:
+        """MPI_Cancel on the active iteration (receives only): retracts
+        any live matchbox posting and unlinks the posted receive, after
+        which ``free()`` is legal.  Best-effort like ``Request.cancel``
+        — a receive already draining an eager message completes
+        normally.  No-op when idle or on sends."""
+        if self._active is not None:
+            self._active.cancel()
+
     def free(self) -> None:
         if self.active:
             raise RuntimeError("cannot free an active persistent request")
@@ -593,14 +602,19 @@ class Comm(Communicator):
                              f"got {tuning!r}")
         auto = eager_threshold == "auto"
         self.tuning = tuning
+        self._profile_path = profile_path
         # ``tuning="auto"``: load the measured machine profile
         # (benchmarks/roofline.py --profile) and derive every tuned
         # constant from it — eager threshold, chunk floor, hier group
         # ratio, matchbox depth. Missing/stale profiles warn (in
-        # load_profile) and fall back to the heuristic policies.
+        # load_profile_info) and fall back to the heuristic policies;
+        # the rejection REASON is kept (``tuning_status``,
+        # ``trace_report()``) so a long-lived process can see why it is
+        # running untuned and ``retune()`` after refreshing the profile.
         # Derived comms (split/dup) inherit the parent's state instead.
-        prof = (_profile.load_profile(profile_path)
-                if tuning == "auto" and _inherit is None else None)
+        prof, prof_reason = (
+            _profile.load_profile_info(profile_path)
+            if tuning == "auto" and _inherit is None else (None, None))
         if (_inherit is None and prof is not None
                 and matchbox_slots is None
                 and mb_slots == DEFAULT_MB_SLOTS):
@@ -626,6 +640,9 @@ class Comm(Communicator):
         self.probe_mode: Optional[str] = None
         self.profile = prof
         self._tuned: Optional[dict] = None
+        # ``retune()`` may re-derive the eager threshold from a fresh
+        # profile only when the caller did not pin one explicitly
+        self._eager_pinned = not (auto or eager_threshold is None)
         if _inherit is not None:
             # sub-communicators never re-probe or re-agree: the parent
             # already measured (or loaded) the crossover and agreed the
@@ -636,6 +653,7 @@ class Comm(Communicator):
             self.probe_mode = "inherited"
             self._chunk_base = _inherit.get("chunk_base")
             self._tuned = _inherit.get("tuned")
+            self._set_tuning_status(_inherit.get("tuning_reason"))
             return
         if prof is not None:
             # the profile REPLACES the init-time ping-pong probe
@@ -647,6 +665,7 @@ class Comm(Communicator):
             self.eager_threshold = self._probe_eager_threshold()
         if tuning == "auto":
             self._agree_tuning(prof)
+        self._set_tuning_status(prof_reason)
 
     def _lease_round_bufs(self, slot_sizes: dict[int, int]):
         """Schedule-execution hook (core/collectives launch layer):
@@ -709,13 +728,80 @@ class Comm(Communicator):
         # pre-seed the chunk-agreement base: no later lazy collective
         self._chunk_base = int(vec[0])
 
+    def _set_tuning_status(self, reason: Optional[str]) -> None:
+        """Record WHY this communicator is tuned the way it is — the
+        state a stale profile used to leave behind only as one
+        RuntimeWarning. ``tuning_status["mode"]``:
+
+          off        tuning=None (heuristics by choice)
+          profile    fresh machine profile loaded on this rank
+          agreed     no local profile, but a peer had one — the agreed
+                     wire-shaping values were adopted
+          heuristic  tuning="auto" but no rank had a fresh profile
+                     (``reason`` says why: missing / stale / unreadable)
+
+        Also mirrored into the Metrics registry (``trace_report()``):
+        the ``tuning_profile_loaded`` gauge and, on fallback, the
+        ``tuning_heuristic_fallback`` counter."""
+        if self.tuning != "auto":
+            mode = "off"
+        elif self.profile is not None:
+            mode = "profile"
+        elif self._tuned is not None:
+            mode = "agreed"
+        else:
+            mode = "heuristic"
+        self.tuning_status = {"mode": mode, "reason": reason}
+        m = self.tracer.metrics
+        m.gauge("tuning_profile_loaded",
+                1.0 if self.profile is not None else 0.0)
+        if mode == "heuristic":
+            m.counter("tuning_heuristic_fallback")
+
+    def retune(self, profile_path: str | None = None) -> dict:
+        """Collective: re-load the machine profile and re-agree the
+        tuned constants — the explicit re-profile path for long-lived
+        (serving) processes whose ``Comm(tuning="auto")`` init found a
+        stale profile and fell back to heuristics. Run
+        ``python -m benchmarks.roofline --profile`` (any time after
+        init), then call ``retune()`` on EVERY rank of this
+        communicator, in the same order relative to other collectives.
+
+        Re-derives the eager threshold (unless one was pinned at init)
+        and re-agrees crossover / chunk floor / tier ratio. The
+        matchbox DEPTH cannot change — the shared strip region was
+        sized at init — and does not need to: depth only shapes the
+        region layout, which stays valid; the agreement check still
+        verifies all ranks hold the same depth. Returns the new
+        ``tuning_status``."""
+        if self.tuning != "auto":
+            raise RuntimeError(
+                "retune() is only meaningful on a Comm(tuning='auto') "
+                "communicator")
+        prof, reason = _profile.load_profile_info(
+            profile_path if profile_path is not None
+            else self._profile_path)
+        self.profile = prof
+        self._tuned = None
+        self._chunk_base = None
+        if prof is not None:
+            self.probe_mode = "profile"
+            self.probed_crossover = prof.eager_crossover
+            if not self._eager_pinned:
+                self.eager_threshold = prof.eager_threshold
+        self._agree_tuning(prof)
+        self._set_tuning_status(reason)
+        return dict(self.tuning_status)
+
     def _inherit_state(self) -> dict:
         """Tuning state handed to split()/dup() children: the agreed
         values stay valid on any subset of the agreeing ranks."""
         return {"profile": self.profile,
                 "probed_crossover": self.probed_crossover,
                 "chunk_base": self._chunk_base,
-                "tuned": self._tuned}
+                "tuned": self._tuned,
+                "tuning_reason": getattr(self, "tuning_status",
+                                         {}).get("reason")}
 
     @property
     def _hier_ratio(self) -> Optional[float]:
@@ -907,8 +993,14 @@ class Comm(Communicator):
         registry metrics and the aggregate ``ProtocolStats`` snapshot.
         Meaningful content requires ``Comm(trace=True)`` (or an int
         capacity / injected ``Tracer``); a disabled tracer reports
-        zeroes."""
-        return self.tracer.report(stats=self.arena.view.stats)
+        zeroes. The ``tuning`` section is always present: mode
+        (profile / agreed / heuristic / off) and, on fallback, the
+        reason the machine profile was rejected — so an untuned
+        long-lived process is visible, not just one init-time
+        warning."""
+        out = self.tracer.report(stats=self.arena.view.stats)
+        out["tuning"] = dict(self.tuning_status)
+        return out
 
     def trace_dump(self, path) -> str:
         """Write this rank's flight-recorder ring + report as a JSON

@@ -203,22 +203,24 @@ class MachineProfile:
         return None
 
 
-def load_profile(path: str | os.PathLike | None = None, *,
-                 quiet: bool = False) -> Optional[MachineProfile]:
-    """Load a FRESH machine profile or return None. Stale / foreign /
-    malformed profiles are rejected with a loud warning (the caller
-    falls back to the heuristic policies) — silent mis-tuning from a
-    recycled CI artifact is the failure mode this guards against."""
+def load_profile_info(path: str | os.PathLike | None = None, *,
+                      quiet: bool = False
+                      ) -> tuple[Optional[MachineProfile], Optional[str]]:
+    """``(profile, reject_reason)``: the profile when it is fresh and
+    trustworthy (reason None), else ``(None, reason)`` — the reason a
+    long-lived process can SURFACE (``Comm.tuning_status``,
+    ``trace_report()``) instead of losing it after the one warning."""
     p = profile_path(path)
     if not p.exists():
-        return None
+        return None, f"no machine profile at {p}"
     try:
         prof = MachineProfile(json.loads(p.read_text()), p)
     except (ValueError, OSError, json.JSONDecodeError) as e:
+        reason = f"unreadable machine profile {p}: {e}"
         if not quiet:
-            warnings.warn(f"ignoring unreadable machine profile {p}: "
-                          f"{e}", RuntimeWarning, stacklevel=2)
-        return None
+            warnings.warn(f"ignoring {reason}", RuntimeWarning,
+                          stacklevel=2)
+        return None, reason
     reason = prof.stale_reason()
     if reason is not None:
         if not quiet:
@@ -227,8 +229,18 @@ def load_profile(path: str | os.PathLike | None = None, *,
                 f"falling back to heuristic tuning (regenerate with "
                 f"`python -m benchmarks.roofline --profile`)",
                 RuntimeWarning, stacklevel=2)
-        return None
-    return prof
+        return None, f"stale machine profile {p}: {reason}"
+    return prof, None
+
+
+def load_profile(path: str | os.PathLike | None = None, *,
+                 quiet: bool = False) -> Optional[MachineProfile]:
+    """Load a FRESH machine profile or return None. Stale / foreign /
+    malformed profiles are rejected with a loud warning (the caller
+    falls back to the heuristic policies) — silent mis-tuning from a
+    recycled CI artifact is the failure mode this guards against.
+    ``load_profile_info`` additionally returns the rejection reason."""
+    return load_profile_info(path, quiet=quiet)[0]
 
 
 def write_profile(data: dict,

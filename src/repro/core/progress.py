@@ -299,7 +299,9 @@ class _SchedExec:
                  finalize: Optional[Callable] = None,
                  bound_recvs: Optional[dict[int, Any]] = None,
                  await_claim: float = 0.0, win=None, win_disp: int = 0,
-                 rma_path: str = "rma_coll", rma_budget: int = 0):
+                 rma_path: str = "rma_coll", rma_budget: int = 0,
+                 rma_path_put: Optional[str] = None,
+                 rma_path_get: Optional[str] = None):
         self.comm = comm
         self.sched = sched
         self.bufs = bufs
@@ -316,6 +318,12 @@ class _SchedExec:
         self.win = win
         self.win_disp = win_disp
         self.rma_path = rma_path
+        # mixed-direction schedules (raccumulate's read-modify-write)
+        # attribute their Get chunks and Put chunks to DIFFERENT
+        # ProtocolStats buckets; plain rput/rget leave these None and
+        # everything lands in ``rma_path``
+        self.rma_path_put = rma_path_put or rma_path
+        self.rma_path_get = rma_path_get or rma_path
         self.rma_budget = rma_budget
         # persistent cyclic schedules: seconds each send may wait for
         # its guaranteed (but possibly spilled) matchbox posting before
@@ -466,12 +474,12 @@ class _SchedExec:
             elif isinstance(nd, PutOp):
                 self.win._exec_put(nd.target, self.win_disp + nd.disp,
                                    self.bufs.ndview(nd.buf, np.uint8),
-                                   path=self.rma_path)
+                                   path=self.rma_path_put)
                 self._node_done(idx)
             elif isinstance(nd, GetOp):
                 self.win._exec_get(nd.target, self.win_disp + nd.disp,
                                    self.bufs.ndview(nd.buf, np.uint8),
-                                   path=self.rma_path)
+                                   path=self.rma_path_get)
                 self._node_done(idx)
 
 

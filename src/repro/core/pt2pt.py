@@ -88,7 +88,7 @@ from repro.core.progress import waitany as _waitany
 from repro.core.ringqueue import (DEFAULT_CELL_SIZE, FLAG_FIRST, FLAG_LAST,
                                   FLAG_POSTED, FLAG_RNDV,
                                   TAG_RESERVED_BASE, QueueMatrix)
-from repro.core.rma import Window
+from repro.core.rma import DynamicWindow, Window
 from repro.core.sync import SeqBarrier
 from repro.core.trace import (EV_MB_CLAIM, EV_MB_CONSUME, EV_MB_POST,
                               EV_MB_PROMOTE, EV_MB_RETRACT, EV_MB_SPILL,
@@ -1512,6 +1512,36 @@ class Communicator:
                 try:
                     w = Window(self.arena, name, self.size, self.rank,
                                win_size, create=False, comm=self)
+                    break
+                except FileNotFoundError:
+                    if time.monotonic() - t0 > 30.0:
+                        raise
+                    time.sleep(0.0005)
+        self.barrier()
+        return w
+
+    def win_create_dynamic(self, name: str,
+                           attach_slots: int = 32) -> DynamicWindow:
+        """Collective MPI_Win_create_dynamic: a window with no backing
+        arena object. Each rank ``attach``-es pool-resident buffers
+        (``PoolBuffer``/``PoolView``/``ObjHandle``) and peers address
+        them by the ABSOLUTE pool offset ``attach`` returned — an
+        existing KV page is served one-sided without copying it into a
+        window arena, and attach/detach themselves move zero payload
+        bytes. ``attach_slots`` bounds the per-rank live-region count
+        (it sizes the shared attach table, so pass the same value on
+        every rank)."""
+        if self.rank == 0:
+            w = DynamicWindow(self.arena, name, self.size, self.rank,
+                              create=True, comm=self,
+                              attach_slots=attach_slots)
+        else:
+            t0 = time.monotonic()
+            while True:
+                try:
+                    w = DynamicWindow(self.arena, name, self.size,
+                                      self.rank, create=False, comm=self,
+                                      attach_slots=attach_slots)
                     break
                 except FileNotFoundError:
                     if time.monotonic() - t0 > 30.0:

@@ -93,6 +93,10 @@ class Window:
     collective and idempotent.
     """
 
+    # DynamicWindow flips this: no backing ``{name}:w`` arena object —
+    # displacements address ATTACHED pool regions instead of segments
+    dynamic = False
+
     def __init__(self, arena: Arena, name: str, n_ranks: int, rank: int,
                  win_size: int, *, create: bool, comm=None):
         self.arena = arena
@@ -105,12 +109,15 @@ class Window:
         sync_bytes = (SeqBarrier.region_bytes(n_ranks)
                       + PSCW.region_bytes(n_ranks)
                       + RWLock.region_bytes(n_ranks)
-                      + _notify_bytes(n_ranks) + 256)
+                      + _notify_bytes(n_ranks)
+                      + self._extra_sync_bytes(n_ranks) + 256)
         if create:
-            self.data: ObjHandle = arena.create(f"{name}:w", n_ranks * win_size)
+            self.data: ObjHandle | None = (
+                None if self.dynamic
+                else arena.create(f"{name}:w", n_ranks * win_size))
             self.sync: ObjHandle = arena.create(f"{name}:s", sync_bytes)
         else:
-            self.data = arena.open(f"{name}:w")
+            self.data = None if self.dynamic else arena.open(f"{name}:w")
             self.sync = arena.open(f"{name}:s")
         v = arena.view
         b = self.sync.offset
@@ -124,6 +131,9 @@ class Window:
         b += RWLock.region_bytes(n_ranks)
         b += (-b) % 64
         self._notify_off = b
+        # subclass region (DynamicWindow's attach table) directly after
+        # the notify matrix — 8*n*n bytes keeps it u64-aligned
+        self._extra_off = self._notify_off + _notify_bytes(n_ranks)
         self._fence = SeqBarrier(v, fence_off, n_ranks, rank,
                                  initialize=create)
         self._pscw = PSCW(v, pscw_off, n_ranks, rank, initialize=create)
@@ -140,6 +150,11 @@ class Window:
         # CollRequest) pairs, pruned opportunistically
         self._reqs: list = []
         self._freed = False
+
+    def _extra_sync_bytes(self, n_ranks: int) -> int:
+        """Bytes a subclass appends to the sync object (laid out at
+        ``self._extra_off``); the base window appends none."""
+        return 0
 
     # ------------------------------------------------------------------
     # address arithmetic (the MPI_Win_allocate_shared layout)
@@ -263,13 +278,73 @@ class Window:
         the read-op-write runs under the EXCLUSIVE window lock and is
         atomic against any other locked access. Counts one ``rma_get``
         plus one ``rma_put`` of the payload. Do not call while already
-        holding the window lock (not reentrant)."""
+        holding the window lock (not reentrant).
+
+        Thin blocking wrapper over :meth:`raccumulate` on comm-attached
+        windows; a window built without a communicator falls back to
+        the synchronous read-op-write (no engine to pump)."""
+        if self._comm is None:
+            self._lock.acquire_excl()
+            try:
+                cur = self.get_array(target, disp, arr.shape, arr.dtype)
+                self.put_array(target, disp, op(cur, arr))
+            finally:
+                self._lock.release_excl()
+            return
+        self.raccumulate(target, disp, arr, op=op).wait()
+
+    def raccumulate(self, target: int, disp: int, arr: np.ndarray,
+                    op=np.add, *, chunk_bytes="auto") -> CollRequest:
+        """Request-based MPI_Raccumulate: the engine-pumped spelling of
+        ``accumulate``. Compiles a three-node ``raccumulate`` schedule
+        (GetOp target region -> ReduceOp with the local operand -> PutOp
+        the result back), re-cut by the standard chunking post-pass, and
+        returns a ``CollRequest`` with the same local-completion/flush
+        semantics as ``rput`` — one chunk's read-modify-write per engine
+        tick, so a large accumulate overlaps the caller's compute
+        instead of stalling the progress engine for the whole reduction.
+
+        Atomicity: the EXCLUSIVE window lock is acquired when the
+        request is issued and released when it completes, so the whole
+        read-modify-write stays atomic against any other locked access —
+        but the lock is held until the request finishes: complete it
+        promptly (``wait()``/``flush``/engine pumping), and do not issue
+        one while already holding the window lock (not reentrant, like
+        ``accumulate``). Counts Get chunks under
+        ``path_copied_bytes["rma_get"]`` and Put chunks under
+        ``["rma_put"]`` — the same buckets as the blocking form. Do not
+        modify ``arr`` before completion. Needs a comm-attached window
+        (``comm.win_allocate``)."""
+        comm = self._require_comm()
+        from repro.core.collectives import _resolve_chunk  # lazy: cycle
+        arr = np.ascontiguousarray(arr)
+        u8 = arr.reshape(-1).view(np.uint8)
+        nbytes = u8.size
+        self._addr(target, disp, nbytes)     # bounds check BEFORE locking
+        cb = _resolve_chunk(comm, chunk_bytes, nbytes)
+        sched = compile_schedule(comm, "raccumulate", nbytes,
+                                 itemsize=arr.dtype.itemsize,
+                                 root=target, chunk_bytes=cb)
+        bufs = _HeapBufs({1: sched.slot_sizes.get(1, nbytes)})
+        bufs.alias(0, u8)
         self._lock.acquire_excl()
-        try:
-            cur = self.get_array(target, disp, arr.shape, arr.dtype)
-            self.put_array(target, disp, op(cur, arr))
-        finally:
+
+        def fin(_b, n=nbytes):
+            # runs in _SchedExec._complete's try/finally after the last
+            # node retired; every node is LOCAL (bounds pre-checked, no
+            # wire requests), so abort-without-finalize cannot strand
+            # the lock
             self._lock.release_excl()
+            return n
+
+        ex = _SchedExec(comm, sched, bufs, 0, dtype=arr.dtype, op=op,
+                        win=self, win_disp=disp, rma_budget=1,
+                        rma_path_put="rma_put", rma_path_get="rma_get",
+                        finalize=fin)
+        comm._engine.add_coll(ex)
+        req = CollRequest(comm, ex)
+        self._track(target, req)
+        return req
 
     def local_view(self, disp: int, nbytes: int) -> memoryview:
         """Writable memoryview alias of THIS rank's own window segment
@@ -616,7 +691,141 @@ class Window:
         self._fence.wait()
         if self.rank == 0:
             try:
-                self.arena.destroy(self.data)
+                if self.data is not None:
+                    self.arena.destroy(self.data)
                 self.arena.destroy(self.sync)
             except FileNotFoundError:
                 pass
+
+
+class DynamicWindow(Window):
+    """MPI_Win_create_dynamic analogue: a window with NO backing arena
+    object — displacements are ABSOLUTE pool offsets into regions the
+    owning rank has ``attach``-ed, so an existing pool-resident buffer
+    (a ``PoolBuffer`` KV page, an ``ObjHandle``) is exposed one-sided
+    WITHOUT copying it into a window arena. The whole pool being one
+    flat shared mapping is exactly MPI's dynamic-window absolute-address
+    model: ``attach`` returns the region's pool offset, peers use that
+    offset as ``disp`` in put/get/rput/rget/raccumulate.
+
+    The attach table lives in the shared sync object: per-rank rows of
+    ``attach_slots`` (offset u64, len u64) entries, single-writer (only
+    the owning rank stores its row) like the notify matrix — so
+    ``_addr`` gives REAL remote bounds checking by scanning the target's
+    published row (an unattached or detached address raises
+    ``IndexError``, the same contract as a static window's bounds
+    check). Publication order is offset-then-len and detach tombstones
+    the len word, so a concurrent reader never sees a torn live entry.
+    Attach/detach are pure nt-word stores: no payload moves, nothing is
+    counted in ``ProtocolStats`` (regression-tested).
+
+    The full sync surface (fence/PSCW/lock/notify) and the request-based
+    operations work unchanged; the window COLLECTIVES
+    (``iallgather``/``ibcast``) need per-rank segments and therefore a
+    ``win_allocate`` window. ``local_view(disp, nbytes)`` aliases any
+    region attached by THIS rank. Construct via
+    ``comm.win_create_dynamic(name)``."""
+
+    dynamic = True
+
+    def __init__(self, arena: Arena, name: str, n_ranks: int, rank: int,
+                 *, create: bool, comm=None, attach_slots: int = 32):
+        if attach_slots < 1:
+            raise ValueError(f"attach_slots must be >= 1, "
+                             f"got {attach_slots}")
+        self._attach_slots = attach_slots
+        super().__init__(arena, name, n_ranks, rank, 0, create=create,
+                         comm=comm)
+        self._attach_off = self._extra_off
+        # local mirror of this rank's row: slot -> (offset, len)
+        self._mine: list = [None] * attach_slots
+        if create:
+            v = arena.view
+            for i in range(2 * n_ranks * attach_slots):
+                v.nt_store_u64(self._attach_off + 8 * i, 0)
+
+    def _extra_sync_bytes(self, n_ranks: int) -> int:
+        return 16 * n_ranks * self._attach_slots
+
+    def _row(self, rank: int) -> int:
+        return self._attach_off + 16 * self._attach_slots * rank
+
+    @staticmethod
+    def _resolve_region(buf) -> tuple[int, int]:
+        """(pool offset, nbytes) of an attachable object: PoolBuffer,
+        PoolView, ObjHandle, an ``(offset, nbytes)`` pair, or anything
+        with ``.offset`` and ``.nbytes``/``.size``."""
+        from repro.core.pt2pt import PoolBuffer, PoolView  # lazy: cycle
+        if isinstance(buf, PoolView):
+            return buf.buffer.offset + buf.off, buf.nbytes
+        if isinstance(buf, PoolBuffer):
+            return buf.offset, buf.nbytes
+        if isinstance(buf, tuple) and len(buf) == 2:
+            return int(buf[0]), int(buf[1])
+        off = getattr(buf, "offset", None)
+        n = getattr(buf, "nbytes", getattr(buf, "size", None))
+        if off is None or n is None:
+            raise TypeError(
+                f"cannot attach {type(buf).__name__}: need a pool-"
+                f"resident object (PoolBuffer/PoolView/ObjHandle) or "
+                f"an (offset, nbytes) pair")
+        return int(off), int(n)
+
+    def attach(self, buf) -> int:
+        """MPI_Win_attach: publish a pool-resident region so every rank
+        may target it. Returns the region's absolute pool offset — the
+        ``disp`` peers pass to put/get/rput/rget. Zero payload copies;
+        reuses tombstoned (detached) entries. Raises ``RuntimeError``
+        when the per-rank table (``attach_slots`` entries) is full."""
+        off, nbytes = self._resolve_region(buf)
+        if nbytes <= 0:
+            raise ValueError(f"cannot attach empty region ({nbytes} B)")
+        v = self.arena.view
+        base = self._row(self.rank)
+        for k in range(self._attach_slots):
+            if self._mine[k] is None:
+                # offset first, len last: the len store PUBLISHES the
+                # entry, so a remote scan never sees a torn live row
+                v.nt_store_u64(base + 16 * k, off)
+                v.nt_store_u64(base + 16 * k + 8, nbytes)
+                self._mine[k] = (off, nbytes)
+                return off
+        raise RuntimeError(
+            f"attach table full ({self._attach_slots} regions attached "
+            f"by rank {self.rank}); detach one or raise attach_slots")
+
+    def detach(self, addr: int) -> None:
+        """MPI_Win_detach: tombstone the entry attached at pool offset
+        ``addr`` (one nt-word store — the len word goes to 0). The
+        caller is responsible for quiescing peers first, as in MPI:
+        a concurrent remote access to a detaching region races."""
+        base = self._row(self.rank)
+        for k, ent in enumerate(self._mine):
+            if ent is not None and ent[0] == addr:
+                self.arena.view.nt_store_u64(base + 16 * k + 8, 0)
+                self._mine[k] = None
+                return
+        raise KeyError(f"no region attached at pool offset {addr}")
+
+    def _addr(self, target: int, disp: int, n: int) -> int:
+        """Resolve an absolute pool offset against ``target``'s
+        PUBLISHED attach row — the dynamic window's bounds check. The
+        scan costs ``attach_slots`` nt-loads; serving hot paths should
+        cache the returned base and issue rput/rget against it (the
+        engine re-validates per chunk, keeping detach visible)."""
+        if not 0 <= target < self.n:
+            raise IndexError(f"target {target}")
+        if n < 0 or disp < 0:
+            raise IndexError(f"bad region [{disp}, {disp + n})")
+        v = self.arena.view
+        base = self._row(target)
+        for k in range(self._attach_slots):
+            ln = v.nt_load_u64(base + 16 * k + 8)
+            if not ln:
+                continue
+            off = v.nt_load_u64(base + 16 * k)
+            if off <= disp and disp + n <= off + ln:
+                return disp
+        raise IndexError(
+            f"[{disp}, {disp + n}) is not inside any region attached "
+            f"by rank {target}")

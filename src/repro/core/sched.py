@@ -736,6 +736,29 @@ def _compile_rget(n: int, rank: int, nbytes: int, target: int) -> Schedule:
     return s
 
 
+def _compile_raccumulate(n: int, rank: int, nbytes: int,
+                         target: int) -> Schedule:
+    """Request-based accumulate: GetOp the target region into a scratch
+    slot, ReduceOp the local operand (slot 0) into it, PutOp the result
+    back — the read-modify-write as a three-node chain the engine pumps
+    like any other schedule. Chunked, each chunk's get/reduce/put chain
+    is independent (the regions split in lockstep), so a large
+    accumulate moves one chunk per tick instead of stalling the engine
+    for the whole reduction. Atomicity is the CALLER's job: the window
+    holds the exclusive lock across the request's lifetime (acquired at
+    issue, released on completion — see ``Window.raccumulate``)."""
+    s = Schedule("raccumulate", n, rank)
+    operand = BufRef(0, 0, nbytes)
+    acc = BufRef(1, 0, nbytes)
+    get = s._add(GetOp(deps=(), target=target, buf=acc, disp=0))
+    red = s._add(ReduceOp(deps=(get,), dst=acc, src=operand))
+    s._add(PutOp(deps=(red,), target=target, buf=acc, disp=0))
+    s.rounds = 1
+    s.result = None
+    s.validate()
+    return s
+
+
 def _compile_allgather_get(n: int, rank: int, per_b: int) -> Schedule:
     """Get-based allgather over a window: each rank PUBLISHES its block
     into its OWN window segment (a self-put), announces readiness to
@@ -838,6 +861,8 @@ _COMPILERS = {
         _compile_rput(n, rank, nbytes, root),
     "rget": lambda n, rank, nbytes, itemsize, root, group:
         _compile_rget(n, rank, nbytes, root),
+    "raccumulate": lambda n, rank, nbytes, itemsize, root, group:
+        _compile_raccumulate(n, rank, nbytes, root),
     "allgather_get": lambda n, rank, nbytes, itemsize, root, group:
         _compile_allgather_get(n, rank, nbytes),
     "bcast_put": lambda n, rank, nbytes, itemsize, root, group:

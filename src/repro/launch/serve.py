@@ -5,6 +5,14 @@ on a TPU mesh (the decode shapes of the dry-run are exactly this step).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
       --batch 4 --prompt-len 32 --gen 32
+
+``--ranks N`` switches to the DISTRIBUTED serve tier instead
+(``repro.serve``): a router rank admits an open-loop Poisson session
+population and N-1 workers run continuous-batching decode over the
+rank-sharded dynamic-window page cache — the comm-core data plane the
+single-process path above feeds in a real deployment.
+
+  PYTHONPATH=src python -m repro.launch.serve --ranks 3 --sessions 32
 """
 from __future__ import annotations
 
@@ -70,15 +78,46 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
             "prefill_s": t_prefill, "decode_s": t_decode}
 
 
+def serve_distributed(*, ranks: int = 3, sessions: int = 32,
+                      rate: float = 400.0, seed: int = 0,
+                      quiet: bool = False) -> dict:
+    """Run the multi-rank serve tier (router + workers over one Comm)
+    and return the router's report. Thin wrapper over
+    ``repro.serve.run_serve`` so launch scripts and the jax path share
+    one entry point."""
+    from repro.serve import ServeConfig, run_serve
+    cfg = ServeConfig(sessions=sessions, rate=rate, seed=seed)
+    reports = run_serve(cfg, ranks=ranks)
+    router = reports[0]
+    if not quiet:
+        print(f"[serve] {router['sessions']} sessions on {ranks} ranks "
+              f"({ranks - 1} workers): qps {router['qps']:.1f}, "
+              f"p50 {router['p50_us']:.0f} us, "
+              f"p99 {router['p99_us']:.0f} us")
+    return router
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--preset", default="cpu-smoke",
                     choices=["cpu-smoke", "full"])
+    ap.add_argument("--ranks", type=int, default=0,
+                    help="> 1: run the distributed serve tier instead "
+                         "of the single-process jax driver")
+    ap.add_argument("--sessions", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=400.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.ranks > 1:
+        serve_distributed(ranks=args.ranks, sessions=args.sessions,
+                          rate=args.rate, seed=args.seed)
+        return
+    if args.arch is None:
+        ap.error("--arch is required for the single-process driver")
     cfg = get_config(args.arch)
     if args.preset == "cpu-smoke":
         cfg = cfg.reduced()

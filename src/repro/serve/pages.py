@@ -1,0 +1,73 @@
+"""Rank-sharded KV/page cache over pool-resident dynamic-window pages.
+
+Each rank owns ``n_slots`` fixed-size pages allocated straight from the
+comm's pool (``comm.alloc_buffer``) and attached to a shared
+``DynamicWindow`` — no copy into a window arena, the pool buffer IS the
+window segment (satellite 2's ``Win_attach`` model).  A page therefore
+has one global name: the absolute pool offset its home rank attached.
+
+Page movement is strictly one-sided against a PASSIVE home:
+
+  fill   ``win.rput(home, addr, bytes)``  — origin-counted ``rma_put``
+  fetch  ``win.rget(home, addr, dst)``    — origin-counted ``rma_get``
+
+The home rank executes nothing and copies nothing (zero receiver-side
+drain; the serve bench asserts this through
+``ProtocolStats.path_copied_bytes``).  Because the pages live in the
+shared pool, they even outlive their home RANK: a worker that
+fail-stops mid-decode leaves every page it hosted readable by rget
+until the buffers are freed at teardown — the CXL-pool property the
+paper builds on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PageStore:
+    """This rank's shard of the page cache: pool buffers + attachments."""
+
+    def __init__(self, comm, win, n_slots: int, page_bytes: int):
+        self.comm = comm
+        self.win = win
+        self.page_bytes = int(page_bytes)
+        self.bufs = [comm.alloc_buffer(page_bytes) for _ in range(n_slots)]
+        self.addrs = [win.attach(b) for b in self.bufs]
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.bufs)
+
+    def write_local(self, slot: int, data) -> None:
+        """Fill a locally-homed page (one counted local copy)."""
+        self.bufs[slot].write(data)
+
+    def read_local(self, slot: int) -> bytes:
+        return self.bufs[slot].read(0, self.page_bytes)
+
+    def free(self) -> None:
+        """Detach and release every page. Collective discipline is the
+        caller's: no peer may still be rget-ing these pages."""
+        for a in self.addrs:
+            self.win.detach(a)
+        for b in self.bufs:
+            b.free()
+        self.bufs = []
+        self.addrs = []
+
+
+class PageDirectory:
+    """Global slot -> absolute-address table, allgathered once at
+    startup (every rank attaches the same slot count, so the table is
+    rectangular).  After this one collective, page addressing is pure
+    local arithmetic — the serve hot loop never asks anyone where a
+    page lives."""
+
+    def __init__(self, comm, store: PageStore):
+        mine = np.asarray(store.addrs, dtype=np.int64)
+        flat = comm.allgather(mine)
+        self.table = flat.reshape(comm.size, -1)
+        self.page_bytes = store.page_bytes
+
+    def addr(self, home: int, slot: int) -> int:
+        return int(self.table[home, slot])

@@ -336,3 +336,224 @@ class TestWindowLifecycle:
             win.rput(0, 0, np.zeros(8, np.uint8))
         with pytest.raises(RuntimeError):
             win.allgather(np.zeros(4))
+
+
+class TestRaccumulate:
+    def test_blocking_accumulate_still_works(self):
+        """``accumulate`` is now a thin wrapper over ``raccumulate`` on
+        comm-attached windows — same result as the old synchronous
+        path."""
+        def prog(env):
+            win = env.comm.win_allocate("acc", 1 << 12)
+            if env.rank == 0:
+                win.put_array(0, 0, np.zeros(16))
+            win.fence()
+            win.accumulate(0, 0, np.full(16, float(env.rank + 1)))
+            win.fence()
+            out = win.get_array(0, 0, (16,), np.float64)
+            win.free()
+            return float(out[0])
+
+        res = run_threads(3, prog, pool_bytes=16 << 20)
+        assert res == [6.0, 6.0, 6.0]      # 1 + 2 + 3
+
+    def test_raccumulate_atomic_under_contention(self):
+        """Every rank fires many request-based accumulates at ONE
+        target word: the exclusive-lock read-modify-write chain must
+        never lose an update."""
+        iters = 20
+
+        def prog(env):
+            win = env.comm.win_allocate("racc", 1 << 12)
+            if env.rank == 0:
+                win.put_array(0, 0, np.zeros(1))
+            win.fence()
+            for _ in range(iters):
+                win.raccumulate(0, 0, np.ones(1)).wait()
+            win.fence()
+            out = float(win.get_array(0, 0, (1,), np.float64)[0])
+            win.free()
+            return out
+
+        res = run_threads(4, prog, pool_bytes=16 << 20, timeout=120)
+        assert res[0] == 4 * iters
+
+    def test_raccumulate_is_nonblocking_and_releases_lock(self):
+        """The request returns before completion (engine-pumped), the
+        source operand is applied with the window lock held, and the
+        lock is free again afterwards (a fresh lock() succeeds)."""
+        def prog(env):
+            win = env.comm.win_allocate("rnb", 1 << 16)
+            if env.rank == 0:
+                win.put_array(1, 0, np.zeros(2048))
+            win.fence()
+            if env.rank == 0:
+                req = win.raccumulate(1, 0, np.ones(2048),
+                                      chunk_bytes=4096)
+                req.wait()
+                win.lock()        # released on completion, or deadlock
+                win.unlock()
+            win.fence()
+            out = float(win.get_array(1, 0, (2048,), np.float64).sum())
+            win.free()
+            return out
+
+        assert run_threads(2, prog, pool_bytes=16 << 20) == [2048.0,
+                                                             2048.0]
+
+    def test_raccumulate_path_buckets_split_get_put(self):
+        """The read-modify-write chain attributes its Get chunks to
+        ``rma_get`` and its Put chunks to ``rma_put`` on the ORIGIN —
+        exactly nbytes each — while the passive target counts
+        nothing."""
+        nbytes = 4096
+
+        def prog(env):
+            win = env.comm.win_allocate("rpb", 1 << 13)
+            win.fence()
+            before = env.comm.arena.view.stats.snapshot()
+            if env.rank == 0:
+                win.raccumulate(
+                    1, 0, np.zeros(nbytes, np.uint8)).wait()
+            win.fence()
+            d = env.comm.arena.view.stats.delta(before)
+            win.free()
+            return d["path_copied_bytes"]
+
+        origin, target = run_threads(2, prog, pool_bytes=16 << 20)
+        assert origin.get("rma_get", 0) == nbytes
+        assert origin.get("rma_put", 0) == nbytes
+        assert target.get("rma_get", 0) == 0
+        assert target.get("rma_put", 0) == 0
+
+    def test_raccumulate_custom_op(self):
+        def prog(env):
+            win = env.comm.win_allocate("rop", 1 << 12)
+            if env.rank == 0:
+                win.put_array(0, 0, np.full(8, 3.0))
+            win.fence()
+            if env.rank == 1:
+                win.raccumulate(0, 0, np.full(8, 5.0),
+                                op=np.maximum).wait()
+            win.fence()
+            out = float(win.get_array(0, 0, (8,), np.float64)[0])
+            win.free()
+            return out
+
+        assert run_threads(2, prog, pool_bytes=16 << 20) == [5.0, 5.0]
+
+
+class TestDynamicWindow:
+    def test_attach_detach_copies_nothing(self):
+        """The satellite-2 regression: serving a pool-resident buffer
+        through the window must not copy it into any arena — attach
+        and detach leave ``copied_bytes`` EXACTLY untouched."""
+        def prog(env):
+            win = env.comm.win_create_dynamic("dw0")
+            buf = env.comm.alloc_buffer(4096)
+            before = env.comm.arena.view.stats.snapshot()
+            addr = win.attach(buf)
+            win.detach(addr)
+            d = env.comm.arena.view.stats.delta(before)
+            env.comm.barrier()
+            buf.free()
+            win.free()
+            return d["copied_bytes"], d["copies"]
+
+        assert run_threads(2, prog, pool_bytes=16 << 20) == [(0, 0),
+                                                             (0, 0)]
+
+    def test_rget_of_attached_pool_buffer(self):
+        """A KV-page-style read: rget a peer's attached PoolBuffer by
+        its absolute pool address, no staging anywhere."""
+        def prog(env):
+            r = env.rank
+            win = env.comm.win_create_dynamic("dw1")
+            buf = env.comm.alloc_buffer(4096)
+            buf.write(np.full(4096, r + 1, np.uint8))
+            addr = win.attach(buf)
+            addrs = env.comm.allgather(np.asarray([addr], np.int64))
+            peer = (r + 1) % env.size
+            dst = np.zeros(4096, np.uint8)
+            win.rget(peer, int(addrs[peer]), dst).wait()
+            env.comm.barrier()
+            win.detach(addr)
+            buf.free()
+            win.free()
+            return int(dst[0]), int(dst[-1])
+
+        res = run_threads(3, prog, pool_bytes=16 << 20)
+        assert res == [(2, 2), (3, 3), (1, 1)]
+
+    def test_unattached_address_rejected(self):
+        """Real bounds checking: a dynamic window only accepts
+        displacements inside a LIVE attached region of the target."""
+        def prog(env):
+            win = env.comm.win_create_dynamic("dw2")
+            buf = env.comm.alloc_buffer(4096)
+            addr = win.attach(buf)
+            env.comm.barrier()
+            err_unattached = err_straddle = err_detached = False
+            if env.rank == 1:
+                try:
+                    win.rget(0, 12345678, np.zeros(16, np.uint8))
+                except IndexError:
+                    err_unattached = True
+            env.comm.barrier()
+            if env.rank == 0:
+                # a range starting inside but running past the region
+                try:
+                    win.rput(0, addr + 4000,
+                             np.zeros(200, np.uint8))
+                except IndexError:
+                    err_straddle = True
+                win.detach(addr)
+            env.comm.barrier()
+            if env.rank == 1:
+                try:                  # tombstoned after detach
+                    win.rget(0, addr if env.rank else 0,
+                             np.zeros(16, np.uint8))
+                except IndexError:
+                    err_detached = True
+            env.comm.barrier()
+            buf.free()
+            win.free()
+            return err_unattached, err_straddle, err_detached
+
+        r0, r1 = run_threads(2, prog, pool_bytes=16 << 20)
+        assert r1 == (True, False, True)
+        assert r0 == (False, True, False)
+
+    def test_attach_table_exhaustion(self):
+        def prog(env):
+            win = env.comm.win_create_dynamic("dw3", attach_slots=2)
+            bufs = [env.comm.alloc_buffer(64) for _ in range(3)]
+            win.attach(bufs[0])
+            a1 = win.attach(bufs[1])
+            try:
+                win.attach(bufs[2])
+                full = False
+            except RuntimeError:
+                full = True
+            win.detach(a1)
+            win.attach(bufs[2])       # tombstoned slot is reusable
+            env.comm.barrier()
+            win.free()
+            return full
+
+        assert all(run_threads(2, prog, pool_bytes=16 << 20))
+
+    def test_window_collectives_rejected(self):
+        """A dynamic window has no symmetric per-rank segment, so the
+        segment-addressed window collectives must refuse."""
+        def prog(env):
+            win = env.comm.win_create_dynamic("dw4")
+            try:
+                win.allgather(np.zeros(4))
+                ok = False
+            except (ValueError, IndexError):
+                ok = True
+            win.free()
+            return ok
+
+        assert all(run_threads(2, prog, pool_bytes=16 << 20))

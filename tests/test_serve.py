@@ -1,0 +1,219 @@
+"""Serving data plane: router/worker tier over the comm core.
+
+Covers the serve tier end to end — admission over persistent-request
+pools, continuous-batching decode, rank-sharded page moves with the
+zero-receiver-drain contract, the raccumulate'd shared token counter —
+plus the fault path: a worker rank dying mid-decode, the router
+retracting its matchbox postings and re-routing its sessions, and the
+communicator staying usable for every surviving rank (the PR-5
+``TestChunkedAbort`` discipline lifted to the serve tier)."""
+import numpy as np
+
+from repro.core import run_threads
+from repro.serve import ServeConfig, run_serve, serve_rank
+from repro.serve.pages import PageDirectory, PageStore
+from repro.serve import wire
+
+
+def _cfg(**over) -> ServeConfig:
+    base = dict(sessions=16, rate=400.0, seed=11, slots_per_worker=32,
+                deadline_s=45.0)
+    base.update(over)
+    return ServeConfig(**base)
+
+
+class TestServeSmoke:
+    def test_all_sessions_complete_and_verify(self):
+        cfg = _cfg()
+        reports = run_serve(cfg, ranks=3)
+        router, workers = reports[0], reports[1:]
+        assert router["sessions"] == cfg.sessions
+        assert router["bad_checksums"] == 0
+        assert sum(w["served"] for w in workers) == cfg.sessions
+        assert all(w["verify_failures"] == 0 for w in workers)
+        assert router["p99_us"] >= router["p50_us"] > 0
+
+    def test_raccumulated_token_total_matches_done_frames(self):
+        """Satellite-1 in anger: the workers' request-based accumulates
+        into ONE shared stats word must add up to exactly the token
+        total the DONE frames report (a lost update would show here)."""
+        reports = run_serve(_cfg(sessions=20, stats_interval=2), ranks=3)
+        router = reports[0]
+        assert router["stats_tokens"] == router["tokens"] > 0
+
+    def test_deterministic_session_content(self):
+        """Same seed => same arrival schedule, shapes and checksums on
+        a different run (content is a pure function of (sid, seed))."""
+        a = run_serve(_cfg(), ranks=3)[0]
+        b = run_serve(_cfg(), ranks=3)[0]
+        assert a["tokens"] == b["tokens"]
+        assert a["sessions"] == b["sessions"]
+
+    def test_continuous_batching_overlaps_sessions(self):
+        """One worker, batch width 4, a burst of arrivals: sessions
+        must decode INTERLEAVED (steps well under the sum of serial
+        lengths), joining and leaving between steps."""
+        cfg = _cfg(sessions=8, rate=10_000.0, max_batch=4,
+                   prompt_min=16, prompt_max=16, gen_min=16, gen_max=16)
+        reports = run_serve(cfg, ranks=2)
+        w = reports[1]
+        assert w["served"] == 8
+        # 8 sessions x 16 decode steps serially = 128 batch-steps; with
+        # width-4 batching the worker needs ~2 waves of 16 plus slack
+        # (idle spins are excluded: busy_steps only counts live-batch
+        # decode steps)
+        assert w["busy_steps"] < 100
+
+
+class TestZeroReceiverDrain:
+    def test_page_moves_land_only_in_rma_buckets(self):
+        """The data-plane contract, exact to the byte: every worker's
+        rma_put/rma_get equals its page traffic plus 8 B per
+        raccumulate; nothing is staged; the router never touches page
+        payloads."""
+        reports = run_serve(_cfg(sessions=12), ranks=3)
+        router, workers = reports[0], reports[1:]
+        rd = router["stats_delta"]["path_copied_bytes"]
+        for path in ("rma_put", "rma_get", "rndv_staged", "rndv_posted"):
+            assert rd.get(path, 0) == 0, (path, rd)
+        for w in workers:
+            d = w["stats_delta"]["path_copied_bytes"]
+            racc = 8 * w["racc_calls"]
+            assert d.get("rma_put", 0) == w["rput_bytes"] + racc
+            assert d.get("rma_get", 0) == w["rget_bytes"] + racc
+            assert d.get("rndv_staged", 0) == 0
+
+    def test_passive_page_home_copies_nothing(self):
+        """A rank that merely HOMES pages while a peer fills and drains
+        them does not execute a single counted copy — the one-sided
+        page move has zero receiver-side drain.  (Synchronization runs
+        over window notify words, which are uncounted by design.)"""
+        def prog(env):
+            comm = env.comm
+            win = comm.win_create_dynamic("pp", attach_slots=8)
+            store = PageStore(comm, win, 4, 4096)
+            directory = PageDirectory(comm, store)
+            if env.rank == 2:
+                before = comm.arena.view.stats.snapshot()
+                win.wait_notify(1, timeout=30.0)    # peer's traffic done
+                d = comm.arena.view.stats.delta(before)
+                out = (d["copies"], d["copied_bytes"])
+            elif env.rank == 1:
+                src = np.arange(4096, dtype=np.uint8)
+                dst = np.zeros(4096, np.uint8)
+                for slot in range(4):
+                    addr = directory.addr(2, slot)
+                    win.rput(2, addr, src).wait()
+                    win.rget(2, addr, dst).wait()
+                    assert np.array_equal(dst, src)
+                win.notify(2)
+                out = None
+            else:
+                out = None
+            comm.barrier()
+            store.free()
+            win.free()
+            return out
+
+        res = run_threads(3, prog, pool_bytes=16 << 20, timeout=60)
+        assert res[2] == (0, 0)
+
+
+class TestWorkerDeath:
+    def test_worker_dies_mid_decode_sessions_reroute(self):
+        """The satellite-4 fault drill: one worker fail-stops
+        mid-decode.  The router must retire it (cancelling its posted
+        DONE receives — matchbox retracted), re-route its sessions
+        under a bumped epoch, finish the full population with correct
+        checksums, and leave the communicator usable for a fresh
+        collective on EVERY rank afterwards."""
+        cfg = _cfg(sessions=16, worker_timeout=0.8, fail_rank=1,
+                   fail_after_steps=25, decode_us=300.0,
+                   deadline_s=45.0)
+
+        def prog(env):
+            report = serve_rank(env, cfg)
+            # no stale matchbox postings anywhere after teardown —
+            # cancelled receives really retracted their entries
+            assert not env.comm._mb_records
+            assert not any(env.comm._mb_overflow.values())
+            # the comm survives for ALL ranks, dead one included
+            out = env.comm.allreduce(np.full(8, float(env.rank + 1)))
+            assert np.allclose(out, 1.0 + 2.0 + 3.0 + 4.0)
+            return report
+
+        reports = run_threads(
+            4, lambda env: prog(env),
+            pool_bytes=cfg.pool_bytes_needed(4), timeout=90)
+        router, workers = reports[0], reports[1:]
+        assert router["retired"] == [1]
+        assert router["reroutes"] > 0
+        assert reports[1]["aborted"]
+        assert router["sessions"] == cfg.sessions
+        assert router["bad_checksums"] == 0
+        assert all(w["verify_failures"] == 0 for w in workers)
+        # survivors did real work after the death
+        assert sum(w["served"] for w in workers[1:]) > 0
+        # epoch fencing: a dead placement cannot double-count, so the
+        # raccumulate total counts every completed session exactly once
+        # EXCEPT completions the dead worker never got to report
+        assert router["stats_tokens"] <= router["tokens"]
+
+    def test_pages_homed_on_dead_rank_stay_readable(self):
+        """Pool memory outlives the rank: after a home worker
+        fail-stops, peers still rget the pages it hosted (the CXL
+        shared-pool property the serve tier leans on)."""
+        def prog(env):
+            comm = env.comm
+            win = comm.win_create_dynamic("dd", attach_slots=4)
+            store = PageStore(comm, win, 2, 1024)
+            directory = PageDirectory(comm, store)
+            if env.rank == 1:
+                store.write_local(0, np.full(1024, 7, np.uint8))
+                win.notify(2)          # "filled" — then fail-stop:
+                # rank 1 serves nothing further, but does NOT free
+            if env.rank == 2:
+                win.wait_notify(1, timeout=30.0)
+                dst = np.zeros(1024, np.uint8)
+                win.rget(1, directory.addr(1, 0), dst).wait()
+                ok = bool((dst == 7).all())
+            else:
+                ok = True
+            comm.barrier()             # teardown fence
+            store.free()
+            win.free()
+            return ok
+
+        assert all(run_threads(3, prog, pool_bytes=16 << 20,
+                               timeout=60))
+
+
+class TestWire:
+    def test_admit_roundtrip(self):
+        buf = np.zeros(wire.admit_words(4), np.int64)
+        pages = [wire.pack_page(2, 7), wire.pack_page(1, 31)]
+        wire.encode_admit(buf, sid=9, epoch=2, prompt=16, gen=24,
+                          pages=pages)
+        msg = wire.decode_admit(buf)
+        assert msg == dict(sid=9, epoch=2, prompt=16, gen=24,
+                           pages=[(2, 7), (1, 31)])
+
+    def test_session_checksum_matches_worker_fold(self):
+        """The router-side recompute is exactly the worker's fold
+        order: tokens in KV order, then page checksums."""
+        sid, prompt, gen, pt, pb, seed = 3, 10, 14, 16, 256, 5
+        acc = 0
+        for t in range(gen):
+            acc = wire.fold(acc, wire.token(sid, prompt + t, seed))
+        for p in range(wire.pages_for(prompt, gen, pt)):
+            acc = wire.fold(acc, wire.page_checksum(
+                wire.page_fill(sid, p, seed, pb)))
+        assert acc == wire.session_checksum(sid, prompt, gen, pt, pb,
+                                            seed)
+
+    def test_content_is_deterministic(self):
+        assert wire.token(1, 2, 3) == wire.token(1, 2, 3)
+        a = wire.page_fill(4, 5, 6, 512)
+        b = wire.page_fill(4, 5, 6, 512)
+        assert np.array_equal(a, b)
+        assert not np.array_equal(a, wire.page_fill(4, 6, 6, 512))

@@ -348,3 +348,125 @@ class TestDepthCappedPersistent:
             assert vals == exp
             # every chunk send of every iteration hit a posted entry
             assert hits == rndv and rndv > 0
+
+
+# --------------------------------------------------------------------------
+# stale-profile surfacing: tuning_status / trace_report / retune
+# --------------------------------------------------------------------------
+
+class TestTuningStatus:
+    def test_missing_profile_surfaces_reason(self, tmp_path):
+        """The one init-time warning is no longer the only trace: a
+        silently-heuristic comm carries the rejection reason in
+        ``tuning_status``, ``trace_report()["tuning"]`` and the
+        metrics registry."""
+        def prog(env):
+            c = env.comm
+            rep = c.trace_report()
+            m = c.tracer.metrics.view()
+            return (c.tuning_status, rep["tuning"],
+                    m["gauges"].get("tuning_profile_loaded"),
+                    m["counters"].get("tuning_heuristic_fallback"))
+
+        res = run_threads(2, prog, cell_size=CELL,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path":
+                                       str(tmp_path / "absent.json")})
+        status, rep, gauge, fallback = res[0]
+        assert status["mode"] == "heuristic"
+        assert "no machine profile" in status["reason"]
+        assert rep == status
+        assert gauge == 0.0
+        assert fallback == 1
+
+    def test_stale_profile_reason_names_age(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+        aged = json.loads(p.read_text())
+        aged["created"] = time.time() - 100 * 3600
+        p.write_text(json.dumps(aged))
+
+        def prog(env):
+            return env.comm.tuning_status
+
+        with pytest.warns(RuntimeWarning, match="stale"):
+            res = run_threads(2, prog, cell_size=CELL,
+                              comm_kw={"tuning": "auto",
+                                       "profile_path": str(p)})
+        assert res[0]["mode"] == "heuristic"
+        assert "stale machine profile" in res[0]["reason"]
+
+    def test_fresh_profile_reports_profile_mode(self, tmp_path):
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+
+        def prog(env):
+            m = env.comm.tracer.metrics.view()
+            return (env.comm.tuning_status,
+                    m["gauges"].get("tuning_profile_loaded"))
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path": str(p)})
+        assert res[0] == ({"mode": "profile", "reason": None}, 1.0)
+
+    def test_off_mode_when_tuning_disabled(self):
+        def prog(env):
+            return env.comm.tuning_status
+
+        res = run_threads(2, prog, cell_size=CELL)
+        assert res[0]["mode"] == "off"
+
+    def test_retune_picks_up_new_profile(self, tmp_path):
+        """The documented re-profile path: a comm that started
+        heuristic (no profile yet) collectively ``retune()``s after a
+        sweep wrote one, and the tuned constants apply without a
+        restart."""
+        p = tmp_path / "late.json"
+
+        def prog(env):
+            c = env.comm
+            assert c.tuning_status["mode"] == "heuristic"
+            if env.rank == 0:
+                prof_mod.write_profile(_profile_data(), p)
+            c.barrier()
+            status = c.retune()
+            # tuned data plane still correct after the live switch
+            y = c.allreduce(np.ones(10_000))
+            assert np.allclose(y, 2.0)
+            return (status, c.eager_threshold, c.probe_mode,
+                    c._tuned["crossover"])
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=64 << 20,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path": str(p)},
+                          timeout=120)
+        assert res[0] == res[1]                    # rank-agreed
+        status, thr, mode, crossover = res[0]
+        assert status == {"mode": "profile", "reason": None}
+        assert thr == 2048                         # crossover / 2
+        assert mode == "profile"
+        assert crossover == 4096
+
+    def test_retune_requires_auto(self):
+        def prog(env):
+            try:
+                env.comm.retune()
+                return False
+            except RuntimeError:
+                return True
+
+        assert all(run_threads(2, prog, cell_size=CELL))
+
+    def test_retune_keeps_explicit_eager_threshold(self, tmp_path):
+        """An explicitly-passed eager_threshold is a user decision —
+        retune() must not clobber it with the profile derivation."""
+        p = prof_mod.write_profile(_profile_data(), tmp_path / "p.json")
+
+        def prog(env):
+            env.comm.retune()
+            return env.comm.eager_threshold
+
+        res = run_threads(2, prog, cell_size=CELL, pool_bytes=32 << 20,
+                          eager_threshold=512,
+                          comm_kw={"tuning": "auto",
+                                   "profile_path": str(p)})
+        assert res == [512, 512]
